@@ -1,0 +1,38 @@
+"""Paper Fig 6a (Test 1, batch): processing time vs dataset size x workers.
+
+DS1..DS4 are scaled-down Gutenberg stand-ins (Table 1 ratios preserved:
+~1 : 7 : 24 : 48 in sentence count).
+"""
+from __future__ import annotations
+
+from repro.core.pipeline import PipelineConfig
+from repro.data.text import margot_models
+
+from benchmarks.common import emit, make_dataset, run_partitioned_batch, timed
+
+DATASETS = {"DS1": 128, "DS2": 896, "DS3": 3072, "DS4": 6144}
+WORKERS = (1, 2, 4, 8)
+
+
+def run(quick: bool = False):
+    pcfg = PipelineConfig(feat_dim=256, claim_capacity=64, evid_capacity=128)
+    models, _ = margot_models(pcfg)
+    datasets = dict(list(DATASETS.items())[:2]) if quick else DATASETS
+    workers = WORKERS[:2] if quick else WORKERS
+    for ds, n in datasets.items():
+        X, keys = make_dataset(n, pcfg)
+        for w in workers:
+            # warm the jit for this partition shape
+            run_partitioned_batch(models, X, keys, pcfg, w)
+            n_links = [0]
+
+            def job():
+                n_links[0], _ = run_partitioned_batch(models, X, keys, pcfg, w)
+
+            t = timed(job)
+            emit(f"fig6a/{ds}/workers={w}", t * 1e6,
+                 f"sentences={n};links={n_links[0]}")
+
+
+if __name__ == "__main__":
+    run()

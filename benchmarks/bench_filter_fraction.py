@@ -1,0 +1,71 @@
+"""Paper Fig 7 (Test 2): effect of the fraction of instances surviving the
+phase-1 filter (the aggregation-bottleneck variable).  The paper varied the
+MARGOT thresholds to pass 5/35/65/90% of sentences to phase 2; we calibrate
+the SVM decision threshold to the same percentiles.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import PipelineConfig, make_batch_step
+from repro.core.stream import StreamConfig, StreamRuntime, find_sustainable_rate
+from repro.data.text import corpus_arrays, margot_models, synthetic_corpus
+from repro.models import svm as svm_mod
+
+from benchmarks.common import emit, timed
+
+FRACTIONS = (0.05, 0.35, 0.65, 0.90)
+N_SENT = 2048
+
+
+def calibrated_threshold(models, X, frac: float) -> float:
+    sc = np.asarray(svm_mod.svm_score(models["claim"], jnp.asarray(X)))
+    return float(np.quantile(sc, 1.0 - frac))
+
+
+def run(quick: bool = False):
+    fracs = FRACTIONS[:2] if quick else FRACTIONS
+    docs = synthetic_corpus(N_SENT // 64, 64, seed=2)
+    for frac in fracs:
+        pcfg0 = PipelineConfig(feat_dim=256)
+        models, _ = margot_models(pcfg0)
+        X, keys, _ = corpus_arrays(docs, dim=256)
+        thr = calibrated_threshold(models, X, frac)
+        cap = int(N_SENT * frac * 1.3) + 8
+        pcfg = PipelineConfig(feat_dim=256, claim_capacity=cap,
+                              evid_capacity=cap, threshold=thr)
+        step = make_batch_step(pcfg)
+        Xj, kj = jnp.asarray(X), jnp.asarray(keys)
+        out = step(models, Xj, kj)            # compile
+        t = timed(lambda: step(models, Xj, kj).link_scores.block_until_ready())
+        n_pairs = int(out.pair_valid.sum())
+        emit(f"fig7a/frac={int(frac*100)}%", t * 1e6,
+             f"pairs={n_pairs};dropped={int(out.n_dropped)}")
+
+        # stream variant (Fig 7b)
+        scfg = StreamConfig(period=0.25, capacity=512, scope="window",
+                            window=2.0, ring_capacity=max(2 * cap, 256))
+        pcfg_s = PipelineConfig(feat_dim=256, claim_capacity=min(cap, 256),
+                                evid_capacity=min(cap, 256), threshold=thr)
+
+        def mk():
+            return StreamRuntime(models, pcfg_s, scfg)
+
+        rng = np.random.RandomState(0)
+
+        def gen(n, t0):
+            idx = rng.randint(0, len(keys), n)
+            ts = t0 + np.linspace(0, 0.25, n, endpoint=False).astype(np.float32)
+            return X[idx], keys[idx], ts
+
+        rate = find_sustainable_rate(mk, gen, rates=[400, 1600, 6400, 12800, 25600, 51200],
+                                     mb_per_rate=3)
+        emit(f"fig7b/frac={int(frac*100)}%", 1e6 / max(rate, 1e-9),
+             f"max_rate={rate:.0f}/s")
+
+
+if __name__ == "__main__":
+    run()

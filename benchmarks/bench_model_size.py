@@ -1,0 +1,58 @@
+"""Paper Fig 8 / Table 2 (Test 3): impact of SVM model size (number of
+support vectors) on batch time and stream rate.  M1/M2/M3 are scaled
+versions of the paper's 7,085 / 18,604 / 30,363 support vectors.
+
+The paper's (surprising) finding: model size has an insignificant effect.
+On TPU-class hardware the same holds while the score matmul stays
+memory/latency-bound — the derived column lets us check the trend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import PipelineConfig, init_models, make_batch_step
+from repro.core.stream import StreamConfig, StreamRuntime, find_sustainable_rate
+from repro.data.text import corpus_arrays, synthetic_corpus
+
+from benchmarks.common import emit, timed
+
+MODELS = {"M1": 709, "M2": 1860, "M3": 3036}
+N_SENT = 1024
+
+
+def run(quick: bool = False):
+    sizes = dict(list(MODELS.items())[:2]) if quick else MODELS
+    pcfg = PipelineConfig(feat_dim=256, claim_capacity=128, evid_capacity=256)
+    docs = synthetic_corpus(N_SENT // 64, 64, seed=3)
+    X, keys, _ = corpus_arrays(docs, dim=256)
+    Xj, kj = jnp.asarray(X), jnp.asarray(keys)
+    for name, n_sv in sizes.items():
+        models, _ = init_models(jax.random.PRNGKey(0), pcfg, n_sv=n_sv)
+        step = make_batch_step(pcfg)
+        step(models, Xj, kj)                  # compile
+        t = timed(lambda: step(models, Xj, kj).link_scores.block_until_ready())
+        emit(f"fig8a/{name}", t * 1e6, f"n_sv={n_sv}")
+
+        scfg = StreamConfig(period=0.25, capacity=512, scope="window",
+                            window=2.0, ring_capacity=512)
+
+        def mk():
+            return StreamRuntime(models, pcfg, scfg)
+
+        rng = np.random.RandomState(0)
+
+        def gen(n, t0):
+            idx = rng.randint(0, len(keys), n)
+            ts = t0 + np.linspace(0, 0.25, n, endpoint=False).astype(np.float32)
+            return X[idx], keys[idx], ts
+
+        rate = find_sustainable_rate(mk, gen, rates=[400, 1600, 6400, 12800, 25600, 51200],
+                                     mb_per_rate=3)
+        emit(f"fig8b/{name}", 1e6 / max(rate, 1e-9),
+             f"n_sv={n_sv};max_rate={rate:.0f}/s")
+
+
+if __name__ == "__main__":
+    run()

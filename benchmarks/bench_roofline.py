@@ -1,0 +1,41 @@
+"""Roofline summary: reads the dry-run artifacts (results/dryrun/*.json) and
+emits one line per (arch x shape x mesh) cell with the three roofline terms
+and the dominant bottleneck.  The numbers are produced by
+``python -m repro.launch.dryrun`` (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def run(quick: bool = False):
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        emit("roofline/none", 0.0, "no dry-run artifacts; run repro.launch.dryrun")
+        return
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        if d.get("skipped"):
+            emit(f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}", 0.0, "skipped")
+            continue
+        if not d.get("ok"):
+            emit(f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}", 0.0,
+                 f"FAILED:{d.get('error','')[:60]}")
+            continue
+        t_dom = max(d["t_compute"], d["t_memory"], d["t_collective"])
+        emit(f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}/{d['policy']}",
+             t_dom * 1e6,
+             f"dom={d['dominant']};tc={d['t_compute']:.3f};"
+             f"tm={d['t_memory']:.3f};tx={d['t_collective']:.3f};"
+             f"useful={d['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

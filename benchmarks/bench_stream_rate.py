@@ -1,0 +1,52 @@
+"""Paper Fig 6b (Test 1, stream): max sustainable input rate per join scope
+(window sizes w and scope-file), found by ramping the rate until the
+micro-batch processing time exceeds the period."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.pipeline import PipelineConfig
+from repro.core.stream import StreamConfig, StreamRuntime, find_sustainable_rate
+from repro.data.text import corpus_arrays, margot_models, synthetic_corpus
+
+from benchmarks.common import emit
+
+RATES = [200, 800, 3200, 12800, 25600, 51200, 102400]
+WINDOWS = [1.0, 5.0, 25.0]           # scaled versions of w=100/1000/5000s
+PERIOD = 0.25                        # scaled version of the paper's 100 s
+
+
+def _series(scope: str, window: float, pcfg, models, X, keys, quick=False):
+    scfg = StreamConfig(period=PERIOD, capacity=1024, scope=scope,
+                        window=window, ring_capacity=1024)
+
+    def mk():
+        return StreamRuntime(models, pcfg, scfg)
+
+    rng = np.random.RandomState(0)
+
+    def gen(n, t0):
+        idx = rng.randint(0, len(keys), n)
+        ts = t0 + np.linspace(0, PERIOD, n, endpoint=False).astype(np.float32)
+        return X[idx], keys[idx], ts
+
+    rates = RATES[:3] if quick else RATES
+    return find_sustainable_rate(mk, gen, rates=rates, mb_per_rate=4)
+
+
+def run(quick: bool = False):
+    pcfg = PipelineConfig(feat_dim=256, claim_capacity=128, evid_capacity=256)
+    models, _ = margot_models(pcfg)
+    docs = synthetic_corpus(8, 64, seed=1)
+    X, keys, _ = corpus_arrays(docs, dim=pcfg.feat_dim)
+    windows = WINDOWS[:1] if quick else WINDOWS
+    for w in windows:
+        rate = _series("window", w, pcfg, models, X, keys, quick)
+        emit(f"fig6b/window={w}s", 1e6 / max(rate, 1e-9),
+             f"max_rate={rate:.0f}/s")
+    rate = _series("file", 0.0, pcfg, models, X, keys, quick)
+    emit("fig6b/scope-file", 1e6 / max(rate, 1e-9), f"max_rate={rate:.0f}/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Benchmark entrypoint: ``python -m benchmarks.run [--quick]``.
+
+One benchmark per paper figure (6a, 6b, 7a/7b, 8a/8b) plus the roofline
+summary (from dry-run artifacts) and the serving engine.  Output CSV:
+``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweeps (CI-speed)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark module names")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_batch_scalability, bench_stream_rate,
+                            bench_filter_fraction, bench_model_size,
+                            bench_roofline, bench_serving)
+    suites = [
+        ("bench_batch_scalability", bench_batch_scalability),
+        ("bench_stream_rate", bench_stream_rate),
+        ("bench_filter_fraction", bench_filter_fraction),
+        ("bench_model_size", bench_model_size),
+        ("bench_roofline", bench_roofline),
+        ("bench_serving", bench_serving),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in suites:
+        if args.only and args.only not in name:
+            continue
+        try:
+            mod.run(quick=args.quick)
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

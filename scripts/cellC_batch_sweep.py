@@ -1,0 +1,38 @@
+"""Cell C iteration: decode batch sensitivity for qwen3-moe decode.
+
+Hypothesis: after the cache/dispatch fixes the cell is memory-bound on
+*expert weight streaming*, which is amortized by decode batch size:
+t_memory/token should fall ~linearly in B until compute catches up.
+(The assigned shape B=128 stays the reported cell; this sweep informs the
+serving engine's slot count — the paper's partition-size trade-off.)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+import jax
+
+from repro.configs.base import ShapeCase, SHAPE_BY_NAME
+from repro.launch import dryrun_lib
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    mesh = make_production_mesh()
+    for B in (128, 512, 2048):
+        sc = ShapeCase(f"decode_32k_b{B}", 32_768, B, "decode")
+        SHAPE_BY_NAME[sc.name] = sc
+        res = dryrun_lib.run_cell("qwen3-moe-30b-a3b", sc.name, mesh,
+                                  policy="tp", skip_memory_pass=True)
+        if not res.ok:
+            print(f"B={B} FAIL {res.error[:200]}")
+            continue
+        tok_dev = B / 256
+        print(f"B={B:5d}: t_c {res.t_compute:.5f} t_m {res.t_memory:.5f} "
+              f"t_x {res.t_collective:.5f} dom {res.dominant} "
+              f"t_m/token {res.t_memory / B * 1e6:.1f}us "
+              f"wire/dev {res.coll_wire_bytes_dev/1e6:.0f}MB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Render the §Roofline markdown table from results/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+ORDER_SHAPE = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main(res_dir="results/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(res_dir, "*.json"))):
+        d = json.load(open(f))
+        rows.append(d)
+    rows.sort(key=lambda d: (d["arch"], ORDER_SHAPE.index(d["shape"])
+                             if d["shape"] in ORDER_SHAPE else 9,
+                             d["policy"], d["mesh"]))
+    print("| arch | shape | mesh | policy | t_compute | t_memory | t_coll "
+          "| dominant | useful | fit (arg+temp GB) |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        if d.get("skipped"):
+            print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | — | — | — "
+                  f"| SKIP | — | ({d['reason'][:40]}…) |")
+            continue
+        if not d.get("ok"):
+            print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | {d['policy']} "
+                  f"| FAIL | | | | | {d['error'][:40]} |")
+            continue
+        fit = (d["arg_bytes_dev"] + d["temp_bytes_dev"]) / 1e9
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | {d['policy']} "
+              f"| {d['t_compute']:.4f} | {d['t_memory']:.4f} "
+              f"| {d['t_collective']:.4f} | {d['dominant']} "
+              f"| {d['useful_ratio']:.2f} | {fit:.1f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,118 @@
+"""Sharded, atomic, optionally-async checkpointing (no orbax dependency).
+
+Layout:  <dir>/step_<n>.tmp/  ->  atomic rename  ->  <dir>/step_<n>/
+           arrays.npz          (flattened leaves, keyed by tree path)
+           meta.json           (treedef repr, step, wall time)
+         <dir>/LATEST          (text file with the last committed step)
+
+Restore supports *resharding*: pass target shardings (e.g. from a different
+mesh after elastic rescale) and leaves are device_put accordingly — this is
+the checkpoint/restart path for node failures and elastic scaling.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, async_save: bool = False,
+                 keep: int = 3):
+        self.dir = directory
+        self.async_save = async_save
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any):
+        host = jax.device_get(tree)
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: Any):
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves, treedef = _flatten_with_paths(host_tree)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: np.asarray(v) for k, v in leaves.items()})
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "time": time.time(),
+                       "keys": sorted(leaves)}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                       # atomic commit
+        with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(self.dir, "LATEST.tmp"),
+                   os.path.join(self.dir, "LATEST"))
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return int(f.read().strip())
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of `like`; optionally device_put with
+        `shardings` (same treedef) for cross-mesh restore."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step}", "arrays.npz")
+        data = np.load(path)
+        like_leaves, treedef = _flatten_with_paths(like)
+        restored = {}
+        for k, ref in like_leaves.items():
+            arr = data[k]
+            restored[k] = arr
+        leaves = [restored[k] for k in like_leaves]
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree

@@ -1,0 +1,38 @@
+"""Architecture registry: ``get_config("starcoder2-3b")`` / ``--arch`` ids."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, ScanGroup, ShapeCase, SHAPES, SHAPE_BY_NAME, reduced
+
+_MODULES = {
+    "starcoder2-3b": "starcoder2_3b",
+    "gemma3-4b": "gemma3_4b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "gemma-7b": "gemma_7b",
+    "whisper-base": "whisper_base",
+    "internvl2-1b": "internvl2_1b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    key = name.replace("_", "-") if name not in _MODULES else name
+    if key not in _MODULES:
+        # allow module-style names too
+        inv = {v: k for k, v in _MODULES.items()}
+        if name in inv:
+            key = inv[name]
+        else:
+            raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[key]}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,209 @@
+"""Architecture configuration system.
+
+Every assigned architecture is described by one :class:`ArchConfig`.  A config
+is a *complete* static description of the model: the layer pattern (including
+heterogeneous hybrids like Griffin's (R,R,A) blocks), attention flavor, MoE
+routing, SSM dimensions, and the modality frontend stubs.
+
+Layer patterns are expressed as ``ScanGroup``s: ``pattern`` is a tuple of
+layer-kind codes and the group is scanned ``repeats`` times, so a 34-layer
+Gemma-3 (5 local : 1 global) is ``[ScanGroup(("L",)*5 + ("G",), 5),
+ScanGroup(("L",)*4, 1)]``.  Kind codes:
+
+  ``A`` full (causal) attention block      ``L`` local sliding-window attention
+  ``G`` global attention (dual-rope base)  ``R`` RG-LRU recurrent block
+  ``M`` MoE block (attention + routed FFN) ``S`` Mamba-1 SSM block
+  ``D`` dense block in a MoE model (attention + dense FFN)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanGroup:
+    pattern: Tuple[str, ...]
+    repeats: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.repeats
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    groups: Tuple[ScanGroup, ...] = ()
+
+    # --- attention ---
+    rope_base: float = 10_000.0
+    rope_local_base: float = 10_000.0   # for "L" layers when dual-rope (gemma3)
+    window: int = 0                     # sliding window for "L" layers
+    qk_norm: bool = False               # qwen3 / gemma3 style
+    logit_softcap: float = 0.0          # final-logit soft capping (gemma family)
+    attn_softcap: float = 0.0
+
+    # --- MLP ---
+    mlp: str = "swiglu"                 # swiglu | geglu | gelu_mlp
+    emb_scale: bool = False             # multiply embeddings by sqrt(d_model)
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    shared_d_ff: int = 0
+    dense_d_ff: int = 0                 # d_ff of "D" layers in MoE models
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+    # --- MLA (deepseek) ---
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 0
+    nope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- SSM (mamba-1) ---
+    ssm_state: int = 0
+    d_inner: int = 0
+    conv_k: int = 4
+    dt_rank: int = 0
+
+    # --- RG-LRU (griffin/recurrentgemma) ---
+    lru_width: int = 0
+    conv_k_rg: int = 4
+
+    # --- encoder-decoder (whisper backbone) ---
+    enc_layers: int = 0
+    dec_layers: int = 0
+
+    # --- modality frontend stubs ---
+    frontend: str = "none"              # none | audio_frames | vision_patches
+    n_patches: int = 0                  # prepended patch embeddings (vlm)
+
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    norm: str = "rmsnorm"               # rmsnorm | layernorm
+    rms_plus_one: bool = False          # gemma-style (1 + w) rmsnorm scale
+
+    # --- runtime knobs (hillclimb surface) ---
+    remat: str = "none"                 # none | full | dots
+    use_kernels: bool = False           # route attention through Pallas kernels
+    scan_layers: bool = True
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if not self.groups and self.n_layers:
+            kind = {"moe": "M", "ssm": "S"}.get(self.family, "A")
+            object.__setattr__(self, "groups", (ScanGroup((kind,), self.n_layers),))
+        total = sum(g.n_layers for g in self.groups)
+        expect = self.n_layers if self.family != "encdec" else self.enc_layers + self.dec_layers
+        if self.family != "encdec":
+            assert total == self.n_layers, (self.name, total, self.n_layers)
+
+    # ------------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up so the vocab dim shards evenly under TP
+        (embedding-table padding, standard for production LM stacks)."""
+        m = 128
+        return -(-self.vocab // m) * m
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def p_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if a 500k-token decode context is feasible (SSM / hybrid /
+        mostly-local attention).  Pure full-attention archs return False."""
+        kinds = set()
+        for g in self.groups:
+            kinds.update(g.pattern)
+        if self.family == "encdec":
+            return False
+        full_attn = kinds & {"A", "M", "D"}
+        return not full_attn  # only L/G/R/S layers (G = few global layers, run)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ----------------------------------------------------------------------
+# Input shapes assigned to every LM-family architecture.
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeCase, ...] = (
+    ShapeCase("train_4k", 4_096, 256, "train"),
+    ShapeCase("prefill_32k", 32_768, 32, "prefill"),
+    ShapeCase("decode_32k", 32_768, 128, "decode"),
+    ShapeCase("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def reduced(cfg: ArchConfig) -> ArchConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    groups = []
+    for g in cfg.groups:
+        groups.append(ScanGroup(g.pattern, min(g.repeats, 1)))
+    groups = tuple(groups)
+    n_layers = sum(g.n_layers for g in groups)
+    kw = dict(
+        n_layers=n_layers,
+        groups=groups,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 0,
+        head_dim=16,
+        d_ff=128,
+        vocab=256,
+        window=min(cfg.window, 16) if cfg.window else 0,
+        dtype="float32",
+        param_dtype="float32",
+    )
+    if cfg.n_experts:
+        kw.update(n_experts=8, top_k=min(cfg.top_k, 2), expert_d_ff=32,
+                  shared_d_ff=64 if cfg.n_shared_experts else 0,
+                  dense_d_ff=128 if cfg.dense_d_ff else 0)
+    if cfg.kv_lora_rank:
+        kw.update(kv_lora_rank=32, q_lora_rank=0, rope_head_dim=8,
+                  nope_head_dim=16, v_head_dim=16)
+    if cfg.ssm_state:
+        kw.update(ssm_state=8, d_inner=128, dt_rank=8, conv_k=4)
+    if cfg.lru_width:
+        kw.update(lru_width=64)
+    if cfg.family == "encdec":
+        enc = max(1, cfg.enc_layers // 6)
+        dec = max(1, cfg.dec_layers // 6)
+        kw.update(enc_layers=enc, dec_layers=dec, n_layers=enc + dec, groups=())
+    if cfg.n_patches:
+        kw.update(n_patches=4)
+    return cfg.replace(**kw)

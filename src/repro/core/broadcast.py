@@ -1,0 +1,50 @@
+"""Weight placement: the paper's broadcast variable, and beyond.
+
+``place_params`` ships a parameter tree onto the mesh under a policy:
+
+  broadcast — replicate on every chip (the paper's §3.1 solution: the model
+              is immutable during prediction, send it once).
+  tp        — shard ff/heads/vocab/experts over the `model` axis (the
+              paper Conclusion's "portion of the trained model per node").
+  fsdp_tp   — tp + ZeRO-3 parameter sharding over data axes (training).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.core.sharding import ShardingCtx, _rules, use_sharding, param_shardings
+
+
+def placement_shardings(axes_tree, mesh: Mesh, policy: str):
+    ctx = ShardingCtx(mesh, policy, _rules(policy, mesh.axis_names))
+    return param_shardings(axes_tree, ctx)
+
+
+def place_params(params, axes_tree, mesh: Mesh, policy: str = "broadcast"):
+    """device_put the tree under the policy; returns (placed, shardings)."""
+    sh = placement_shardings(axes_tree, mesh, policy)
+    placed = jax.device_put(params, sh)
+    return placed, sh
+
+
+def broadcast_bytes(params) -> int:
+    """Bytes a pure-broadcast placement ships to EVERY chip (cost of the
+    paper's placement — reported in EXPERIMENTS.md)."""
+    return int(sum(np.prod(p.shape) * p.dtype.itemsize
+                   for p in jax.tree_util.tree_leaves(params)))
+
+
+def per_chip_bytes(params, shardings) -> int:
+    """Bytes per chip under a sharded placement."""
+    total = 0
+    for p, s in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(shardings, is_leaf=lambda x: isinstance(x, NamedSharding))):
+        n_shards = np.prod([s.mesh.shape[a] for spec_part in s.spec
+                            for a in ((spec_part,) if isinstance(spec_part, str)
+                                      else (spec_part or ()))]) or 1
+        total += int(np.prod(p.shape) * p.dtype.itemsize / n_shards)
+    return total

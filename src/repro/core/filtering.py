@@ -1,0 +1,53 @@
+"""Static-shape filtering: the TPU translation of the paper's
+``.filter(score > 0)`` (Listing 1, lines 30-31).
+
+XLA needs static shapes, so "keep instances with positive score" becomes
+"compact the top-`capacity` instances by score into a fixed buffer + validity
+mask".  Exactness is preserved whenever the number of true positives fits the
+capacity; overflows drop the *lowest-scoring* positives and are counted so
+callers can observe saturation (tests assert zero drops at the calibrated
+capacity).  This is also the paper's §3.1 bottleneck fix: the compacted
+buffer — not the full input — is what the phase-2 join shuffles.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compacted(NamedTuple):
+    feats: jax.Array      # (capacity, d)   compacted feature rows
+    scores: jax.Array     # (capacity,)
+    keys: jax.Array       # (capacity,)     join key (doc id / window slot)
+    index: jax.Array      # (capacity,)     original row index (host decode)
+    valid: jax.Array      # (capacity,)     bool
+    n_dropped: jax.Array  # ()              positives that didn't fit
+
+
+def compact_by_score(feats, scores, keys, capacity: int,
+                     threshold: float = 0.0) -> Compacted:
+    """Select rows with score > threshold, densely packed, fixed capacity."""
+    n = scores.shape[0]
+    pos = scores > threshold
+    # order: positives first (by score desc), then the rest
+    sort_key = jnp.where(pos, scores, -jnp.inf)
+    order = jnp.argsort(-sort_key)
+    take = order[:capacity]
+    valid = pos[take]
+    n_pos = jnp.sum(pos.astype(jnp.int32))
+    return Compacted(
+        feats=jnp.where(valid[:, None], feats[take], 0.0),
+        scores=jnp.where(valid, scores[take], 0.0),
+        keys=jnp.where(valid, keys[take], -1),
+        index=jnp.where(valid, take, -1),
+        valid=valid,
+        n_dropped=jnp.maximum(n_pos - capacity, 0),
+    )
+
+
+def concat_compacted(a: Compacted, b: Compacted) -> Compacted:
+    return Compacted(*[jnp.concatenate([x, y], axis=0) for x, y in
+                       list(zip(a, b))[:5]],
+                     n_dropped=a.n_dropped + b.n_dropped)

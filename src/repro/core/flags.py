@@ -1,0 +1,10 @@
+"""Process-wide tracing flags.
+
+COST_MODE: set by the dry-run's cost pass.  XLA's cost_analysis counts a
+while/scan body ONCE regardless of trip count (validated empirically), so
+for cost extraction the dry-run lowers depth-reduced configs with every
+inner scan (flash kv loop, SSM/RG-LRU chunk loops) python-unrolled and with
+coarser chunk sizes (kernel-realistic block granularity) to keep HLO size
+manageable.  The memory/compile pass runs with the production scan config.
+"""
+COST_MODE = False

@@ -1,0 +1,75 @@
+"""Phase-2 join semantics (paper §5.1 batch join, §5.2 stream scopes).
+
+All joins produce a *pair grid*: claims (C, d) × evidence (E, d) with a
+validity mask — the static-shape form of the paper's per-key Cartesian
+product.  Three scopes:
+
+  scope-batch   pairs valid iff same document key        (Listing 2 `join`)
+  scope-window  pairs valid iff timestamps within a window   (Listing 3 `window`)
+  scope-file    stateful: a growing claim collection per key joined against
+                newly arrived evidence               (Listing 3 `updateStateByKey`)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filtering import Compacted
+
+
+def pair_mask_batch(claims: Compacted, evidence: Compacted) -> jax.Array:
+    """(C, E) bool — same-key valid pairs."""
+    same = claims.keys[:, None] == evidence.keys[None, :]
+    return same & claims.valid[:, None] & evidence.valid[None, :]
+
+
+def pair_mask_window(claim_ts, evid_ts, claims_valid, evid_valid,
+                     window: float) -> jax.Array:
+    """(C, E) bool — pairs whose arrival timestamps lie within `window`."""
+    dt = jnp.abs(claim_ts[:, None] - evid_ts[None, :])
+    return (dt <= window) & claims_valid[:, None] & evid_valid[None, :]
+
+
+# ----------------------------------------------------------------------
+class FileScopeState(NamedTuple):
+    """Stateful claim collection (paper's updateStateByKey), fixed capacity.
+
+    A ring of the most recent `cap` claims with doc keys; new evidence joins
+    against every retained claim with a matching key.
+    """
+    feats: jax.Array    # (cap, d)
+    scores: jax.Array   # (cap,)
+    keys: jax.Array     # (cap,)
+    valid: jax.Array    # (cap,)
+    cursor: jax.Array   # () next write slot
+
+
+def init_file_scope(cap: int, d: int) -> FileScopeState:
+    return FileScopeState(
+        feats=jnp.zeros((cap, d), jnp.float32),
+        scores=jnp.zeros((cap,), jnp.float32),
+        keys=jnp.full((cap,), -1, jnp.int32),
+        valid=jnp.zeros((cap,), bool),
+        cursor=jnp.zeros((), jnp.int32),
+    )
+
+
+def update_file_scope(state: FileScopeState, new: Compacted) -> FileScopeState:
+    """Append newly detected claims into the ring (oldest evicted)."""
+    cap = state.feats.shape[0]
+    n = new.valid.shape[0]
+    slots = (state.cursor + jnp.cumsum(new.valid.astype(jnp.int32)) - 1) % cap
+    slots = jnp.where(new.valid, slots, cap)          # invalid -> scatter-drop
+    feats = state.feats.at[slots].set(new.feats, mode="drop")
+    scores = state.scores.at[slots].set(new.scores, mode="drop")
+    keys = state.keys.at[slots].set(new.keys.astype(jnp.int32), mode="drop")
+    valid = state.valid.at[slots].set(new.valid, mode="drop")
+    cursor = (state.cursor + jnp.sum(new.valid.astype(jnp.int32))) % cap
+    return FileScopeState(feats, scores, keys, valid, cursor)
+
+
+def file_scope_mask(state: FileScopeState, evidence: Compacted) -> jax.Array:
+    same = state.keys[:, None] == evidence.keys[None, :].astype(jnp.int32)
+    return same & state.valid[:, None] & evidence.valid[None, :]

@@ -1,0 +1,98 @@
+"""MLaaS service front (the paper's "service offered to a wide public"):
+a thread-safe request queue with deadline-aware batching in front of any
+step function — the piece between end-users and the two-phase pipeline /
+serving engine.
+
+Batching policy = the mapPartitions trade-off, live: requests are grouped
+until either the batch capacity is reached or the oldest request's slack
+(deadline - now - estimated_step_time) runs out, using the partitioner's
+fitted cost model to estimate step time per batch size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, List, Optional
+
+from repro.core.partitioner import CostModel
+
+
+@dataclasses.dataclass
+class ServiceRequest:
+    payload: Any
+    deadline_s: float                  # absolute time.monotonic deadline
+    submitted_s: float = 0.0
+    done = None                        # threading.Event
+    result: Any = None
+    missed_deadline: bool = False
+
+
+class MLaaSService:
+    """Front a batched `step_fn(list_of_payloads) -> list_of_results`."""
+
+    def __init__(self, step_fn: Callable[[List[Any]], List[Any]],
+                 capacity: int, cost_model: Optional[CostModel] = None,
+                 poll_s: float = 0.002):
+        self.step_fn = step_fn
+        self.capacity = capacity
+        self.cost_model = cost_model
+        self.poll_s = poll_s
+        self.q: "queue.Queue[ServiceRequest]" = queue.Queue()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self.stats = {"batches": 0, "requests": 0, "missed": 0,
+                      "sum_batch": 0}
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=10)
+
+    # ------------------------------------------------------------------
+    def submit(self, payload, timeout_s: float = 10.0) -> ServiceRequest:
+        req = ServiceRequest(payload, deadline_s=time.monotonic() + timeout_s,
+                             submitted_s=time.monotonic())
+        req.done = threading.Event()
+        self.q.put(req)
+        return req
+
+    def _estimate(self, m: int) -> float:
+        return self.cost_model.time(m) if self.cost_model else 0.0
+
+    def _loop(self):
+        pending: List[ServiceRequest] = []
+        while not self._stop.is_set():
+            # drain the queue
+            try:
+                while len(pending) < self.capacity:
+                    pending.append(self.q.get(timeout=self.poll_s))
+            except queue.Empty:
+                pass
+            if not pending:
+                continue
+            now = time.monotonic()
+            full = len(pending) >= self.capacity
+            oldest_slack = min(r.deadline_s for r in pending) - now \
+                - self._estimate(len(pending))
+            if full or oldest_slack <= self.poll_s * 2:
+                batch, pending = pending[:self.capacity], pending[self.capacity:]
+                results = self.step_fn([r.payload for r in batch])
+                t_done = time.monotonic()
+                self.stats["batches"] += 1
+                self.stats["requests"] += len(batch)
+                self.stats["sum_batch"] += len(batch)
+                for r, res in zip(batch, results):
+                    r.result = res
+                    r.missed_deadline = t_done > r.deadline_s
+                    self.stats["missed"] += int(r.missed_deadline)
+                    r.done.set()
+
+    # ------------------------------------------------------------------
+    def mean_batch(self) -> float:
+        b = self.stats["batches"]
+        return self.stats["sum_batch"] / b if b else 0.0

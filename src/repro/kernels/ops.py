@@ -1,0 +1,70 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) they run with interpret=True and are validated
+against ref.py / the pure-jnp model paths; on TPU interpret=False lowers to
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.decode_attention import decode_attention_bhd
+from repro.kernels.pair_score import pair_score_blocked
+from repro.kernels.ssm_scan import ssm_scan_blocked
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: bool = False):
+    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("n_splits", "interpret"))
+def decode_attention(q, k, v, lengths, *, n_splits: int = 8,
+                     interpret: bool = False):
+    """q: (B,H,hd); k/v: (B,L,KV,hd) caches; lengths: (B,) -> (B,H,hd)."""
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    return decode_attention_bhd(q, kt, vt, lengths, n_splits=n_splits,
+                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+def pair_score(link_params, claims, evidence, *, block_n: int = 128,
+               block_m: int = 128, interpret: bool = False):
+    """Blocked bilinear pair scoring; same contract as
+    svm.link_score_matrix (full-rank W form)."""
+    d = claims.shape[-1]
+    return pair_score_blocked(claims, evidence, link_params["W"],
+                              link_params["w"][:d], link_params["w"][d:],
+                              link_params["bias"], block_n=block_n,
+                              block_m=block_m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def ssm_scan(xc, dt, Bc, Cc, A, D, h0=None, *, chunk: int = 64,
+             block_d: int = 512, interpret: bool = False):
+    """Same contract as models.ssm.selective_scan (returns (y, h_final))."""
+    Bsz, S, di = xc.shape
+    a_bar = jnp.exp(dt[..., None] * A[None, None])
+    b_bar = (dt * xc)[..., None] * Bc[:, :, None, :]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, di, A.shape[-1]), jnp.float32)
+    h_seq, h_fin = ssm_scan_blocked(a_bar, b_bar, h0, chunk=chunk,
+                                    block_d=min(block_d, di),
+                                    interpret=interpret)
+    y = jnp.einsum("bsdn,bsn->bsd", h_seq, Cc) + xc * D[None, None]
+    return y, h_fin

@@ -1,0 +1,84 @@
+"""Pallas TPU chunked selective-scan kernel (Mamba / RG-LRU style diagonal
+recurrence  h_t = a_t * h_{t-1} + b_t).
+
+Grid (B, n_channel_blocks, n_chunks) with the chunk dimension sequential:
+the carry h lives in VMEM scratch across chunks; within a chunk the
+recurrence closes with an associative scan over the loaded block, so the
+sequential depth is n_chunks, not S.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, h0_ref, hs_ref, hT_ref, h_scr, *, chunk: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)                     # (chunk, bD, N)
+    b = b_ref[0].astype(jnp.float32)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    acc_a, acc_b = jax.lax.associative_scan(combine, (a, b), axis=0)
+    h_all = acc_a * h_scr[...][None] + acc_b             # (chunk, bD, N)
+    hs_ref[0] = h_all.astype(hs_ref.dtype)
+    h_scr[...] = h_all[-1]
+
+    @pl.when(c == pl.num_programs(2) - 1)
+    def _emit():
+        hT_ref[0] = h_scr[...].astype(hT_ref.dtype)
+
+
+def ssm_scan_blocked(a_bar, b_bar, h0, *, chunk: int = 64,
+                     block_d: int = 512, interpret: bool = False):
+    """a_bar,b_bar: (B,S,D,N) fp32; h0: (B,D,N).  Returns (h_seq, h_final)."""
+    B, S, D, N = a_bar.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        a_bar = jnp.pad(a_bar, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=1.0)
+        b_bar = jnp.pad(b_bar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    bD = min(block_d, D)
+    nc = (S + pad) // chunk
+    grid = (B, D // bD, nc)
+    kernel = functools.partial(_scan_kernel, chunk=chunk)
+    try:
+        cparams = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except Exception:
+        cparams = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    hs, hT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bD, N), lambda b, d, c: (b, c, d, 0)),
+            pl.BlockSpec((1, chunk, bD, N), lambda b, d, c: (b, c, d, 0)),
+            pl.BlockSpec((1, bD, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bD, N), lambda b, d, c: (b, c, d, 0)),
+            pl.BlockSpec((1, bD, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S + pad, D, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, D, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bD, N), jnp.float32)],
+        compiler_params=cparams,
+        interpret=interpret,
+    )(a_bar, b_bar, h0)
+    return hs[:, :S], hT

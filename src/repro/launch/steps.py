@@ -1,0 +1,170 @@
+"""Step builders + input/cache sharding specs for every (arch x shape) cell.
+
+Used by the dry-run (abstract lowering) and by the real train/serve drivers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCase
+from repro.core.sharding import ShardingCtx, _rules, use_sharding
+from repro.models import api, encdec, transformer as tfm
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_schedule
+
+
+# ----------------------------------------------------------------------
+# cache logical axes (mirrors models/api.init_caches structures)
+def _kv_axes(ring: bool):
+    ax = {"k": ("layers", "batch", "seq", "kv_heads", None),
+          "v": ("layers", "batch", "seq", "kv_heads", None)}
+    if ring:
+        ax["pos"] = ("layers", "batch", "seq")
+    return ax
+
+
+def cache_logical_axes(cfg: ArchConfig, max_len: int):
+    if cfg.family == "encdec":
+        a = ("layers", "batch", "seq", "kv_heads", None)
+        return {"self_k": a, "self_v": a, "cross_k": a, "cross_v": a}
+    groups = []
+    for g in cfg.groups:
+        pos_axes = []
+        for kind in g.pattern:
+            if kind == "S":
+                pos_axes.append({"conv": ("layers", "batch", None, "inner"),
+                                 "h": ("layers", "batch", "inner", None)})
+            elif kind == "R":
+                pos_axes.append({"conv": ("layers", "batch", None, "lru"),
+                                 "h": ("layers", "batch", "lru")})
+            elif kind == "M" and cfg.kv_lora_rank:
+                pos_axes.append({"ckv": ("layers", "batch", "seq", None),
+                                 "krope": ("layers", "batch", "seq", None)})
+            else:
+                ring = kind == "L" and cfg.window and cfg.window < max_len
+                pos_axes.append(_kv_axes(bool(ring)))
+        groups.append(pos_axes)
+    return groups
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, max_len: int, batch: int,
+                policy: str, shard_seq: bool = False):
+    """NamedShardings for cache trees.
+
+    Batch goes to the data axes (or, when batch < n_data, the seq dim takes
+    them — long-context decode).  With ``shard_seq`` the cache SEQ dim is
+    additionally split over the ``model`` axis: decode attention then
+    contracts over a sharded length and GSPMD exchanges score-sized partials
+    instead of all-gathering the multi-GB cache (flash-decode layout)."""
+    rules = dict(_rules(policy, mesh.axis_names))
+    data_axes = rules.get("batch") or ()
+    n_data = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+    seq_axes = []
+    if batch < n_data:
+        rules["batch"] = None
+        seq_axes += list(data_axes)
+    if shard_seq and "model" in mesh.axis_names:
+        seq_axes.append("model")
+    rules["seq"] = tuple(seq_axes) or None
+    # kv_heads never sharded for caches (seq carries the model axis instead)
+    rules["kv_heads"] = None
+    ctx = ShardingCtx(mesh, policy, rules)
+    axes_tree = cache_logical_axes(cfg, max_len)
+    return jax.tree_util.tree_map(
+        lambda ax: ctx.sharding_for(ax), axes_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            a is None or isinstance(a, str) for a in t))
+
+
+def batch_shardings(cfg: ArchConfig, mesh: Mesh, policy: str,
+                    specs: Dict[str, Any]):
+    rules = _rules(policy, mesh.axis_names)
+    data_axes = rules.get("batch") or None
+    out = {}
+    for k, v in specs.items():
+        nd = v.ndim if hasattr(v, "ndim") else len(v.shape)
+        out[k] = NamedSharding(mesh, P(data_axes, *([None] * (nd - 1))))
+    return out
+
+
+# ----------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, *, lr: float = 3e-4, warmup: int = 100,
+                    total: int = 10_000, clip: float = 1.0,
+                    accum_steps: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    accum_steps > 1 splits the global batch into micro-batches scanned
+    sequentially with fp32 gradient accumulation — the standard memory/
+    throughput trade (activation footprint / accum_steps).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(api.loss_fn, has_aux=True)(params, cfg, batch)
+
+    def step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, (ce, aux)), grads = grads_of(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda a: a.reshape((accum_steps, a.shape[0] // accum_steps)
+                                    + a.shape[1:]), batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc, c_acc, a_acc = carry
+                (l, (c, a)), g = grads_of(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda x, y: x + y.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l, c_acc + c, a_acc + a), None
+
+            (grads, loss, ce, aux), _ = jax.lax.scan(
+                acc_step, (zeros, 0.0, 0.0, 0.0), micro)
+            inv = 1.0 / accum_steps
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+            loss, ce, aux = loss * inv, ce * inv, aux * inv
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        lr_t = cosine_schedule(opt_state.step, peak_lr=lr, warmup=warmup,
+                               total=total)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr_t)
+        return params, opt_state, {"loss": loss, "ce": ce, "aux": aux,
+                                   "grad_norm": gnorm, "lr": lr_t}
+
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int):
+    def step(params, batch, caches):
+        return api.prefill_fn(params, cfg, batch, caches)
+    return step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def step(params, batch, caches):
+        return api.decode_fn(params, cfg, batch, caches)
+    return step
+
+
+# ----------------------------------------------------------------------
+def abstract_opt_state(params_abs):
+    return jax.eval_shape(adamw_init, params_abs)
+
+
+def shardings_like(axes_tree, ctx: ShardingCtx):
+    is_axes = lambda t: isinstance(t, tuple) and all(
+        a is None or isinstance(a, str) for a in t)
+    return jax.tree_util.tree_map(lambda ax: ctx.sharding_for(ax), axes_tree,
+                                  is_leaf=is_axes)
+
+
+def opt_shardings(param_shardings):
+    """Adam m/v inherit parameter shardings; step scalar replicated."""
+    from repro.optim import AdamWState
+    mesh = jax.tree_util.tree_leaves(param_shardings)[0].mesh
+    return AdamWState(NamedSharding(mesh, P()), param_shardings,
+                      param_shardings)

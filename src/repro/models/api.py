@@ -1,0 +1,122 @@
+"""Family-dispatching model API.
+
+Every architecture exposes the same step functions regardless of family
+(dense / moe / ssm / hybrid / encdec / vlm):
+
+  init(key, cfg)                    -> (params, logical_axes)
+  loss_fn(params, cfg, batch)       -> (loss, (ce, aux))     [train_step]
+  prefill_fn(params, cfg, batch, caches) -> (logits, caches)
+  decode_fn(params, cfg, batch, caches)  -> (logits, caches)
+  init_caches(cfg, batch, max_len)  -> cache pytree
+  input_batch / input_specs         -> concrete / ShapeDtypeStruct inputs
+
+``input_specs`` provides the modality-frontend STUBS: whisper gets
+precomputed frame embeddings, internvl gets patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import split_params
+from repro.models import encdec, transformer as tfm, vlm
+
+
+def _raw_init(key, cfg):
+    if cfg.family == "encdec":
+        return encdec.init_params(key, cfg)
+    return tfm.init_params(key, cfg)
+
+
+def init(key, cfg):
+    return split_params(_raw_init(key, cfg))
+
+
+def abstract_params(cfg):
+    """Shapes-only params (no allocation) for dry-run lowering."""
+    tree = jax.eval_shape(lambda key: _raw_init(key, cfg), jax.random.PRNGKey(0))
+    return split_params(tree)
+
+
+# ----------------------------------------------------------------------
+def loss_fn(params, cfg, batch):
+    if cfg.family == "encdec":
+        return encdec.loss(params, cfg, batch["frames"], batch["tokens"])
+    if cfg.family == "vlm":
+        return vlm.loss(params, cfg, batch["patches"], batch["tokens"])
+    return tfm.lm_loss(params, cfg, batch["tokens"], targets=batch.get("targets"))
+
+
+def forward_fn(params, cfg, batch):
+    if cfg.family == "encdec":
+        enc = encdec.encode(params, batch["frames"], cfg)
+        return encdec.decode_full(params, batch["tokens"], enc, cfg)
+    if cfg.family == "vlm":
+        return vlm.forward(params, cfg, batch["patches"], batch["tokens"])[0]
+    return tfm.forward(params, cfg, tokens=batch["tokens"])[0]
+
+
+def init_caches(cfg, batch: int, max_len: int, enc_len: int = 0):
+    if cfg.family == "encdec":
+        return encdec.init_caches(cfg, batch, max_len, enc_len or max_len)
+    return tfm.init_caches(cfg, batch, max_len)
+
+
+def prefill_fn(params, cfg, batch, caches):
+    if cfg.family == "encdec":
+        return encdec.prefill(params, batch["tokens"], batch["frames"], cfg, caches)
+    if cfg.family == "vlm":
+        return vlm.prefill(params, cfg, batch["patches"], batch["tokens"], caches)
+    return tfm.prefill(params, cfg, batch["tokens"], caches)
+
+
+def decode_fn(params, cfg, batch, caches):
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, batch["tokens"], caches, batch["pos"], cfg)
+    return tfm.decode_step(params, cfg, batch["tokens"], caches, batch["pos"])
+
+
+# ----------------------------------------------------------------------
+def input_batch(cfg, shape_kind: str, batch: int, seq: int, rng=None) -> Dict[str, Any]:
+    """Concrete random inputs (smoke tests / examples)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(rng)
+    out: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(k1, (batch, seq, cfg.d_model), jnp.float32)
+        out["tokens"] = jax.random.randint(k2, (batch, seq), 0, cfg.vocab)
+    elif cfg.family == "vlm":
+        npatch = min(cfg.n_patches, seq)
+        out["patches"] = jax.random.normal(k1, (batch, npatch, cfg.d_model), jnp.float32)
+        out["tokens"] = jax.random.randint(k2, (batch, max(seq - npatch, 1)), 0, cfg.vocab)
+    else:
+        out["tokens"] = jax.random.randint(k2, (batch, seq), 0, cfg.vocab)
+    if shape_kind == "decode":
+        out["tokens"] = out["tokens"][:, :1]
+        out["pos"] = jnp.full((batch,), seq - 1, jnp.int32)
+    return out
+
+
+def input_specs(cfg, shape_kind: str, batch: int, seq: int,
+                batch_sharding=None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins (no allocation) for dry-run lowering."""
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=batch_sharding(len(shape))
+                                    if batch_sharding else None)
+    out: Dict[str, Any] = {}
+    tok_seq = seq
+    if shape_kind == "decode":
+        # decode consumes caches + a single token; no frontend inputs
+        out["tokens"] = sds((batch, 1), jnp.int32)
+        out["pos"] = sds((batch,), jnp.int32)
+        return out
+    if cfg.family == "encdec":
+        out["frames"] = sds((batch, seq, cfg.d_model), jnp.float32)
+    elif cfg.family == "vlm":
+        npatch = min(cfg.n_patches, seq)
+        out["patches"] = sds((batch, npatch, cfg.d_model), jnp.float32)
+        tok_seq = max(seq - npatch, 1)
+    out["tokens"] = sds((batch, tok_seq), jnp.int32)
+    return out

@@ -1,0 +1,203 @@
+"""Encoder-decoder backbone (whisper-base).  The conv/audio frontend is a
+STUB per the assignment: ``input_specs`` provides precomputed frame
+embeddings (B, S_enc, d_model).  Positions use fixed sinusoids (whisper uses
+sinusoidal encoder positions; we use them on both sides — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import shard
+from repro.models import attention as attn
+from repro.models.layers import (dense_init, embed, init_embedding,
+                                 init_mlp, apply_mlp, mask_padded_logits)
+from repro.models.transformer import apply_norm, init_norm, _remat_wrap
+
+
+def _scan(cfg, body, init, xs):
+    """lax.scan or unrolled python loop (dry-run cost pass)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry, ys_list = init, []
+    for r in range(n):
+        carry, y = body(carry, jax.tree_util.tree_map(lambda a: a[r], xs))
+        ys_list.append(y)
+    ys = (jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *ys_list)
+          if ys_list and ys_list[0] is not None else None)
+    return carry, ys
+
+
+def sinusoid(seq: int, d: int, dtype):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+def init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {"ln1": init_norm(cfg), "self": attn.init_attn(ks[0], cfg),
+            "ln2": init_norm(cfg), "ffn": init_mlp(ks[1], cfg)}
+
+
+def init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg), "self": attn.init_attn(ks[0], cfg),
+            "ln_x": init_norm(cfg), "cross": attn.init_attn(ks[1], cfg),
+            "ln2": init_norm(cfg), "ffn": init_mlp(ks[2], cfg)}
+
+
+def init_params(key, cfg):
+    from repro.models.transformer import _stack_params
+    ks = jax.random.split(key, 4)
+    enc = _stack_params([init_enc_layer(jax.random.fold_in(ks[0], i), cfg)
+                         for i in range(cfg.enc_layers)])
+    dec = _stack_params([init_dec_layer(jax.random.fold_in(ks[1], i), cfg)
+                         for i in range(cfg.dec_layers)])
+    return {
+        "embedding": init_embedding(ks[2], cfg),
+        "enc": enc, "dec": dec,
+        "enc_norm": init_norm(cfg), "dec_norm": init_norm(cfg),
+        "lm_head": dense_init(ks[3], (cfg.d_model, cfg.padded_vocab),
+                              ("embed", "vocab"), cfg.p_dtype),
+    }
+
+
+# ----------------------------------------------------------------------
+def encode(params, frames, cfg):
+    """frames: (B, S_enc, d) stub frame embeddings -> encoder states."""
+    x = frames.astype(cfg.act_dtype) + sinusoid(frames.shape[1], cfg.d_model,
+                                                cfg.act_dtype)[None]
+    x = shard(x, "batch", "seq", "embed")
+
+    def body(xx, lp):
+        h = apply_norm(lp["ln1"], xx, cfg)
+        xx = xx + attn.attn_forward(lp["self"], h, cfg, kind="bidir")
+        h = apply_norm(lp["ln2"], xx, cfg)
+        return xx + apply_mlp(lp["ffn"], h, cfg), None
+
+    body = _remat_wrap(body, cfg)
+    x, _ = _scan(cfg, body, x, params["enc"])
+    return apply_norm(params["enc_norm"], x, cfg)
+
+
+def decode_full(params, tokens, enc_states, cfg):
+    """Teacher-forced decoder pass (train / prefill-score)."""
+    x = embed(params["embedding"], tokens, cfg)
+    x = x + sinusoid(tokens.shape[1], cfg.d_model, cfg.act_dtype)[None]
+    x = shard(x, "batch", "seq", "embed")
+
+    def body(xx, lp):
+        h = apply_norm(lp["ln1"], xx, cfg)
+        xx = xx + attn.attn_forward(lp["self"], h, cfg, kind="causal")
+        h = apply_norm(lp["ln_x"], xx, cfg)
+        xx = xx + attn.attn_forward(lp["cross"], h, cfg, kind="cross",
+                                    encoder_kv=enc_states)
+        h = apply_norm(lp["ln2"], xx, cfg)
+        return xx + apply_mlp(lp["ffn"], h, cfg), None
+
+    body = _remat_wrap(body, cfg)
+    x, _ = _scan(cfg, body, x, params["dec"])
+    x = apply_norm(params["dec_norm"], x, cfg)
+    logits = mask_padded_logits(x @ params["lm_head"], cfg)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def loss(params, cfg, frames, tokens):
+    enc = encode(params, frames, cfg)
+    logits = decode_full(params, tokens, enc, cfg)
+    targets = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll), (jnp.mean(nll), jnp.zeros((), jnp.float32))
+
+
+# ----------------------------------------------------------------------
+# decode with caches: self-attn KV cache + precomputed cross K/V.
+def init_caches(cfg, batch: int, max_len: int, enc_len: int):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    L = cfg.dec_layers
+    return {
+        "self_k": jnp.zeros((L, batch, max_len, KV, hd), cfg.act_dtype),
+        "self_v": jnp.zeros((L, batch, max_len, KV, hd), cfg.act_dtype),
+        "cross_k": jnp.zeros((L, batch, enc_len, KV, hd), cfg.act_dtype),
+        "cross_v": jnp.zeros((L, batch, enc_len, KV, hd), cfg.act_dtype),
+    }
+
+
+def prefill(params, tokens, frames, cfg, caches):
+    """Encode + teacher-forced decoder prefill, filling self+cross caches."""
+    enc = encode(params, frames, cfg)
+    B, S = tokens.shape
+    x = embed(params["embedding"], tokens, cfg)
+    x = x + sinusoid(S, cfg.d_model, cfg.act_dtype)[None]
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    pos = jnp.arange(S)[None, :]
+    pos_enc = jnp.arange(enc.shape[1])[None, :]
+
+    def body(xx, per):
+        lp, _ = per
+        h = apply_norm(lp["ln1"], xx, cfg)
+        q, k, v = attn._project_qkv(lp["self"], h, h, cfg, pos, pos, 0.0)
+        xx = xx + attn.attn_forward(lp["self"], h, cfg, kind="causal", qkv=(q, k, v))
+        h = apply_norm(lp["ln_x"], xx, cfg)
+        ck = (enc @ lp["cross"]["wk"]).reshape(B, -1, KV, hd)
+        cv = (enc @ lp["cross"]["wv"]).reshape(B, -1, KV, hd)
+        xx = xx + attn.attn_forward(lp["cross"], h, cfg, kind="cross", encoder_kv=enc)
+        h = apply_norm(lp["ln2"], xx, cfg)
+        xx = xx + apply_mlp(lp["ffn"], h, cfg)
+        return xx, (k, v, ck, cv)
+
+    x, (ks, vs, cks, cvs) = _scan(cfg, body, x, (params["dec"], jnp.arange(cfg.dec_layers)))
+    caches = dict(caches)
+    caches["self_k"] = caches["self_k"].at[:, :, :S].set(ks)
+    caches["self_v"] = caches["self_v"].at[:, :, :S].set(vs)
+    caches["cross_k"] = cks
+    caches["cross_v"] = cvs
+    x = apply_norm(params["dec_norm"], x[:, -1:], cfg)
+    return mask_padded_logits(x @ params["lm_head"], cfg), caches
+
+
+def decode_step(params, tokens, caches, pos, cfg):
+    """tokens: (B,1); pos: (B,)."""
+    B = tokens.shape[0]
+    x = embed(params["embedding"], tokens, cfg)
+    x = x + sinusoid_at(pos, cfg.d_model, cfg.act_dtype)[:, None, :]
+    bidx = jnp.arange(B)
+
+    def body(xx, per):
+        lp, sk, sv, ck, cv = per
+        h = apply_norm(lp["ln1"], xx, cfg)
+        q, k, v = attn._project_qkv(lp["self"], h, h, cfg, pos[:, None], pos[:, None], 0.0)
+        sk = attn.batched_cache_update(sk, k[:, 0], pos)
+        sv = attn.batched_cache_update(sv, v[:, 0], pos)
+        L = sk.shape[1]
+        valid = jnp.arange(L)[None, :] <= pos[:, None]
+        o = attn.mha(q, sk, sv, valid[:, None, None, :], cfg.attn_softcap)
+        xx = xx + o.reshape(B, 1, -1) @ lp["self"]["wo"]
+        h = apply_norm(lp["ln_x"], xx, cfg)
+        qc = (h @ lp["cross"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        oc = attn.mha(qc, ck, cv, None, cfg.attn_softcap)
+        xx = xx + oc.reshape(B, 1, -1) @ lp["cross"]["wo"]
+        h = apply_norm(lp["ln2"], xx, cfg)
+        xx = xx + apply_mlp(lp["ffn"], h, cfg)
+        return xx, (sk, sv)
+
+    x, (nsk, nsv) = _scan(
+        cfg, body, x, (params["dec"], caches["self_k"], caches["self_v"],
+                       caches["cross_k"], caches["cross_v"]))
+    caches = dict(caches)
+    caches["self_k"], caches["self_v"] = nsk, nsv
+    x = apply_norm(params["dec_norm"], x, cfg)
+    return mask_padded_logits(x @ params["lm_head"], cfg), caches
+
+
+def sinusoid_at(pos, d: int, dtype):
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / max(d // 2 - 1, 1)))
+    ang = pos.astype(jnp.float32)[:, None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

@@ -1,0 +1,134 @@
+"""Shared neural layers (pure-functional, pytree params + logical axes)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import Param, shard
+
+
+# ----------------------------------------------------------------------
+# init helpers
+def dense_init(key, shape, axes, dtype, scale: Optional[float] = None) -> Param:
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return Param(jax.random.normal(key, shape, dtype) * jnp.asarray(std, dtype), axes)
+
+
+def zeros_init(shape, axes, dtype) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+# ----------------------------------------------------------------------
+# norms
+def rms_norm(x, weight, eps: float = 1e-6, plus_one: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:                       # gemma-style (1 + w) scaling
+        w = 1.0 + w
+    return (x * w).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+def rope_freqs(head_dim: int, base: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (base ** exponent)                      # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, base: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim), positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, base)                   # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    cos = jnp.cos(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# MLPs
+def init_mlp(key, cfg, d_ff: Optional[int] = None, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.p_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, (d, f), ("embed", "ff"), dt),
+            "w_up": dense_init(k2, (d, f), ("embed", "ff"), dt),
+            "w_down": dense_init(k3, (f, d), ("ff", "embed"), dt),
+        }
+    return {                                             # plain 2-layer MLP
+        "w_up": dense_init(k1, (d, f), ("embed", "ff"), dt),
+        "b_up": zeros_init((f,), ("ff",), dt),
+        "w_down": dense_init(k2, (f, d), ("ff", "embed"), dt),
+        "b_down": zeros_init((d,), ("embed",), dt),
+    }
+
+
+def apply_mlp(params, x, cfg):
+    # the output constraint forces the TP all-reduce to happen HERE, on the
+    # bf16 matmul result, instead of being hoisted past later fp32 casts
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else lambda v: jax.nn.gelu(v, approximate=True)
+        g = act(x @ params["w_gate"])
+        h = g * (x @ params["w_up"])
+        h = shard(h, "batch", "seq", "ff")
+        return shard(h @ params["w_down"], "batch", "seq", None)
+    h = jax.nn.gelu(x @ params["w_up"] + params["b_up"], approximate=True)
+    h = shard(h, "batch", "seq", "ff")
+    return shard(h @ params["w_down"] + params["b_down"], "batch", "seq", None)
+
+
+# ----------------------------------------------------------------------
+# embeddings / unembedding
+def init_embedding(key, cfg):
+    # vocab dim padded to shard evenly under TP; tail rows are never indexed
+    # and their logits are masked in mask_padded_logits().
+    return {"table": dense_init(key, (cfg.padded_vocab, cfg.d_model),
+                                ("vocab", "embed"), cfg.p_dtype, scale=1.0)}
+
+
+def embed(params, tokens, cfg):
+    x = jnp.take(params["table"], tokens, axis=0).astype(cfg.act_dtype)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.act_dtype)
+    return x
+
+
+def mask_padded_logits(logits, cfg):
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    keep = jnp.arange(cfg.padded_vocab) < cfg.vocab
+    return jnp.where(keep, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def unembed(params, x, cfg, table=None):
+    t = table if table is not None else params["table"]
+    logits = jnp.einsum("...d,vd->...v", x, t.astype(x.dtype))
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return mask_padded_logits(logits, cfg)

@@ -1,0 +1,137 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Temporal mixing: x -> {branch: linear -> causal conv(k=4) -> RG-LRU,
+gate: linear -> gelu} -> elementwise product -> out projection.
+The RG-LRU recurrence is diagonal:  h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t + b_a)), c = 8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import Param, shard
+from repro.models.layers import dense_init, zeros_init
+
+RG_C = 8.0
+SCAN_CHUNK = 256
+
+
+def init_rglru(key, cfg):
+    d, w = cfg.d_model, cfg.lru_width
+    dt = cfg.p_dtype
+    ks = jax.random.split(key, 6)
+    lam = jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, w)) ** (1.0 / RG_C))  # softplus^-1
+    return {
+        "in_x": dense_init(ks[0], (d, w), ("embed", "lru"), dt),
+        "in_gate": dense_init(ks[1], (d, w), ("embed", "lru"), dt),
+        "conv_w": dense_init(ks[2], (cfg.conv_k_rg, w), (None, "lru"), dt, scale=0.5),
+        "conv_b": zeros_init((w,), ("lru",), dt),
+        "w_a": dense_init(ks[3], (w, w), ("lru", None), dt),
+        "b_a": zeros_init((w,), (None,), dt),
+        "w_i": dense_init(ks[4], (w, w), ("lru", None), dt),
+        "b_i": zeros_init((w,), (None,), dt),
+        "lambda": Param(lam, (None,)),
+        "out": dense_init(ks[5], (w, d), ("lru", "embed"), dt),
+    }
+
+
+def _conv1d_causal(x, w, b, prev=None):
+    K = w.shape[0]
+    if prev is not None:
+        x_ext = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    else:
+        x_ext = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(x_ext[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def _gates(params, xc):
+    """a_t (log-space) and gated input, fp32.  xc: (B,S,w)."""
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32) + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["w_i"].astype(jnp.float32) + params["b_i"].astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(params["lambda"]) * r          # (B,S,w)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated
+
+
+def diag_scan(a, b, h0=None, chunk: int = SCAN_CHUNK):
+    """h_t = a_t h_{t-1} + b_t, elementwise.  a,b: (B,S,w) fp32."""
+    from repro.core import flags
+    B, S, w = a.shape
+    if flags.COST_MODE:
+        chunk = max(chunk, S // 16)
+    pad = (-S) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // chunk
+    a_c = a.reshape(B, nc, chunk, w).transpose(1, 0, 2, 3)
+    b_c = b.reshape(B, nc, chunk, w).transpose(1, 0, 2, 3)
+    if h0 is None:
+        h0 = jnp.zeros((B, w), jnp.float32)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def step(h, ab):
+        ac, bc = ab
+        acc_a, acc_b = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = acc_a * h[:, None] + acc_b
+        return h_all[:, -1], h_all
+
+    if flags.COST_MODE:
+        h, hs = h0, []
+        for i in range(nc):
+            h, h_all = step(h, (a_c[i], b_c[i]))
+            hs.append(h_all)
+        h_fin, h_seq = h, jnp.stack(hs)
+    else:
+        h_fin, h_seq = jax.lax.scan(step, h0, (a_c, b_c))
+    h_seq = h_seq.transpose(1, 0, 2, 3).reshape(B, nc * chunk, w)[:, :S]
+    return h_seq, h_fin
+
+
+def rglru_forward(params, x, cfg, state=None):
+    """x: (B,S,d) -> (out, new_state); state = {"conv": (B,K-1,w), "h": (B,w)}."""
+    B, S, _ = x.shape
+    K = cfg.conv_k_rg
+    xb = x @ params["in_x"]
+    gate = x @ params["in_gate"]
+    xb = shard(xb, "batch", "seq", "lru")
+    xc = _conv1d_causal(xb, params["conv_w"], params["conv_b"],
+                        prev=state["conv"] if state is not None else None)
+    a, gated = _gates(params, xc)
+    h0 = state["h"] if state is not None else None
+    h_seq, h_fin = diag_scan(a, gated, h0)
+    y = h_seq.astype(x.dtype) * jax.nn.gelu(gate, approximate=True)
+    out = shard(y @ params["out"], "batch", "seq", None)
+    new_conv = (xb[:, -(K - 1):] if S >= K - 1 else
+                jnp.concatenate([state["conv"].astype(xb.dtype), xb], 1)[:, -(K - 1):]
+                if state is not None else
+                jnp.pad(xb, ((0, 0), (K - 1 - S, 0), (0, 0))))
+    return out, {"conv": new_conv.astype(jnp.float32), "h": h_fin}
+
+
+def init_rglru_state(cfg, batch: int):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_k_rg - 1, cfg.lru_width), jnp.float32),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }
+
+
+def rglru_decode(params, x, state, cfg):
+    """x: (B,1,d)."""
+    xb = x @ params["in_x"]
+    gate = x @ params["in_gate"]
+    conv_in = jnp.concatenate([state["conv"].astype(xb.dtype), xb], axis=1)  # (B,K,w)
+    xc = (jnp.einsum("bkw,kw->bw", conv_in, params["conv_w"]) + params["conv_b"])[:, None]
+    a, gated = _gates(params, xc)
+    h = a[:, 0] * state["h"] + gated[:, 0]
+    y = h[:, None].astype(x.dtype) * jax.nn.gelu(gate, approximate=True)
+    out = y @ params["out"]
+    return out, {"conv": conv_in[:, 1:].astype(jnp.float32), "h": h}

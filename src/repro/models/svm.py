@@ -1,0 +1,75 @@
+"""The paper's own predictors, in JAX: SVM claim/evidence scorers and the
+pairwise link scorer (MARGOT, §4–5).
+
+MARGOT uses SubSet-Tree-Kernel SVMs over Stanford constituency parses plus
+bag-of-words vectors.  The Stanford parser and the C tree-kernel package have
+no TPU analogue, so the tree kernel is replaced by a polynomial kernel over
+hashed n-gram features — same computational shape (score = Σ α_i K(sv_i, x)),
+same scaling behaviour in the number of support vectors (the paper's Test 3
+variable).  The link model is a bilinear pair scorer, the MXU-friendly form
+of MARGOT's pair SVM; its blocked Pallas kernel lives in kernels/pair_score.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import Param, shard
+
+
+def init_svm(key, n_sv: int, feat_dim: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "sv": Param(jax.random.normal(k1, (n_sv, feat_dim), dtype) *
+                    jnp.asarray(1.0 / jnp.sqrt(feat_dim), dtype), ("sv", "feat")),
+        "alpha": Param(jax.random.normal(k2, (n_sv,), dtype) *
+                       jnp.asarray(1.0 / jnp.sqrt(n_sv), dtype), ("sv",)),
+        "bias": Param(jnp.zeros((), dtype), ()),
+    }
+
+
+def svm_score(params, x, *, gamma: float = 0.1, coef0: float = 1.0,
+              degree: int = 2):
+    """x: (N, d) -> (N,) decision scores.  Polynomial kernel, or linear when
+    params carry a primal weight vector "w"."""
+    if "w" in params:
+        return x @ params["w"] + params["bias"]
+    k = (gamma * (x @ params["sv"].T) + coef0) ** degree      # (N, n_sv)
+    return k @ params["alpha"] + params["bias"]
+
+
+def init_linear_svm(w, bias: float, dtype=jnp.float32):
+    return {"w": Param(jnp.asarray(w, dtype), ("feat",)),
+            "bias": Param(jnp.asarray(bias, dtype), ())}
+
+
+def init_link(key, feat_dim: int, rank: int = 0, dtype=jnp.float32):
+    """Bilinear pair scorer; optional low-rank factorization of W."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / jnp.sqrt(feat_dim)
+    if rank:
+        return {
+            "U": Param(jax.random.normal(k1, (feat_dim, rank), dtype) * s, ("feat", None)),
+            "V": Param(jax.random.normal(k2, (feat_dim, rank), dtype) * s, ("feat", None)),
+            "w": Param(jax.random.normal(k3, (2 * feat_dim,), dtype) * s, (None,)),
+            "bias": Param(jnp.zeros((), dtype), ()),
+        }
+    return {
+        "W": Param(jax.random.normal(k1, (feat_dim, feat_dim), dtype) * s, ("feat", None)),
+        "w": Param(jax.random.normal(k3, (2 * feat_dim,), dtype) * s, (None,)),
+        "bias": Param(jnp.zeros((), dtype), ()),
+    }
+
+
+def link_score_matrix(params, claims, evidence):
+    """claims: (N,d), evidence: (M,d) -> (N,M) scores — the paper's Cartesian
+    product (phase 2), computed as blocked bilinear matmuls."""
+    if "U" in params:
+        left = claims @ params["U"]                         # (N,r)
+        right = evidence @ params["V"]                      # (M,r)
+        bil = left @ right.T
+    else:
+        bil = (claims @ params["W"]) @ evidence.T           # (N,M)
+    d = claims.shape[-1]
+    lin = (claims @ params["w"][:d])[:, None] + (evidence @ params["w"][d:])[None, :]
+    return bil + lin + params["bias"]

@@ -1,0 +1,321 @@
+"""Unified decoder LM over heterogeneous ScanGroups.
+
+Layers are stacked per (group, pattern-position) and iterated with
+``jax.lax.scan`` so compiled HLO size (and compile time) is independent of
+depth; remat policy wraps the scan body.  Supports:
+
+  kinds A/L/G (attention: full / sliding-window / dual-rope-global),
+  M (attention+MoE; MLA attention if cfg.kv_lora_rank), D (dense layer in a
+  MoE model), S (Mamba-1), R (RG-LRU recurrent block).
+
+Three modes share one code path: ``full`` (train / scoring), ``prefill``
+(full pass that also fills caches), ``decode`` (single-token step with
+caches).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import Param, shard, split_params
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (dense_init, embed, init_embedding, init_mlp,
+                                 apply_mlp, layer_norm, mask_padded_logits,
+                                 ones_init, rms_norm, unembed, zeros_init)
+
+ATTN_KINDS = ("A", "L", "G", "M", "D")
+
+
+# ----------------------------------------------------------------------
+# norms
+def init_norm(cfg):
+    if cfg.norm == "layernorm":
+        return {"w": ones_init((cfg.d_model,), (None,), cfg.p_dtype),
+                "b": zeros_init((cfg.d_model,), (None,), cfg.p_dtype)}
+    w = jnp.zeros if cfg.rms_plus_one else jnp.ones
+    return {"w": Param(w((cfg.d_model,), cfg.p_dtype), (None,))}
+
+
+def apply_norm(p, x, cfg):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps, plus_one=cfg.rms_plus_one)
+
+
+# ----------------------------------------------------------------------
+# per-layer init
+def init_layer(key, cfg, kind: str):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": init_norm(cfg)}
+    if kind == "S":
+        p["mixer"] = ssm_mod.init_ssm(ks[0], cfg)
+        return p
+    if kind == "R":
+        p["mixer"] = rglru_mod.init_rglru(ks[0], cfg)
+    elif kind == "M" and cfg.kv_lora_rank:
+        p["mixer"] = attn.init_mla(ks[0], cfg)
+    else:
+        p["mixer"] = attn.init_attn(ks[0], cfg)
+    p["ln2"] = init_norm(cfg)
+    if kind == "M":
+        p["ffn"] = moe_mod.init_moe(ks[1], cfg)
+    elif kind == "D":
+        p["ffn"] = init_mlp(ks[1], cfg, d_ff=cfg.dense_d_ff or cfg.d_ff)
+    else:
+        p["ffn"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def init_layer_cache(cfg, kind: str, batch: int, max_len: int):
+    if kind == "S":
+        return ssm_mod.init_ssm_state(cfg, batch)
+    if kind == "R":
+        return rglru_mod.init_rglru_state(cfg, batch)
+    if kind == "M" and cfg.kv_lora_rank:
+        return attn.init_mla_cache(cfg, batch, max_len)
+    ring = kind == "L" and cfg.window and cfg.window < max_len
+    return attn.init_kv_cache(cfg, batch, max_len, ring=bool(ring))
+
+
+# ----------------------------------------------------------------------
+# per-layer apply
+def apply_layer(p, x, cfg, kind: str, mode: str, cache, pos):
+    """Returns (x, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["ln1"], x, cfg)
+
+    if kind == "S":
+        if mode == "decode":
+            mix, cache = ssm_mod.ssm_decode(p["mixer"], h, cache, cfg)
+        else:
+            mix, new_state = ssm_mod.ssm_forward(
+                p["mixer"], h, cfg, state=None)
+            cache = new_state if mode == "prefill" else cache
+        return x + mix, aux, cache
+
+    if kind == "R":
+        if mode == "decode":
+            mix, cache = rglru_mod.rglru_decode(p["mixer"], h, cache, cfg)
+        else:
+            mix, new_state = rglru_mod.rglru_forward(p["mixer"], h, cfg, state=None)
+            cache = new_state if mode == "prefill" else cache
+    elif kind == "M" and cfg.kv_lora_rank:
+        if mode == "decode":
+            mix, cache = attn.mla_decode(p["mixer"], h, cache, pos, cfg)
+        else:
+            mix, (ckv, krope) = attn.mla_forward(p["mixer"], h, cfg)
+            if mode == "prefill":
+                S = ckv.shape[1]
+                cache = dict(cache)
+                cache["ckv"] = cache["ckv"].at[:, :S].set(ckv.astype(cache["ckv"].dtype))
+                cache["krope"] = cache["krope"].at[:, :S].set(krope.astype(cache["krope"].dtype))
+    else:
+        akind = {"A": "causal", "G": "global", "L": "local",
+                 "M": "causal", "D": "causal"}[kind]
+        from repro.core.sharding import current_ctx
+        ctx = current_ctx()
+        S = h.shape[1]
+        use_seqshard = (ctx is not None and ctx.policy == "seqtp"
+                        and mode != "decode" and S >= attn.FLASH_MIN_SEQ
+                        and S % ctx.mesh.shape.get("model", 1) == 0)
+        if mode == "decode":
+            mix, cache = attn.attn_decode(p["mixer"], h, cache, pos, cfg, kind=akind)
+        elif use_seqshard:
+            mix, k, v = attn.seqshard_attn_forward(
+                p["mixer"], h, cfg, kind=akind, mesh=ctx.mesh,
+                batch_axes=ctx.rules.get("batch"))
+            if mode == "prefill":
+                cache = attn.prefill_into_cache(None, k, v, cache, cfg,
+                                                kind=akind)
+        elif mode == "prefill":
+            B, S, _ = h.shape
+            positions = jnp.arange(S)[None, :]
+            rope_base = cfg.rope_local_base if akind == "local" else cfg.rope_base
+            q, k, v = attn._project_qkv(p["mixer"], h, h, cfg,
+                                        positions, positions, rope_base)
+            cache = attn.prefill_into_cache(None, k, v, cache, cfg, kind=akind)
+            mix = attn.attn_forward(p["mixer"], h, cfg, kind=akind, qkv=(q, k, v))
+        else:
+            mix = attn.attn_forward(p["mixer"], h, cfg, kind=akind)
+    x = x + mix
+
+    h2 = apply_norm(p["ln2"], x, cfg)
+    if kind == "M":
+        f, aux = moe_mod.apply_moe(p["ffn"], h2, cfg)
+    elif kind == "D":
+        f = apply_mlp(p["ffn"], h2, cfg)
+    else:
+        f = apply_mlp(p["ffn"], h2, cfg)
+    return x + f, aux, cache
+
+
+# ----------------------------------------------------------------------
+# parameter trees
+def _stack_params(trees):
+    def stack(*leaves):
+        if isinstance(leaves[0], Param):
+            return Param(jnp.stack([l.value for l in leaves]),
+                         ("layers",) + leaves[0].axes)
+        return jnp.stack(leaves)
+    return jax.tree_util.tree_map(stack, *trees,
+                                  is_leaf=lambda l: isinstance(l, Param))
+
+
+def init_group_params(key, cfg, group):
+    """list over pattern positions; each a Param tree stacked over repeats."""
+    out = []
+    for pidx, kind in enumerate(group.pattern):
+        reps = [init_layer(jax.random.fold_in(key, pidx * 4096 + r), cfg, kind)
+                for r in range(group.repeats)]
+        out.append(_stack_params(reps) if group.repeats > 1 else
+                   jax.tree_util.tree_map(
+                       lambda p: Param(p.value[None], ("layers",) + p.axes),
+                       reps[0], is_leaf=lambda l: isinstance(l, Param)))
+    return out
+
+
+def init_params(key, cfg):
+    ks = jax.random.split(key, 2 + len(cfg.groups))
+    p = {"embedding": init_embedding(ks[0], cfg),
+         "final_norm": init_norm(cfg),
+         "groups": [init_group_params(ks[2 + i], cfg, g)
+                    for i, g in enumerate(cfg.groups)]}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.padded_vocab),
+                                  ("embed", "vocab"), cfg.p_dtype)
+    return p
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    caches = []
+    for g in cfg.groups:
+        pos_caches = []
+        for kind in g.pattern:
+            c = init_layer_cache(cfg, kind, batch, max_len)
+            c = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (g.repeats,) + a.shape), c)
+            pos_caches.append(c)
+        caches.append(pos_caches)
+    return caches
+
+
+# ----------------------------------------------------------------------
+# backbone runner
+def _remat_wrap(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def run_backbone(params, x, cfg, mode: str, caches=None, pos=None):
+    """x: (B,S,d) embedded input.  Returns (x, aux, new_caches)."""
+    aux0 = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for gi, g in enumerate(cfg.groups):
+        gp = params["groups"][gi]
+        gc = caches[gi] if caches is not None else [None] * len(g.pattern)
+
+        def body(carry, per_rep, _pattern=g.pattern):
+            xx, aux = carry
+            layer_ps, layer_cs = per_rep
+            ncs = []
+            for pi, kind in enumerate(_pattern):
+                cc = layer_cs[pi] if layer_cs is not None else None
+                xx, a, nc = apply_layer(layer_ps[pi], xx, cfg, kind, mode, cc, pos)
+                aux = aux + a
+                ncs.append(nc)
+            return (xx, aux), (tuple(ncs) if layer_cs is not None else None)
+
+        body = _remat_wrap(body, cfg)
+        xs_cache = tuple(gc) if caches is not None else None
+        if cfg.scan_layers:
+            (x, aux0), ys = jax.lax.scan(body, (x, aux0), (gp, xs_cache))
+        else:
+            # unrolled (dry-run cost pass; also useful for debugging)
+            ys_list = []
+            for r in range(g.repeats):
+                take = lambda t: jax.tree_util.tree_map(lambda a: a[r], t)
+                (x, aux0), y = body((x, aux0), (take(gp),
+                                                take(xs_cache) if xs_cache is not None else None))
+                ys_list.append(y)
+            ys = (jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *ys_list)
+                  if ys_list and ys_list[0] is not None else None)
+        new_caches.append(list(ys) if ys is not None else None)
+    return x, aux0, new_caches
+
+
+# ----------------------------------------------------------------------
+# public entry points
+def forward(params, cfg, tokens=None, embeds=None):
+    """Full-sequence causal LM forward.  Returns (logits, aux)."""
+    if embeds is None:
+        x = embed(params["embedding"], tokens, cfg)
+    else:
+        x = embeds.astype(cfg.act_dtype)
+    x = shard(x, "batch", "seq", "embed")
+    x, aux, _ = run_backbone(params, x, cfg, "full")
+    x = apply_norm(params["final_norm"], x, cfg)
+    return _head(params, x, cfg), aux
+
+
+def prefill(params, cfg, tokens, caches, embeds=None, last_index=None):
+    """Fill caches with a full pass; returns (logits at `last_index`
+    (default: final position), caches)."""
+    if embeds is None:
+        x = embed(params["embedding"], tokens, cfg)
+    else:
+        x = embeds.astype(cfg.act_dtype)
+    x = shard(x, "batch", "seq", "embed")
+    x, aux, caches = run_backbone(params, x, cfg, "prefill", caches,
+                                  pos=None)
+    if last_index is None:
+        x = x[:, -1:]
+    else:
+        x = jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _head(params, x, cfg)
+    return logits, caches
+
+
+def decode_step(params, cfg, tokens, caches, pos):
+    """tokens: (B,1) int32; pos: (B,) absolute position being written."""
+    x = embed(params["embedding"], tokens, cfg)
+    x = shard(x, "batch", "seq", "embed")
+    x, aux, caches = run_backbone(params, x, cfg, "decode", caches, pos=pos)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _head(params, x, cfg)
+    return logits, caches
+
+
+def _head(params, x, cfg):
+    if cfg.tie_embeddings:
+        logits = unembed(params["embedding"], x, cfg)
+    else:
+        logits = x @ params["lm_head"]
+        if cfg.logit_softcap:
+            logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+        logits = mask_padded_logits(logits, cfg)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+# ----------------------------------------------------------------------
+# loss
+def lm_loss(params, cfg, tokens, targets=None, embeds=None):
+    """Next-token cross-entropy (mean over tokens) + router aux."""
+    logits, aux = forward(params, cfg, tokens=tokens, embeds=embeds)
+    if targets is None:
+        targets = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = jnp.ones_like(nll)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux, (loss, aux)

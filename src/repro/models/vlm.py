@@ -1,0 +1,38 @@
+"""VLM backbone (internvl2-1b): the ViT frontend is a STUB — ``input_specs``
+provides precomputed patch embeddings (B, n_patches, d_model) which are
+prepended to the token embeddings; the LM backbone is the standard decoder.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.layers import embed
+
+
+def mixed_embeds(params, cfg, patch_embeds, tokens):
+    tok = embed(params["embedding"], tokens, cfg)
+    return jnp.concatenate([patch_embeds.astype(tok.dtype), tok], axis=1)
+
+
+def forward(params, cfg, patch_embeds, tokens):
+    x = mixed_embeds(params, cfg, patch_embeds, tokens)
+    return tfm.forward(params, cfg, embeds=x)
+
+
+def loss(params, cfg, patch_embeds, tokens):
+    """Next-token CE on the text positions only."""
+    logits, aux = forward(params, cfg, patch_embeds, tokens)
+    P = patch_embeds.shape[1]
+    text_logits = logits[:, P:, :]
+    targets = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    import jax
+    logp = jax.nn.log_softmax(text_logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    l = jnp.mean(nll)
+    return l + aux, (l, aux)
+
+
+def prefill(params, cfg, patch_embeds, tokens, caches):
+    x = mixed_embeds(params, cfg, patch_embeds, tokens)
+    return tfm.prefill(params, cfg, None, caches, embeds=x)

@@ -1,0 +1,135 @@
+"""LM serving engine with continuous batching.
+
+This is the paper's two-phase pipeline read onto LM serving (DESIGN.md §4):
+prefill is the per-instance *map* (each request independent), the batcher is
+the *aggregation* (requests meet in a shared decode batch), and the decode
+step is the parallel post-aggregation map.  Weights are placed once
+(broadcast/tp policy) and reused across micro-batches — the mapPartitions
+amortization.
+
+Static shapes throughout: a fixed number of decode slots; prefill pads to
+power-of-two buckets to bound recompilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api, transformer as tfm
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512              # cache length per slot
+    slots: int = 4                  # decode batch size (continuous batching)
+    # Prompts are prefillied at exact length (one compile per distinct
+    # length).  Production engines bucket + mask pad positions; recurrent
+    # archs (SSM/RG-LRU) require pad-free prefill, so exact-length is the
+    # correct default here.
+    greedy: bool = True
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    submit_t: float = 0.0
+    first_token_t: float = 0.0
+    done_t: float = 0.0
+
+
+def _insert_slot(big, small, slot: int):
+    """Write a batch-1 cache pytree into slot `slot` of the engine cache.
+    Cache leaves have batch at axis 1: (repeats, B, ...)."""
+    return jax.tree_util.tree_map(
+        lambda b, s: b.at[:, slot:slot + 1].set(s.astype(b.dtype)), big, small)
+
+
+class Engine:
+    def __init__(self, params, cfg, scfg: ServeConfig):
+        self.params, self.cfg, self.scfg = params, cfg, scfg
+        if cfg.family == "encdec":
+            raise NotImplementedError("Engine serves decoder-LM families")
+        self.caches = api.init_caches(cfg, scfg.slots, scfg.max_len)
+        self.pos = np.zeros((scfg.slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * scfg.slots
+        self.queue: Deque[Request] = deque()
+        self.finished: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c, pos: tfm.decode_step(p, cfg, t, c, pos))
+        self._prefill_cache = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int) -> Request:
+        req = Request(rid=len(self.finished) + len(self.queue) + 1000,
+                      prompt=np.asarray(prompt, np.int32), max_new=max_new,
+                      submit_t=time.perf_counter())
+        self.queue.append(req)
+        return req
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_cache:
+            cfg, scfg = self.cfg, self.scfg
+
+            def fn(params, tokens):
+                caches = api.init_caches(cfg, 1, scfg.max_len)
+                return tfm.prefill(params, cfg, tokens, caches)
+
+            self._prefill_cache[plen] = jax.jit(fn)
+        return self._prefill_cache[plen]
+
+    def _admit(self):
+        for slot in range(self.scfg.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.popleft()
+                plen = len(req.prompt)
+                logits, small = self._prefill_fn(plen)(
+                    self.params, jnp.asarray(req.prompt[None]))
+                self.caches = _insert_slot(self.caches, small, slot)
+                tok = int(jnp.argmax(logits[0, -1]))
+                req.out_tokens.append(tok)
+                req.first_token_t = time.perf_counter()
+                self.active[slot] = req
+                self.pos[slot] = plen                 # next write position
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine iteration: admit + one decode step for all slots."""
+        self._admit()
+        if not any(self.active):
+            return False
+        toks = np.zeros((self.scfg.slots, 1), np.int32)
+        for s, req in enumerate(self.active):
+            if req is not None:
+                toks[s, 0] = req.out_tokens[-1]
+        logits, self.caches = self._decode(self.params, jnp.asarray(toks),
+                                           self.caches,
+                                           jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[s] += 1
+            req.out_tokens.append(int(nxt[s]))
+            if len(req.out_tokens) >= req.max_new or self.pos[s] >= self.scfg.max_len - 1:
+                req.done = True
+                req.done_t = time.perf_counter()
+                self.finished.append(req)
+                self.active[s] = None
+        return True
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

@@ -1,0 +1,107 @@
+"""Assigned-architecture configs must match the assignment sheet exactly."""
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, get_config
+
+SPEC = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+    "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+    "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+    "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+    "whisper-base": (12, 512, 8, 8, 2048, 51865),
+    "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+    "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024),
+}
+
+
+@pytest.mark.parametrize("name", list(SPEC))
+def test_exact_spec(name):
+    cfg = get_config(name)
+    L, d, H, KV, ff, V = SPEC[name]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == KV
+    assert cfg.d_ff == ff
+    assert cfg.vocab == V
+
+
+def test_all_archs_registered():
+    assert set(ARCH_IDS) == set(SPEC)
+    assert len(all_configs()) == 10
+
+
+def test_family_details():
+    g3 = get_config("gemma3-4b")
+    kinds = [k for grp in g3.groups for _ in range(grp.repeats)
+             for k in grp.pattern]
+    assert len(kinds) == 34
+    assert kinds.count("G") == 5 and kinds.count("L") == 29   # 5:1 local:global
+    assert g3.window == 1024 and g3.head_dim == 256
+
+    rg = get_config("recurrentgemma-2b")
+    kinds = []
+    for grp in rg.groups:
+        kinds += list(grp.pattern) * grp.repeats
+    assert kinds.count("R") == 18 and kinds.count("L") == 8   # 1 attn : 2 lru
+    assert rg.lru_width == 2560 and rg.window == 2048
+
+    ds = get_config("deepseek-v2-lite-16b")
+    assert ds.kv_lora_rank == 512 and ds.rope_head_dim == 64
+    assert ds.n_experts == 64 and ds.top_k == 6 and ds.n_shared_experts == 2
+    kinds = [k for grp in ds.groups for _ in range(grp.repeats)
+             for k in grp.pattern]
+    assert kinds[0] == "D" and kinds.count("M") == 26
+
+    q3 = get_config("qwen3-moe-30b-a3b")
+    assert q3.n_experts == 128 and q3.top_k == 8 and q3.qk_norm
+    assert q3.n_shared_experts == 0
+
+    fm = get_config("falcon-mamba-7b")
+    assert fm.ssm_state == 16 and fm.d_inner == 8192 and fm.dt_rank == 256
+
+    wb = get_config("whisper-base")
+    assert wb.enc_layers == 6 and wb.dec_layers == 6
+    assert wb.frontend == "audio_frames"
+
+    iv = get_config("internvl2-1b")
+    assert iv.frontend == "vision_patches" and iv.n_patches == 256
+
+    g7 = get_config("gemma-7b")
+    assert g7.head_dim == 256 and g7.mlp == "geglu"
+
+    sc = get_config("starcoder2-3b")
+    assert sc.head_dim == 128 and sc.norm == "layernorm"
+
+
+def test_param_counts_in_expected_range():
+    """Total param counts should be near the named model sizes."""
+    from repro.launch.dryrun_lib import model_param_counts
+    expected = {
+        "starcoder2-3b": (2.5e9, 3.6e9),
+        "gemma3-4b": (3.2e9, 5.0e9),
+        "internlm2-1.8b": (1.5e9, 2.2e9),
+        "gemma-7b": (7.5e9, 9.5e9),
+        "whisper-base": (0.04e9, 0.11e9),
+        "internvl2-1b": (0.4e9, 1.1e9),
+        "recurrentgemma-2b": (2.0e9, 3.2e9),
+        "deepseek-v2-lite-16b": (12e9, 18e9),
+        "qwen3-moe-30b-a3b": (24e9, 34e9),
+        "falcon-mamba-7b": (6.5e9, 8.5e9),
+    }
+    for name, (lo, hi) in expected.items():
+        n = model_param_counts(get_config(name))["total"]
+        assert lo <= n <= hi, (name, n)
+
+
+def test_sub_quadratic_flags():
+    from repro.launch.dryrun_lib import LONG_CONTEXT_ARCHS, cell_applicable
+    for arch in ARCH_IDS:
+        ok, why = cell_applicable(arch, "long_500k")
+        assert ok == (arch in LONG_CONTEXT_ARCHS)
+        if not ok:
+            assert why

@@ -1,0 +1,185 @@
+"""Fault tolerance: speculation, retry, replay, checkpoint, elastic re-mesh."""
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fault import ReplayLog, speculative_map
+from repro.checkpoint import Checkpointer
+
+
+def test_speculative_map_results_in_order():
+    out, stats = speculative_map(lambda x: x * x, list(range(20)), n_workers=4)
+    assert out == [x * x for x in range(20)]
+    assert stats.launched >= 20
+
+
+def test_speculative_map_mitigates_straggler():
+    calls = {}
+
+    def fn(i):
+        first = i not in calls
+        calls[i] = calls.get(i, 0) + 1
+        if i == 3 and first:
+            time.sleep(1.0)            # straggling first attempt
+            return -1                  # late result should be discarded
+        time.sleep(0.01)
+        return i
+
+    out, stats = speculative_map(fn, list(range(8)), n_workers=4,
+                                 straggler_factor=3.0, min_median_s=0.02)
+    assert out[3] == 3                 # speculative copy won
+    assert stats.speculated >= 1
+
+
+def test_speculative_map_retries_failures():
+    attempts = {}
+
+    def fn(i):
+        attempts[i] = attempts.get(i, 0) + 1
+        if i == 2 and attempts[i] == 1:
+            raise RuntimeError("node died")
+        return i * 10
+
+    out, stats = speculative_map(fn, list(range(6)), n_workers=3)
+    assert out == [i * 10 for i in range(6)]
+    assert stats.retried_failures == 1
+
+
+def test_speculative_map_exhausted_retries_raises():
+    def fn(i):
+        if i == 1:
+            raise RuntimeError("always dies")
+        return i
+
+    with pytest.raises(RuntimeError):
+        speculative_map(fn, list(range(3)), n_workers=2, max_retries=1)
+
+
+# ----------------------------------------------------------------------
+def test_replay_log_resume(tmp_path):
+    log = ReplayLog(str(tmp_path / "replay.jsonl"))
+    for mb in range(10):
+        log.record(mb, offset=mb * 64, seed=42)
+    # crash after mb 9; checkpoint was at mb 6
+    resume = log.resume_point(checkpoint_mb=6)
+    assert resume["mb_id"] == 7 and resume["offset"] == 7 * 64
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": [jnp.ones(4), {"c": jnp.zeros(())}]}
+    for step in (1, 2, 3):
+        ck.save(step, jax.tree_util.tree_map(lambda x: x + step, tree))
+    assert ck.latest_step() == 3
+    assert ck.steps() == [2, 3]                     # gc kept last 2
+    got = ck.restore(tree, step=3)
+    want = jax.tree_util.tree_map(lambda x: x + 3, tree)
+    for g, w in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=True)
+    ck.save(5, {"x": jnp.ones((128, 128))})
+    ck.wait()
+    assert ck.latest_step() == 5
+    got = ck.restore({"x": jnp.zeros((128, 128))})
+    assert float(got["x"].sum()) == 128 * 128
+
+
+def test_checkpoint_atomic_no_partial_dirs(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"x": jnp.ones(3)})
+    names = os.listdir(tmp_path)
+    assert not any(n.endswith(".tmp") for n in names)
+
+
+# ----------------------------------------------------------------------
+ELASTIC_CHECK = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core.fault import ElasticRunner
+from repro.core.pipeline import PipelineConfig, make_batch_step, extract_links
+from repro.data.text import synthetic_corpus, corpus_arrays, margot_models
+
+pcfg = PipelineConfig(feat_dim=128, claim_capacity=16, evid_capacity=16)
+models, axes = margot_models(pcfg)
+docs = synthetic_corpus(2, 32, seed=6)
+X, keys, _ = corpus_arrays(docs, dim=128)
+devs = np.array(jax.devices())
+
+mesh8 = Mesh(devs.reshape(8), ("data",))
+mesh4 = Mesh(devs[:4].reshape(4), ("data",))
+
+runner = ElasticRunner(models, axes, mesh8, policy="broadcast")
+step8 = make_batch_step(pcfg, mesh=mesh8)
+out8 = step8(runner.params, jnp.asarray(X), jnp.asarray(keys))
+links8 = {(c, e) for c, e, _ in extract_links(out8)}
+
+# node failure: rescale to 4 devices (elastic shrink), same results expected
+runner.rescale(mesh4)
+step4 = make_batch_step(pcfg, mesh=mesh4)
+out4 = step4(runner.params, jnp.asarray(X), jnp.asarray(keys))
+links4 = {(c, e) for c, e, _ in extract_links(out4)}
+
+# different shard counts change per-shard capacities, so compare against the
+# oracle invariant instead: every link found on 4 shards whose rows were kept
+# on 8 shards must match.  For this corpus capacities are not saturated, so
+# the link sets are identical.
+assert links8 == links4, (len(links8), len(links4))
+print("ELASTIC-OK", runner.generation, len(links8))
+"""
+
+
+def test_elastic_rescale_equivalence():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", ELASTIC_CHECK], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ELASTIC-OK 1" in r.stdout
+
+
+def test_stream_checkpoint_restart_resumes_state(tmp_path):
+    """Kill-and-restart: restored stream state continues identically."""
+    from repro.core.pipeline import PipelineConfig
+    from repro.core.stream import StreamConfig, StreamRuntime
+    from repro.data.text import corpus_arrays, margot_models, synthetic_corpus
+
+    pcfg = PipelineConfig(feat_dim=64, claim_capacity=16, evid_capacity=16)
+    scfg = StreamConfig(period=5.0, capacity=16, scope="window", window=20.0,
+                        ring_capacity=64)
+    models, _ = margot_models(pcfg)
+    docs = synthetic_corpus(2, 48, seed=7)
+    X, keys, _ = corpus_arrays(docs, dim=64)
+    ts = np.arange(len(keys), dtype=np.float32)
+
+    ck = Checkpointer(str(tmp_path))
+    rt = StreamRuntime(models, pcfg, scfg, checkpointer=ck, checkpoint_every=3)
+    outs = []
+    for start in range(0, 64, 16):
+        outs.append(rt.process_microbatch(X[start:start + 16],
+                                          keys[start:start + 16],
+                                          ts[start:start + 16]))
+    # crash after mb 4; last checkpoint at mb 3 -> replay mb 4 only
+    rt2 = StreamRuntime(models, pcfg, scfg)
+    rt2.state = ck.restore({"state": rt2.state})["state"]
+    assert int(rt2.state.microbatch_id) == 3
+    replay = []
+    for start in (48,):
+        replay.append(rt2.process_microbatch(X[start:start + 16],
+                                             keys[start:start + 16],
+                                             ts[start:start + 16]))
+    for (s1, m1), (s2, m2) in zip(outs[3:], replay):
+        np.testing.assert_allclose(s1, s2, atol=1e-5)
+        np.testing.assert_array_equal(m1, m2)

@@ -1,0 +1,76 @@
+"""Optimizer + partition-size autotuner (mapPartitions analogue)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_schedule)
+from repro.core.partitioner import (choose_partition_size, fit_cost_model,
+                                    measure_step)
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    opt = adamw_init(params)
+    target = jnp.array([1.0, 1.0, 1.0])
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(params, g, opt, lr=0.05, wd=0.0)
+    assert float(loss(params)) < 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 1.0
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_schedule(jnp.asarray(s), peak_lr=1.0, warmup=10,
+                                 total=100)) for s in range(100)]
+    assert lrs[0] < lrs[9]                  # warmup rises
+    assert abs(lrs[10] - 1.0) < 0.05        # peak
+    assert lrs[-1] < 0.2                    # decays toward min_ratio
+    assert min(lrs[10:]) >= 0.1 - 1e-6      # floor
+
+
+# ----------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.floats(1e-4, 1e-1), st.floats(1e-6, 1e-3))
+def test_cost_model_recovers_synthetic(o, c):
+    sizes = [1, 2, 4, 8, 16, 32]
+    times = [o + c * m for m in sizes]
+    model = fit_cost_model(sizes, times)
+    assert abs(model.overhead_s - o) / o < 0.05
+    assert abs(model.per_item_s - c) / c < 0.05
+    assert model.r2 > 0.999
+
+
+def test_choose_partition_size_tradeoff():
+    model = fit_cost_model([1, 16], [0.1 + 1e-3, 0.1 + 16e-3])
+    m = choose_partition_size(model, latency_budget_s=1.0,
+                              target_efficiency=0.8)
+    # needs >= 400 items for 80% efficiency at o=0.1, c=1e-3
+    assert model.efficiency(m) >= 0.8
+    assert model.time(m) <= 1.0
+    # tighter budget forces smaller partitions (the paper's trade-off)
+    m_tight = choose_partition_size(model, latency_budget_s=0.2,
+                                    target_efficiency=0.8)
+    assert m_tight <= m
+
+
+def test_measure_step_runs():
+    import time
+
+    def fake_step(m):
+        time.sleep(0.001 + m * 1e-5)
+
+    model = measure_step(fake_step, [1, 8, 32], warmup=0, repeats=1)
+    assert model.per_item_s > 0

@@ -1,0 +1,56 @@
+"""Continuous-batching engine: equivalence with sequential generation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.models import api, transformer as tfm
+from repro.serving import Engine, ServeConfig
+
+
+def greedy_reference(params, cfg, prompt, max_new):
+    """Sequential prefill+decode, one request at a time."""
+    caches = api.init_caches(cfg, 1, 128)
+    logits, caches = tfm.prefill(params, cfg, jnp.asarray(prompt[None]), caches)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    while len(toks) < max_new:
+        lg, caches = tfm.decode_step(params, cfg, jnp.asarray([[toks[-1]]]),
+                                     caches, jnp.asarray([pos], jnp.int32))
+        toks.append(int(jnp.argmax(lg[0, 0])))
+        pos += 1
+    return toks
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "falcon-mamba-7b"])
+def test_engine_matches_sequential(arch):
+    cfg = reduced(get_config(arch))
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 9, 7)]
+
+    eng = Engine(params, cfg, ServeConfig(max_len=128, slots=2))
+    reqs = [eng.submit(p, max_new=6) for p in prompts]
+    eng.run_until_drained()
+    assert all(r.done for r in reqs)
+
+    for p, r in zip(prompts, reqs):
+        want = greedy_reference(params, cfg, p, 6)
+        assert r.out_tokens[:6] == want, (arch, r.out_tokens, want)
+
+
+def test_engine_more_requests_than_slots():
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params, _ = api.init(jax.random.PRNGKey(1), cfg)
+    rng = np.random.RandomState(1)
+    eng = Engine(params, cfg, ServeConfig(max_len=64, slots=2))
+    reqs = [eng.submit(rng.randint(0, cfg.vocab, size=4).astype(np.int32),
+                       max_new=3) for _ in range(5)]
+    done = eng.run_until_drained()
+    assert len(done) == 5
+    assert all(len(r.out_tokens) >= 3 for r in reqs)
+    # latency accounting present
+    assert all(r.done_t >= r.first_token_t >= r.submit_t > 0 for r in reqs)

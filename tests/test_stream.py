@@ -1,0 +1,115 @@
+"""Stream runtime: scope-window / scope-file semantics vs brute force."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineConfig
+from repro.core.stream import (StreamConfig, StreamRuntime,
+                               find_sustainable_rate, init_ring, ring_append)
+from repro.data.text import corpus_arrays, margot_models, synthetic_corpus
+from repro.models import svm as svm_mod
+
+PCFG = PipelineConfig(feat_dim=128, claim_capacity=32, evid_capacity=32)
+
+
+def make_stream(n_docs=3, spd=30):
+    docs = synthetic_corpus(n_docs, spd, seed=4)
+    X, keys, _ = corpus_arrays(docs, dim=PCFG.feat_dim)
+    models, _ = margot_models(PCFG)
+    ts = np.arange(len(keys), dtype=np.float32) * 0.5       # 2 inst/s
+    return models, X, keys, ts
+
+
+def scores_np(models, X):
+    kw = dict(gamma=PCFG.svm_gamma, coef0=PCFG.svm_coef0, degree=PCFG.svm_degree)
+    return (np.asarray(svm_mod.svm_score(models["claim"], X, **kw)),
+            np.asarray(svm_mod.svm_score(models["evidence"], X, **kw)))
+
+
+def test_window_scope_matches_brute_force():
+    models, X, keys, ts = make_stream()
+    scfg = StreamConfig(period=5.0, capacity=32, scope="window", window=8.0,
+                        ring_capacity=256)
+    rt = StreamRuntime(models, PCFG, scfg)
+
+    got = set()
+    for start in range(0, len(keys), 16):
+        sl = slice(start, start + 16)
+        sc, ok = rt.process_microbatch(X[sl], keys[sl], ts[sl])
+        # decode pairs via ring contents: recompute from state
+        st = rt.state
+        cvalid = np.asarray(st.claims.valid)
+        evalid = np.asarray(st.evidence.valid)
+        for ci in np.nonzero(np.asarray(ok).any(axis=1))[0]:
+            pass
+        got |= {(round(float(st.claims.ts[i]), 3), round(float(st.evidence.ts[j]), 3))
+                for i, j in zip(*np.nonzero(np.asarray(ok)))}
+
+    # brute force: every (claim, evidence) whose timestamps fall in the same
+    # window at the time the LATER of the two was processed
+    c_sc, e_sc = scores_np(models, X)
+    want = set()
+    mb_edges = list(range(0, len(keys), 16))
+    for mb_i, start in enumerate(mb_edges):
+        end = min(start + 16, len(keys))
+        now = ts[end - 1]
+        cand_c = [i for i in range(end) if c_sc[i] > 0 and ts[i] > now - 8.0]
+        cand_e = [j for j in range(end) if e_sc[j] > 0 and ts[j] > now - 8.0]
+        for i in cand_c:
+            for j in cand_e:
+                if abs(ts[i] - ts[j]) <= 8.0:
+                    s = float(svm_mod.link_score_matrix(
+                        models["link"], X[i:i + 1], X[j:j + 1])[0, 0])
+                    if s > 0:
+                        want.add((round(float(ts[i]), 3), round(float(ts[j]), 3)))
+    # every final-window brute-force pair must have been emitted at some point
+    missing = want - got
+    assert not missing, f"missing {len(missing)} of {len(want)}"
+
+
+def test_file_scope_joins_past_claims_with_new_evidence():
+    models, X, keys, ts = make_stream()
+    scfg = StreamConfig(period=5.0, capacity=16, scope="file",
+                        ring_capacity=256)
+    rt = StreamRuntime(models, PCFG, scfg)
+    c_sc, e_sc = scores_np(models, X)
+
+    emitted = []
+    for start in range(0, len(keys), 16):
+        sl = slice(start, start + 16)
+        sc, ok = rt.process_microbatch(X[sl], keys[sl], ts[sl])
+        emitted.append(np.asarray(ok))
+    # at least one cross-micro-batch (claim earlier, evidence later) pair
+    later = [m.sum() for m in emitted[1:]]
+    assert sum(later) > 0, "file scope should join old claims w/ new evidence"
+
+
+def test_ring_append_wraps_and_evicts():
+    ring = init_ring(8, 4)
+    for rnd in range(3):
+        feats = jnp.ones((4, 4)) * rnd
+        ts = jnp.full((4,), float(rnd))
+        keys = jnp.full((4,), rnd, jnp.int32)
+        valid = jnp.ones((4,), bool)
+        ring = ring_append(ring, feats, ts, keys, valid)
+    assert int(ring.cursor) == 12 % 8
+    # ring holds rounds 1..2 (round 0 evicted by wraparound)
+    kept = set(np.asarray(ring.keys)[np.asarray(ring.valid)].tolist())
+    assert kept == {1, 2}
+
+
+def test_sustainable_rate_monotone_detection():
+    models, X, keys, ts = make_stream(2, 20)
+    scfg = StreamConfig(period=0.05, capacity=64, scope="window", window=1.0,
+                        ring_capacity=128)
+
+    def mk():
+        return StreamRuntime(models, PCFG, scfg)
+
+    def gen(n, t0):
+        idx = np.random.RandomState(int(t0 * 10) + 1).randint(0, len(keys), n)
+        return X[idx], keys[idx], np.full(n, t0, np.float32)
+
+    rate = find_sustainable_rate(mk, gen, rates=[1, 10], mb_per_rate=3)
+    assert rate >= 1.0
