@@ -1,0 +1,6 @@
+#!/usr/bin/env sh
+# Tier-1 verify (see ROADMAP.md), runnable from a fresh checkout:
+#   sh scripts/run_tests.sh [extra pytest args...]
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -1,0 +1,90 @@
+"""Admission control and backpressure for the serving cluster.
+
+The paper's service must stay responsive for "evergrowing user bases"; when
+offered load exceeds capacity the failure mode must be an *explicit, cheap
+rejection* at the front door — not silent deadline misses deep in the queue
+(the pathology the stream runtime calls "falling behind").
+
+Two shedding rules, both O(1) per request:
+
+  * queue-full   — a bounded global queue (count or cost units); requests
+                   beyond it are shed immediately.
+  * deadline     — the ``CostModel`` slack test that used to live inline in
+                   ``MLaaSService._loop``: if the fitted service-time estimate
+                   for the work already queued ahead says the deadline cannot
+                   be met, reject now instead of missing later.
+
+Rejected requests complete with an explicit :class:`Rejected` result so
+callers can distinguish "shed by policy" from "failed".
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+from repro.core.partitioner import CostModel
+from repro.cluster.metrics import MetricsRegistry, null_registry
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejected:
+    """Explicit overload result: the request was shed, not processed."""
+    reason: str                       # "queue_full" | "deadline" | "shutdown"
+    detail: str = ""
+
+
+def deadline_slack(deadline_s: float, now: float, est_service_s: float) -> float:
+    """Slack = time to deadline minus the estimated service time.
+
+    This is the batching/shedding criterion shared by the service front
+    (flush when the oldest request's slack runs out) and the admission
+    controller (reject when slack is negative on arrival).
+    """
+    return deadline_s - now - est_service_s
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    max_queue_cost: int = 1024        # bound on queued cost units (≈ requests)
+    cost_model: Optional[CostModel] = None
+    min_slack_s: float = 0.0          # extra safety margin on the deadline test
+
+
+class AdmissionController:
+    """Front-door policy: decide admit/shed from global queue state."""
+
+    def __init__(self, cfg: AdmissionConfig = AdmissionConfig(),
+                 metrics: Optional[MetricsRegistry] = None):
+        self.cfg = cfg
+        self.metrics = metrics if metrics is not None else null_registry()
+        self._admitted = self.metrics.counter("admission.admitted")
+        self._shed_full = self.metrics.counter("admission.shed_queue_full")
+        self._shed_deadline = self.metrics.counter("admission.shed_deadline")
+
+    def _estimate(self, queued_cost: int) -> float:
+        cm = self.cfg.cost_model
+        return cm.time(max(queued_cost, 1)) if cm else 0.0
+
+    def decide(self, queued_cost: int, cost: int, deadline_s: float,
+               now: Optional[float] = None) -> Optional[Rejected]:
+        """Returns None to admit, or a :class:`Rejected` describing the shed.
+
+        ``queued_cost`` is the cluster-wide outstanding cost (router queue
+        depth); ``cost`` the new request's own cost units.
+        """
+        if queued_cost + cost > self.cfg.max_queue_cost:
+            self._shed_full.inc()
+            return Rejected("queue_full",
+                            f"queued={queued_cost} + {cost} > "
+                            f"{self.cfg.max_queue_cost}")
+        now = time.monotonic() if now is None else now
+        est = self._estimate(queued_cost + cost)
+        slack = deadline_slack(deadline_s, now, est)
+        if slack < self.cfg.min_slack_s:
+            self._shed_deadline.inc()
+            return Rejected("deadline",
+                            f"slack={slack:.4f}s < {self.cfg.min_slack_s}s "
+                            f"(est={est:.4f}s)")
+        self._admitted.inc()
+        return None

@@ -1,0 +1,165 @@
+"""Unified service metrics (paper §6: the evaluation reports rates, latency
+and fall-behind — production MLaaS needs the same signals live).
+
+One thread-safe :class:`MetricsRegistry` replaces the ad-hoc ``stats`` dicts
+that ``MLaaSService``, ``Engine`` and ``StreamRuntime`` each grew on their
+own: counters (monotonic), gauges (last value), and histograms (bounded
+reservoir, exact percentiles over the sample).  Every cluster component
+(router, replicas, admission controller, autoscaler) reports into the same
+registry so a single ``snapshot()`` describes the whole service.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from contextlib import contextmanager
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class Counter:
+    __slots__ = ("_value", "_lock")
+
+    def __init__(self):
+        self._value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        return self._value
+
+
+class Gauge:
+    __slots__ = ("_value", "_lock")
+
+    def __init__(self):
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v)
+
+    def add(self, dv: float) -> None:
+        with self._lock:
+            self._value += dv
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Histogram:
+    """Bounded reservoir of observations with exact percentiles over the
+    retained sample (uniform reservoir replacement once full)."""
+
+    __slots__ = ("_samples", "_count", "_sum", "_cap", "_rng", "_lock")
+
+    def __init__(self, cap: int = 4096):
+        self._samples: List[float] = []
+        self._count = 0
+        self._sum = 0.0
+        self._cap = cap
+        self._rng = np.random.RandomState(0)
+        self._lock = threading.Lock()
+
+    def observe(self, v: float) -> None:
+        with self._lock:
+            self._count += 1
+            self._sum += v
+            if len(self._samples) < self._cap:
+                self._samples.append(float(v))
+            else:                     # reservoir: keep each obs w.p. cap/count
+                j = self._rng.randint(self._count)
+                if j < self._cap:
+                    self._samples[j] = float(v)
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    def mean(self) -> float:
+        return self._sum / self._count if self._count else 0.0
+
+    def percentile(self, p: float) -> float:
+        with self._lock:
+            if not self._samples:
+                return 0.0
+            return float(np.percentile(np.asarray(self._samples), p))
+
+
+class MetricsRegistry:
+    """Create-or-get named metrics; ``snapshot()`` flattens everything."""
+
+    def __init__(self, prefix: str = ""):
+        self.prefix = prefix
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._hists: Dict[str, Histogram] = {}
+
+    def _key(self, name: str) -> str:
+        return f"{self.prefix}{name}" if self.prefix else name
+
+    def counter(self, name: str) -> Counter:
+        with self._lock:
+            return self._counters.setdefault(self._key(name), Counter())
+
+    def gauge(self, name: str) -> Gauge:
+        with self._lock:
+            return self._gauges.setdefault(self._key(name), Gauge())
+
+    def histogram(self, name: str, cap: int = 4096) -> Histogram:
+        with self._lock:
+            return self._hists.setdefault(self._key(name), Histogram(cap))
+
+    @contextmanager
+    def timer(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.histogram(name).observe(time.perf_counter() - t0)
+
+    def snapshot(self) -> Dict[str, float]:
+        """Flat view: counters/gauges by name, histograms expanded to
+        count/mean/p50/p95/p99."""
+        out: Dict[str, float] = {}
+        with self._lock:
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            hists = dict(self._hists)
+        for k, c in counters.items():
+            out[k] = c.value
+        for k, g in gauges.items():
+            out[k] = g.value
+        for k, h in hists.items():
+            out[f"{k}.count"] = h.count
+            out[f"{k}.mean"] = h.mean()
+            for p in (50, 95, 99):
+                out[f"{k}.p{p}"] = h.percentile(p)
+        return out
+
+    def report(self) -> str:
+        snap = self.snapshot()
+        return "\n".join(f"{k}={snap[k]:.6g}" for k in sorted(snap))
+
+
+_NULL: Optional[MetricsRegistry] = None
+
+
+def null_registry() -> MetricsRegistry:
+    """Shared sink for components constructed without an explicit registry."""
+    global _NULL
+    if _NULL is None:
+        _NULL = MetricsRegistry()
+    return _NULL

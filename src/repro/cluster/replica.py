@@ -1,0 +1,335 @@
+"""Replica workers: one backend (LM engine, SVM stream runtime, or any
+batched step function) owned by one host thread with a bounded inbox.
+
+This is the cluster's unit of scale — the paper's "worker node".  A replica:
+
+  * pulls up to ``max_batch`` requests from its bounded inbox and runs them
+    through the backend as one batch (the mapPartitions amortization);
+  * reports liveness via a heartbeat timestamp and a busy fraction;
+  * on a crash (injected fault or backend exception) *spills* every
+    unacknowledged request — the batch that was in flight plus the whole
+    inbox — to an ``on_spill`` callback so the router can requeue them on
+    survivors.  Semantics are at-least-once (a crash between backend
+    completion and acknowledgement reprocesses the batch elsewhere), which
+    is the Spark lineage-recomputation contract; zero requests are lost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import queue
+import threading
+import time
+from typing import Any, Callable, List, Optional
+
+from repro.cluster.admission import Rejected
+from repro.cluster.metrics import MetricsRegistry, null_registry
+
+
+class Status(enum.Enum):
+    PENDING = "pending"
+    OK = "ok"
+    REJECTED = "rejected"       # shed by admission control -> Rejected result
+    FAILED = "failed"           # retries exhausted / no survivors / shutdown
+
+
+@dataclasses.dataclass
+class ClusterRequest:
+    """One end-user request travelling through the cluster."""
+    payload: Any
+    cost: int = 1                         # load units (e.g. tokens, rows)
+    session_key: Optional[str] = None     # affinity key (user/session id)
+    deadline_s: float = float("inf")      # absolute time.monotonic deadline
+    rid: int = -1
+    submitted_s: float = 0.0
+    attempts: int = 0
+    status: Status = Status.PENDING
+    result: Any = None
+    error: Optional[BaseException] = None
+    replica_rid: Optional[int] = None     # replica that completed it
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+    finished_s: float = 0.0
+
+    def _finish(self, status: Status):
+        self.status = status
+        self.finished_s = time.monotonic()
+        self.done.set()
+
+    def complete(self, result: Any, replica_rid: int):
+        self.result = result
+        self.replica_rid = replica_rid
+        self._finish(Status.OK)
+
+    def reject(self, rejected: Rejected):
+        self.result = rejected
+        self._finish(Status.REJECTED)
+
+    def fail(self, error: BaseException):
+        self.error = error
+        self._finish(Status.FAILED)
+
+    @property
+    def missed_deadline(self) -> bool:
+        return self.done.is_set() and self.finished_s > self.deadline_s
+
+    def wait(self, timeout: Optional[float] = None) -> Any:
+        self.done.wait(timeout)
+        return self.result
+
+
+class ReplicaCrash(RuntimeError):
+    """Raised inside a worker loop by fault injection."""
+
+
+# ----------------------------------------------------------------------
+# Backends: anything with process(list_of_payloads) -> list_of_results.
+
+class FnBackend:
+    """Wrap a batched ``step_fn(payloads) -> results`` (tests, services)."""
+
+    def __init__(self, step_fn: Callable[[List[Any]], List[Any]]):
+        self.step_fn = step_fn
+
+    def process(self, payloads: List[Any]) -> List[Any]:
+        return self.step_fn(payloads)
+
+
+class StreamBackend:
+    """One SVM two-phase stream runtime per replica.
+
+    Payloads are micro-batches ``(X, keys, ts)``.  ``fetch`` is the ingest
+    stage (the paper's HDFS/storage document read + parse) applied per
+    micro-batch before device compute; it blocks the host thread, which is
+    exactly what overlapping replicas hide.
+    """
+
+    def __init__(self, runtime, fetch: Optional[Callable[[Any], Any]] = None):
+        self.runtime = runtime
+        self.fetch = fetch
+
+    def process(self, payloads: List[Any]) -> List[Any]:
+        out = []
+        for payload in payloads:
+            if self.fetch is not None:
+                payload = self.fetch(payload)
+            X, keys, ts = payload
+            sc, ok = self.runtime.process_microbatch(X, keys, ts)
+            out.append((sc, ok))
+        return out
+
+
+class EngineBackend:
+    """One continuous-batching LM engine per replica.
+
+    Payloads are ``(prompt_tokens, max_new)``; results are the generated
+    token lists.  The whole pulled batch shares the engine's decode slots.
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    def process(self, payloads: List[Any]) -> List[Any]:
+        reqs = [self.engine.submit(prompt, max_new=max_new)
+                for prompt, max_new in payloads]
+        self.engine.run_until_drained()
+        return [r.out_tokens for r in reqs]
+
+
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ReplicaConfig:
+    inbox_capacity: int = 64
+    max_batch: int = 8
+    poll_s: float = 0.002
+    heartbeat_timeout_s: float = 5.0
+
+
+class ReplicaWorker:
+    """One backend on one thread with a bounded inbox and health reporting."""
+
+    _ids = itertools.count()
+
+    def __init__(self, backend, cfg: ReplicaConfig = ReplicaConfig(),
+                 rid: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 on_spill: Optional[Callable[[List[ClusterRequest], "ReplicaWorker"], None]] = None):
+        self.rid = next(self._ids) if rid is None else rid
+        self.backend = backend
+        self.cfg = cfg
+        self.metrics = metrics if metrics is not None else null_registry()
+        self.on_spill = on_spill
+        self.inbox: "queue.Queue[ClusterRequest]" = \
+            queue.Queue(maxsize=cfg.inbox_capacity)
+        self._lock = threading.Lock()
+        self._outstanding_cost = 0
+        self._in_flight: List[ClusterRequest] = []
+        self._crash = threading.Event()
+        self._closing = threading.Event()
+        self.alive = False
+        self.heartbeat_s = 0.0
+        self.started_s = 0.0
+        self.busy_s = 0.0
+        self.processed = 0
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=f"replica-{self.rid}")
+
+    # -------------------------------------------------- control surface
+    def start(self) -> "ReplicaWorker":
+        self.alive = True
+        self.started_s = self.heartbeat_s = time.monotonic()
+        self._thread.start()
+        return self
+
+    def offer(self, req: ClusterRequest) -> bool:
+        """Enqueue; False == backpressure (inbox full / replica down)."""
+        if not self.alive or self._closing.is_set():
+            return False
+        try:
+            self.inbox.put_nowait(req)
+        except queue.Full:
+            return False
+        with self._lock:
+            self._outstanding_cost += req.cost
+        if not self.alive:
+            # Raced with a concurrent crash: the dying thread may already
+            # have drained the inbox, so reclaim whatever is left ourselves
+            # and report failure — the caller re-dispatches elsewhere.
+            leftovers: List[ClusterRequest] = []
+            while True:
+                try:
+                    leftovers.append(self.inbox.get_nowait())
+                except queue.Empty:
+                    break
+            with self._lock:
+                self._outstanding_cost -= sum(r.cost for r in leftovers)
+            others = [r for r in leftovers if r is not req]
+            if others and self.on_spill is not None:
+                self.on_spill(others, self)
+            return False
+        return True
+
+    def outstanding_cost(self) -> int:
+        with self._lock:
+            return self._outstanding_cost
+
+    def healthy(self, now: Optional[float] = None) -> bool:
+        now = time.monotonic() if now is None else now
+        return self.alive and \
+            now - self.heartbeat_s < self.cfg.heartbeat_timeout_s
+
+    def busy_fraction(self) -> float:
+        wall = time.monotonic() - self.started_s
+        return self.busy_s / wall if wall > 0 else 0.0
+
+    def inject_crash(self):
+        """Fault injection: the worker dies at its next loop checkpoint and
+        spills all unacknowledged requests."""
+        self._crash.set()
+
+    def drain(self, timeout: float = 10.0):
+        """Graceful: stop accepting, finish the inbox, exit."""
+        self._closing.set()
+        self._thread.join(timeout)
+
+    def join(self, timeout: float = 10.0):
+        self._thread.join(timeout)
+
+    # -------------------------------------------------- worker loop
+    def _pull_batch(self) -> List[ClusterRequest]:
+        batch: List[ClusterRequest] = []
+        try:
+            batch.append(self.inbox.get(timeout=self.cfg.poll_s))
+            while len(batch) < self.cfg.max_batch:
+                batch.append(self.inbox.get_nowait())
+        except queue.Empty:
+            pass
+        return batch
+
+    def _loop(self):
+        hist = self.metrics.histogram("replica.batch_s")
+        while True:
+            self.heartbeat_s = time.monotonic()
+            if self._crash.is_set():
+                self._die(ReplicaCrash(f"replica {self.rid}: injected crash"))
+                return
+            batch = self._pull_batch()
+            if not batch:
+                if self._closing.is_set():
+                    break
+                continue
+            with self._lock:
+                self._in_flight = batch
+            t0 = time.monotonic()
+            try:
+                results = self.backend.process([r.payload for r in batch])
+                if self._crash.is_set():
+                    # crash before acknowledgement: the whole batch spills
+                    raise ReplicaCrash(
+                        f"replica {self.rid}: crashed before ack")
+            except BaseException as e:
+                self._die(e)
+                return
+            dt = time.monotonic() - t0
+            self.busy_s += dt
+            hist.observe(dt)
+            done_cost = 0
+            for r, res in zip(batch, results):
+                r.complete(res, self.rid)
+                done_cost += r.cost
+                self.processed += 1
+            with self._lock:
+                self._in_flight = []
+                self._outstanding_cost -= done_cost
+        # Graceful exit: refuse new offers first, then finish any request
+        # that raced into the inbox between the final empty poll and the
+        # flip (offer's post-put aliveness re-check closes the rest of the
+        # window by reclaiming and re-dispatching).
+        self.alive = False
+        time.sleep(self.cfg.poll_s)
+        stragglers: List[ClusterRequest] = []
+        while True:
+            try:
+                stragglers.append(self.inbox.get_nowait())
+            except queue.Empty:
+                break
+        if stragglers:
+            try:
+                results = self.backend.process([r.payload for r in stragglers])
+                for r, res in zip(stragglers, results):
+                    r.complete(res, self.rid)
+                    self.processed += 1
+            except BaseException as e:
+                if self.on_spill is not None:
+                    self.on_spill(stragglers, self)
+                else:
+                    for r in stragglers:
+                        r.fail(e)
+        with self._lock:
+            self._outstanding_cost = 0
+
+    def _die(self, error: BaseException):
+        """Crash path: mark dead, spill in-flight + inbox to the router."""
+        self.alive = False
+        with self._lock:
+            spilled = list(self._in_flight)
+            self._in_flight = []
+        # Two drain passes with a grace gap: an `offer` that read `alive`
+        # just before we flipped it may still land a request (offer's own
+        # post-put check is the second line of defence).
+        for _ in range(2):
+            while True:
+                try:
+                    spilled.append(self.inbox.get_nowait())
+                except queue.Empty:
+                    break
+            time.sleep(0.005)
+        with self._lock:
+            self._outstanding_cost = 0
+        self.metrics.counter("replica.crashes").inc()
+        self.metrics.counter("replica.spilled_requests").inc(len(spilled))
+        if self.on_spill is not None:
+            self.on_spill(spilled, self)
+        else:
+            for r in spilled:
+                r.fail(error)

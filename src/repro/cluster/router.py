@@ -1,0 +1,219 @@
+"""Request router: fan user requests out over a pool of replica workers.
+
+The paper distributes the *pipeline* over Spark workers; this module
+distributes the *service* — the missing piece between one `Engine`/stream
+runtime and "heavy traffic from millions of users".  Pluggable dispatch
+policies:
+
+  * ``round_robin``      — uniform rotation over alive replicas.
+  * ``least_loaded``     — lowest outstanding cost (requests or token/row
+                           weights), the classic join-shortest-queue policy.
+  * ``session_affinity`` — rendezvous (highest-random-weight) hashing of the
+                           session key, so a session sticks to one replica
+                           (warm caches / per-user state) and only the keys
+                           of a *removed* replica ever remap.
+
+Fault path: a replica crash spills its unacknowledged requests back here;
+they are requeued on survivors (bounded retries, `core/fault.py` semantics).
+Admission control (`cluster/admission.py`) runs at `submit`, so overload is
+an explicit `Rejected` result instead of unbounded queueing.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.cluster.admission import AdmissionController, Rejected
+from repro.cluster.metrics import MetricsRegistry, null_registry
+from repro.cluster.replica import (ClusterRequest, ReplicaConfig,
+                                   ReplicaWorker, Status)
+
+POLICIES = ("round_robin", "least_loaded", "session_affinity")
+
+
+def _rendezvous_weight(session_key: str, rid: int) -> int:
+    h = hashlib.md5(f"{session_key}|{rid}".encode()).digest()
+    return int.from_bytes(h[:8], "little")
+
+
+class Router:
+    """Front door over N :class:`ReplicaWorker` s."""
+
+    def __init__(self, policy: str = "round_robin",
+                 admission: Optional[AdmissionController] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 max_retries: int = 2,
+                 requeue_timeout_s: float = 5.0):
+        if policy not in POLICIES:
+            raise ValueError(f"policy {policy!r} not in {POLICIES}")
+        self.policy = policy
+        self.metrics = metrics if metrics is not None else null_registry()
+        self.admission = admission
+        self.max_retries = max_retries
+        self.requeue_timeout_s = requeue_timeout_s
+        self._replicas: Dict[int, ReplicaWorker] = {}
+        self._lock = threading.Lock()
+        self._rr = itertools.count()
+        self._rids = itertools.count(1)
+        self._latency = self.metrics.histogram("router.latency_s")
+        self._completed = self.metrics.counter("router.completed")
+        self._failed = self.metrics.counter("router.failed")
+        self._requeued = self.metrics.counter("router.requeued")
+
+    # -------------------------------------------------- replica pool
+    def add_replica(self, backend, cfg: ReplicaConfig = ReplicaConfig(),
+                    rid: Optional[int] = None) -> ReplicaWorker:
+        worker = ReplicaWorker(backend, cfg, rid=rid, metrics=self.metrics,
+                               on_spill=self._on_spill).start()
+        with self._lock:
+            self._replicas[worker.rid] = worker
+        self._set_pool_gauge()
+        return worker
+
+    def remove_replica(self, rid: int, drain: bool = True) -> None:
+        """Take a replica out of rotation; by default let it finish its
+        inbox first (graceful drain)."""
+        with self._lock:
+            worker = self._replicas.pop(rid, None)
+        self._set_pool_gauge()
+        if worker is not None and drain:
+            worker.drain()
+
+    def alive_replicas(self) -> List[ReplicaWorker]:
+        with self._lock:
+            return [w for w in self._replicas.values() if w.alive]
+
+    def n_alive(self) -> int:
+        return len(self.alive_replicas())
+
+    def queue_depth(self) -> int:
+        """Cluster-wide outstanding cost (inbox + in-flight, all replicas)."""
+        return sum(w.outstanding_cost() for w in self.alive_replicas())
+
+    def _set_pool_gauge(self):
+        self.metrics.gauge("router.replicas").set(self.n_alive())
+
+    # -------------------------------------------------- dispatch policies
+    def _ranked(self, req: ClusterRequest) -> List[ReplicaWorker]:
+        """Alive replicas in dispatch-preference order for this request."""
+        alive = sorted(self.alive_replicas(), key=lambda w: w.rid)
+        if not alive:
+            return []
+        if self.policy == "least_loaded":
+            return sorted(alive, key=lambda w: (w.outstanding_cost(), w.rid))
+        if self.policy == "session_affinity" and req.session_key is not None:
+            return sorted(alive, key=lambda w: _rendezvous_weight(
+                req.session_key, w.rid), reverse=True)
+        k = next(self._rr) % len(alive)
+        return alive[k:] + alive[:k]
+
+    # -------------------------------------------------- submission
+    def submit(self, payload: Any, *, cost: int = 1,
+               session_key: Optional[str] = None,
+               timeout_s: float = 30.0) -> ClusterRequest:
+        now = time.monotonic()
+        req = ClusterRequest(payload, cost=cost, session_key=session_key,
+                             deadline_s=now + timeout_s, rid=next(self._rids),
+                             submitted_s=now)
+        if self.admission is not None:
+            shed = self.admission.decide(self.queue_depth(), cost,
+                                         req.deadline_s, now)
+            if shed is not None:
+                req.reject(shed)
+                return req
+        self._dispatch(req)
+        return req
+
+    def _dispatch(self, req: ClusterRequest) -> None:
+        for worker in self._ranked(req):
+            if worker.offer(req):
+                self.metrics.gauge("router.queue_depth").set(self.queue_depth())
+                return
+        # every alive inbox full (or pool empty): explicit backpressure
+        self.metrics.counter("router.shed_backpressure").inc()
+        req.reject(Rejected("queue_full", "all replica inboxes full"))
+
+    def wait(self, req: ClusterRequest, timeout: Optional[float] = None) -> Any:
+        out = req.wait(timeout)
+        if req.status is Status.OK:
+            self._completed.inc()
+            self._latency.observe(req.finished_s - req.submitted_s)
+        return out
+
+    # -------------------------------------------------- fault path
+    def _on_spill(self, spilled: List[ClusterRequest],
+                  dead: ReplicaWorker) -> None:
+        """Requeue a crashed replica's unacknowledged requests on survivors.
+
+        At-least-once: a request whose batch finished compute but was never
+        acknowledged is re-executed elsewhere; none are lost."""
+        with self._lock:
+            self._replicas.pop(dead.rid, None)
+        self._set_pool_gauge()
+        for req in spilled:
+            req.attempts += 1
+            if req.attempts > self.max_retries:
+                req.fail(RuntimeError(
+                    f"request {req.rid}: retries exhausted after replica "
+                    f"{dead.rid} crash"))
+                self._failed.inc()
+                continue
+            if not self._requeue_blocking(req, exclude=dead.rid):
+                req.fail(RuntimeError(
+                    f"request {req.rid}: no surviving replica accepted it"))
+                self._failed.inc()
+            else:
+                self._requeued.inc()
+
+    def _requeue_blocking(self, req: ClusterRequest, exclude: int) -> bool:
+        """Offer to survivors, waiting out transient inbox fullness (a crash
+        dumps a burst on the pool) up to ``requeue_timeout_s``."""
+        t_end = time.monotonic() + self.requeue_timeout_s
+        while time.monotonic() < t_end:
+            ranked = [w for w in self._ranked(req) if w.rid != exclude]
+            if not ranked:
+                return False
+            for worker in ranked:
+                if worker.offer(req):
+                    return True
+            time.sleep(0.002)
+        return False
+
+    # -------------------------------------------------- service bridge
+    def process_batch(self, payloads: List[Any],
+                      timeout_s: float = 30.0,
+                      cost_fn: Optional[Callable[[Any], int]] = None,
+                      session_fn: Optional[Callable[[Any], Optional[str]]] = None,
+                      ) -> List[Any]:
+        """Fan a batch out over the pool and wait for every result — the
+        ``step_fn`` contract, so an ``MLaaSService`` front can target a
+        cluster exactly like a local step (see ``as_step_fn``).
+
+        Per-payload outcomes: the backend result, a :class:`Rejected`, or
+        ``None`` for a failed request (retries exhausted)."""
+        reqs = [self.submit(p,
+                            cost=cost_fn(p) if cost_fn else 1,
+                            session_key=session_fn(p) if session_fn else None,
+                            timeout_s=timeout_s)
+                for p in payloads]
+        return [self.wait(r, timeout=timeout_s + self.requeue_timeout_s)
+                for r in reqs]
+
+    def as_step_fn(self, **kwargs) -> Callable[[List[Any]], List[Any]]:
+        return lambda payloads: self.process_batch(payloads, **kwargs)
+
+    # -------------------------------------------------- lifecycle
+    def stop(self, drain: bool = True) -> None:
+        with self._lock:
+            workers = list(self._replicas.values())
+            self._replicas.clear()
+        for w in workers:
+            if drain:
+                w.drain()
+            else:
+                w.inject_crash()
+                w.join()
+        self._set_pool_gauge()

@@ -22,12 +22,9 @@ from typing import Callable, Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-try:
-    from jax import shard_map
-except ImportError:  # older jax
-    from jax.experimental.shard_map import shard_map
 
 from repro.core.filtering import Compacted, compact_by_score
+from repro.core.sharding import shard_map_compat
 from repro.core import joins
 from repro.models import svm as svm_mod
 
@@ -138,8 +135,8 @@ def make_batch_step(pcfg: PipelineConfig, mesh: Optional[Mesh] = None,
         link_scores=P(None, data_axis), pair_valid=P(None, data_axis),
         claim_index=P(), evid_index=P(data_axis),
         claim_keys=P(), evid_keys=P(data_axis), n_dropped=P())
-    fn = shard_map(body, mesh=mesh, in_specs=(P(), dspec, dspec),
-                   out_specs=out_specs, check_vma=False)
+    fn = shard_map_compat(body, mesh=mesh, in_specs=(P(), dspec, dspec),
+                          out_specs=out_specs)
     return jax.jit(fn)
 
 

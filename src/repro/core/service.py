@@ -1,12 +1,23 @@
 """MLaaS service front (the paper's "service offered to a wide public"):
-a thread-safe request queue with deadline-aware batching in front of any
-step function — the piece between end-users and the two-phase pipeline /
-serving engine.
+a thread-safe request queue with deadline-aware batching in front of either
+
+  * a local batched ``step_fn(list_of_payloads) -> list_of_results``
+    (single-replica: the two-phase pipeline or one serving engine), or
+  * a :class:`repro.cluster.Router`, which fans the batch out over a pool of
+    replica workers (multi-replica cluster).
 
 Batching policy = the mapPartitions trade-off, live: requests are grouped
 until either the batch capacity is reached or the oldest request's slack
 (deadline - now - estimated_step_time) runs out, using the partitioner's
-fitted cost model to estimate step time per batch size.
+fitted cost model to estimate step time per batch size.  The slack test
+itself lives in ``repro.cluster.admission.deadline_slack`` and is shared
+with the cluster's admission controller.
+
+Shutdown contract: ``stop()`` never abandons requests.  By default it
+*flushes* — everything already queued is processed before the loop exits;
+with ``drain=False`` waiting requests complete immediately with an explicit
+``Rejected("shutdown")`` result.  Either way, no caller blocks forever on
+``req.done.wait()``.
 """
 from __future__ import annotations
 
@@ -16,6 +27,8 @@ import threading
 import time
 from typing import Any, Callable, List, Optional
 
+from repro.cluster.admission import Rejected, deadline_slack
+from repro.cluster.metrics import MetricsRegistry
 from repro.core.partitioner import CostModel
 
 
@@ -28,41 +41,92 @@ class ServiceRequest:
     result: Any = None
     missed_deadline: bool = False
 
+    @property
+    def rejected(self) -> bool:
+        return isinstance(self.result, Rejected)
+
 
 class MLaaSService:
-    """Front a batched `step_fn(list_of_payloads) -> list_of_results`."""
+    """Deadline-batching front over a local step_fn or a cluster Router."""
 
-    def __init__(self, step_fn: Callable[[List[Any]], List[Any]],
-                 capacity: int, cost_model: Optional[CostModel] = None,
-                 poll_s: float = 0.002):
-        self.step_fn = step_fn
+    def __init__(self, step_fn: Optional[Callable[[List[Any]], List[Any]]] = None,
+                 capacity: int = 8, cost_model: Optional[CostModel] = None,
+                 poll_s: float = 0.002, router=None,
+                 metrics: Optional[MetricsRegistry] = None):
+        if (step_fn is None) == (router is None):
+            raise ValueError("provide exactly one of step_fn / router")
+        self.router = router
+        self.step_fn = step_fn if step_fn is not None else router.as_step_fn()
         self.capacity = capacity
         self.cost_model = cost_model
         self.poll_s = poll_s
         self.q: "queue.Queue[ServiceRequest]" = queue.Queue()
         self._stop = threading.Event()
+        self._accept_lock = threading.Lock()   # submit vs shutdown-drain
+        self._closed = False                   # loop has begun final drain
+        self._drain_on_stop = True
         self._thread = threading.Thread(target=self._loop, daemon=True)
-        self.stats = {"batches": 0, "requests": 0, "missed": 0,
-                      "sum_batch": 0}
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_batches = self.metrics.counter("service.batches")
+        self._c_requests = self.metrics.counter("service.requests")
+        self._c_missed = self.metrics.counter("service.missed")
+        self._c_sum_batch = self.metrics.counter("service.sum_batch")
+        self._h_latency = self.metrics.histogram("service.latency_s")
 
     def start(self):
         self._thread.start()
         return self
 
-    def stop(self):
+    def stop(self, drain: bool = True, timeout_s: float = 10.0):
+        """Shut down without stranding requests: flush the backlog
+        (``drain=True``) or fail it fast with ``Rejected("shutdown")``."""
+        self._drain_on_stop = drain
         self._stop.set()
-        self._thread.join(timeout=10)
+        self._thread.join(timeout=timeout_s)
 
     # ------------------------------------------------------------------
     def submit(self, payload, timeout_s: float = 10.0) -> ServiceRequest:
         req = ServiceRequest(payload, deadline_s=time.monotonic() + timeout_s,
                              submitted_s=time.monotonic())
         req.done = threading.Event()
-        self.q.put(req)
+        # The lock makes check+enqueue atomic w.r.t. the loop's final drain:
+        # once `_closed` is observed, no request can slip in behind the
+        # drain and block its caller forever.
+        with self._accept_lock:
+            if self._closed or self._stop.is_set():   # fail-fast after stop()
+                req.result = Rejected("shutdown", "service stopped")
+                req.done.set()
+                return req
+            self.q.put(req)
+        self.metrics.gauge("service.queue_depth").set(self.q.qsize())
         return req
 
     def _estimate(self, m: int) -> float:
         return self.cost_model.time(m) if self.cost_model else 0.0
+
+    # ------------------------------------------------------------------
+    def _run_batch(self, batch: List[ServiceRequest]):
+        try:
+            results = self.step_fn([r.payload for r in batch])
+        except Exception as e:
+            # a backend failure must not kill the loop (stranding every
+            # later request) nor strand this batch: fail it explicitly
+            self.metrics.counter("service.step_errors").inc()
+            err = Rejected("step_error", repr(e))
+            for r in batch:
+                r.result = err
+                r.done.set()
+            return
+        t_done = time.monotonic()
+        self._c_batches.inc()
+        self._c_requests.inc(len(batch))
+        self._c_sum_batch.inc(len(batch))
+        for r, res in zip(batch, results):
+            r.result = res
+            r.missed_deadline = t_done > r.deadline_s
+            self._c_missed.inc(int(r.missed_deadline))
+            self._h_latency.observe(t_done - r.submitted_s)
+            r.done.set()
 
     def _loop(self):
         pending: List[ServiceRequest] = []
@@ -77,22 +141,38 @@ class MLaaSService:
                 continue
             now = time.monotonic()
             full = len(pending) >= self.capacity
-            oldest_slack = min(r.deadline_s for r in pending) - now \
-                - self._estimate(len(pending))
+            oldest_slack = deadline_slack(min(r.deadline_s for r in pending),
+                                          now, self._estimate(len(pending)))
             if full or oldest_slack <= self.poll_s * 2:
                 batch, pending = pending[:self.capacity], pending[self.capacity:]
-                results = self.step_fn([r.payload for r in batch])
-                t_done = time.monotonic()
-                self.stats["batches"] += 1
-                self.stats["requests"] += len(batch)
-                self.stats["sum_batch"] += len(batch)
-                for r, res in zip(batch, results):
-                    r.result = res
-                    r.missed_deadline = t_done > r.deadline_s
-                    self.stats["missed"] += int(r.missed_deadline)
-                    r.done.set()
+                self._run_batch(batch)
+        # ---- shutdown: nothing may be left behind -----------------------
+        with self._accept_lock:
+            self._closed = True            # later submits fail fast
+            try:
+                while True:
+                    pending.append(self.q.get_nowait())
+            except queue.Empty:
+                pass
+        if self._drain_on_stop:
+            while pending:
+                batch, pending = pending[:self.capacity], pending[self.capacity:]
+                self._run_batch(batch)
+        else:
+            shutdown = Rejected("shutdown", "service stopped before dispatch")
+            for r in pending:
+                r.result = shutdown
+                r.done.set()
 
     # ------------------------------------------------------------------
+    @property
+    def stats(self) -> dict:
+        """Legacy counter view (kept for existing callers/tests)."""
+        return {"batches": self._c_batches.value,
+                "requests": self._c_requests.value,
+                "missed": self._c_missed.value,
+                "sum_batch": self._c_sum_batch.value}
+
     def mean_batch(self) -> float:
-        b = self.stats["batches"]
-        return self.stats["sum_batch"] / b if b else 0.0
+        b = self._c_batches.value
+        return self._c_sum_batch.value / b if b else 0.0

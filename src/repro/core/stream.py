@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster.metrics import MetricsRegistry
 from repro.core.filtering import Compacted, compact_by_score
 from repro.core import joins
 from repro.core.pipeline import PipelineConfig, PipelineOut
@@ -132,14 +133,19 @@ class StreamRuntime:
     jitted step; tracks per-micro-batch busy time (fall-behind detection)."""
 
     def __init__(self, models, pcfg: PipelineConfig, scfg: StreamConfig,
-                 checkpointer=None, checkpoint_every: int = 0):
+                 checkpointer=None, checkpoint_every: int = 0,
+                 step_fn=None, metrics: Optional[MetricsRegistry] = None):
         self.models = models
         self.pcfg, self.scfg = pcfg, scfg
-        self.step = make_stream_step(pcfg, scfg)
+        # step_fn lets N cluster replicas share one jitted step (identical
+        # pcfg/scfg) instead of paying one XLA compile per replica
+        self.step = step_fn if step_fn is not None else \
+            make_stream_step(pcfg, scfg)
         self.state = init_stream_state(scfg, pcfg)
         self.stats: List[MicrobatchStats] = []
         self.checkpointer = checkpointer
         self.checkpoint_every = checkpoint_every
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
 
     def process_microbatch(self, X: np.ndarray, keys: np.ndarray,
                            ts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -173,6 +179,12 @@ class StreamRuntime:
 
         mb_id = int(self.state.microbatch_id)
         self.stats.append(MicrobatchStats(mb_id, total, busy, n_links))
+        self.metrics.counter("stream.microbatches").inc()
+        self.metrics.counter("stream.instances").inc(total)
+        self.metrics.counter("stream.links").inc(n_links)
+        self.metrics.histogram("stream.busy_s").observe(busy)
+        self.metrics.gauge("stream.falling_behind").set(
+            float(self.falling_behind()))
         if self.checkpointer and self.checkpoint_every and \
                 mb_id % self.checkpoint_every == 0:
             self.checkpointer.save(mb_id, {"state": self.state})

@@ -1,8 +1,13 @@
-"""Production serving driver: continuous-batching engine + the MLaaS
-service front (deadline-aware request queue).
+"""Production serving driver: continuous-batching engine(s) + the MLaaS
+request path.  With ``--replicas N`` (N > 1) requests travel through the
+cluster layer — a Router fanning out over N engine replicas (each with its
+own decode slots/caches, sharing one set of weights) with admission control
+and unified metrics.
 
     PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b \
         --requests 8 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --replicas 2 \
+        --router-policy least_loaded --requests 8
 """
 from __future__ import annotations
 
@@ -12,10 +17,13 @@ import time
 import jax
 import numpy as np
 
+from repro.cluster import (AdmissionConfig, AdmissionController,
+                           EngineBackend, MetricsRegistry, POLICIES,
+                           ReplicaConfig, Router)
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import reduced as reduce_cfg
 from repro.models import api
-from repro.serving import Engine, ServeConfig
+from repro.serving import Engine, ServeConfig, make_engine_fns
 
 
 def main(argv=None):
@@ -27,22 +35,58 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the cluster router")
+    ap.add_argument("--router-policy", default="round_robin",
+                    choices=list(POLICIES))
+    ap.add_argument("--max-queue", type=int, default=4096,
+                    help="admission control: global queued-cost bound")
     args = ap.parse_args(argv)
 
     cfg = reduce_cfg(get_config(args.arch))
     params, _ = api.init(jax.random.PRNGKey(0), cfg)
-    eng = Engine(params, cfg, ServeConfig(max_len=args.max_len,
-                                          slots=args.slots))
+    scfg = ServeConfig(max_len=args.max_len, slots=args.slots)
     rng = np.random.RandomState(args.seed)
-    reqs = [eng.submit(rng.randint(0, cfg.vocab,
-                                   size=rng.randint(4, 16)).astype(np.int32),
-                       max_new=args.max_new) for _ in range(args.requests)]
-    t0 = time.perf_counter()
-    eng.run_until_drained()
-    wall = time.perf_counter() - t0
-    toks = sum(len(r.out_tokens) for r in reqs)
-    lats = [r.done_t - r.submit_t for r in reqs]
-    print(f"[serve] arch={args.arch} reqs={len(reqs)} tokens={toks} "
+    prompts = [rng.randint(0, cfg.vocab,
+                           size=rng.randint(4, 16)).astype(np.int32)
+               for _ in range(args.requests)]
+
+    if args.replicas <= 1:
+        eng = Engine(params, cfg, scfg)
+        reqs = [eng.submit(p, max_new=args.max_new) for p in prompts]
+        t0 = time.perf_counter()
+        eng.run_until_drained()
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in reqs)
+        lats = [r.done_t - r.submit_t for r in reqs]
+    else:
+        metrics = MetricsRegistry()
+        router = Router(policy=args.router_policy, metrics=metrics,
+                        admission=AdmissionController(
+                            AdmissionConfig(max_queue_cost=args.max_queue),
+                            metrics))
+        shared_fns = make_engine_fns(cfg, scfg)
+        for _ in range(args.replicas):
+            router.add_replica(
+                EngineBackend(Engine(params, cfg, scfg, metrics=metrics,
+                                     shared_fns=shared_fns)),
+                ReplicaConfig(max_batch=args.slots))
+        t0 = time.perf_counter()
+        creqs = [router.submit((p, args.max_new), cost=args.max_new,
+                               session_key=str(i), timeout_s=600.0)
+                 for i, p in enumerate(prompts)]
+        outs = [router.wait(r, timeout=600.0) for r in creqs]
+        wall = time.perf_counter() - t0
+        router.stop()
+        toks = sum(len(o) for o in outs if isinstance(o, list))
+        lats = [r.finished_s - r.submitted_s for r in creqs]
+        snap = metrics.snapshot()
+        print(f"[cluster] replicas={args.replicas} "
+              f"policy={args.router_policy} "
+              f"completed={snap['router.completed']:.0f} "
+              f"shed={snap.get('admission.shed_queue_full', 0):.0f}")
+
+    print(f"[serve] arch={args.arch} reqs={len(prompts)} tokens={toks} "
           f"tok/s={toks / wall:.1f} p50={np.median(lats):.2f}s "
           f"p99={np.percentile(lats, 99):.2f}s")
 

@@ -202,10 +202,7 @@ def flash_attention_jnp(q, k, v, *, causal: bool = True, window: int = 0,
 # "ship the model once, split the instances" — see EXPERIMENTS.md §Perf.
 def seqshard_attn_forward(params, x, cfg, *, kind: str, mesh, batch_axes):
     from jax.sharding import PartitionSpec as P
-    try:
-        from jax import shard_map
-    except ImportError:
-        from jax.experimental.shard_map import shard_map
+    from repro.core.sharding import shard_map_compat
 
     B, S, _ = x.shape
     n = mesh.shape["model"]
@@ -246,12 +243,11 @@ def seqshard_attn_forward(params, x, cfg, *, kind: str, mesh, batch_axes):
         out = out.reshape(xl.shape[0], S_loc, -1) @ p["wo"]
         return out, k, v
 
-    fn = shard_map(local_fn, mesh=mesh,
-                   in_specs=(P(), P(b_ax, "model", None)),
-                   out_specs=(P(b_ax, "model", None),
-                              P(b_ax, "model", None, None),
-                              P(b_ax, "model", None, None)),
-                   check_vma=False)
+    fn = shard_map_compat(local_fn, mesh=mesh,
+                          in_specs=(P(), P(b_ax, "model", None)),
+                          out_specs=(P(b_ax, "model", None),
+                                     P(b_ax, "model", None, None),
+                                     P(b_ax, "model", None, None)))
     return fn(params, x)
 
 

@@ -1,1 +1,2 @@
-from repro.serving.engine import Engine, Request, ServeConfig  # noqa: F401
+from repro.serving.engine import (Engine, Request, ServeConfig,  # noqa: F401
+                                  make_engine_fns)

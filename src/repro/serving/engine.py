@@ -1,6 +1,7 @@
 """LM serving engine with continuous batching.
 
-This is the paper's two-phase pipeline read onto LM serving (DESIGN.md §4):
+This is the paper's two-phase pipeline read onto LM serving (see
+docs/DESIGN.md, "Two-phase pipeline -> serving"):
 prefill is the per-instance *map* (each request independent), the batcher is
 the *aggregation* (requests meet in a shared decode batch), and the decode
 step is the parallel post-aggregation map.  Weights are placed once
@@ -13,6 +14,7 @@ power-of-two buckets to bound recompilation.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
@@ -21,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster.metrics import MetricsRegistry
 from repro.models import api, transformer as tfm
 
 
@@ -54,8 +57,18 @@ def _insert_slot(big, small, slot: int):
         lambda b, s: b.at[:, slot:slot + 1].set(s.astype(b.dtype)), big, small)
 
 
+def make_engine_fns(cfg, scfg: ServeConfig):
+    """Jitted (decode_fn, prefill_cache) shareable by N engine replicas with
+    identical cfg/scfg — one XLA compile for the whole pool instead of one
+    per replica (each Engine otherwise jits its own fresh lambdas)."""
+    decode = jax.jit(lambda p, t, c, pos: tfm.decode_step(p, cfg, t, c, pos))
+    return decode, {}
+
+
 class Engine:
-    def __init__(self, params, cfg, scfg: ServeConfig):
+    def __init__(self, params, cfg, scfg: ServeConfig,
+                 metrics: Optional[MetricsRegistry] = None,
+                 shared_fns=None):
         self.params, self.cfg, self.scfg = params, cfg, scfg
         if cfg.family == "encdec":
             raise NotImplementedError("Engine serves decoder-LM families")
@@ -64,13 +77,16 @@ class Engine:
         self.active: List[Optional[Request]] = [None] * scfg.slots
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
-        self._decode = jax.jit(
-            lambda p, t, c, pos: tfm.decode_step(p, cfg, t, c, pos))
-        self._prefill_cache = {}
+        self._decode, self._prefill_cache = shared_fns if shared_fns else \
+            make_engine_fns(cfg, scfg)
+        # monotonic request ids: never reused, regardless of how many
+        # requests are queued/active/finished at submit time
+        self._rids = itertools.count(1000)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int) -> Request:
-        req = Request(rid=len(self.finished) + len(self.queue) + 1000,
+        req = Request(rid=next(self._rids),
                       prompt=np.asarray(prompt, np.int32), max_new=max_new,
                       submit_t=time.perf_counter())
         self.queue.append(req)
@@ -125,6 +141,13 @@ class Engine:
                 req.done_t = time.perf_counter()
                 self.finished.append(req)
                 self.active[s] = None
+                self.metrics.counter("engine.requests").inc()
+                self.metrics.counter("engine.tokens").inc(len(req.out_tokens))
+                self.metrics.histogram("engine.ttft_s").observe(
+                    req.first_token_t - req.submit_t)
+                self.metrics.histogram("engine.latency_s").observe(
+                    req.done_t - req.submit_t)
+        self.metrics.counter("engine.steps").inc()
         return True
 
     def run_until_drained(self, max_steps: int = 10_000):

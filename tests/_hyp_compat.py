@@ -1,0 +1,74 @@
+"""Hypothesis compatibility shim for the property tests.
+
+If ``hypothesis`` is installed, re-export the real ``given``/``settings``/
+``st``.  Otherwise provide a tiny deterministic fallback that runs each
+property test ``max_examples`` times on seeded draws (boundary values first,
+then uniform samples) so the suite still collects and exercises the
+properties without the optional dependency.
+"""
+from __future__ import annotations
+
+import functools
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover - env
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, boundary, sample):
+            self._boundary = list(boundary)   # always-tried edge cases
+            self._sample = sample             # rng -> value
+
+        def example(self, rng, i: int):
+            if i < len(self._boundary):
+                return self._boundary[i]
+            return self._sample(rng)
+
+    class _St:
+        @staticmethod
+        def integers(lo, hi):
+            lo, hi = int(lo), int(hi)
+            return _Strategy(
+                [lo, hi],
+                lambda rng: int(lo + rng.rand() * (hi - lo + 1)) if hi > lo
+                else lo)
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy([float(lo), float(hi)],
+                             lambda rng: float(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(seq[:1], lambda rng: seq[rng.randint(len(seq))])
+
+    st = _St()
+
+    def given(*strategies):
+        def deco(fn):
+            # NB: no functools.wraps — the wrapper must present a zero-arg
+            # signature or pytest treats the strategy params as fixtures.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", 10)
+                rng = np.random.RandomState(0)
+                for i in range(n):
+                    vals = [s.example(rng, i) for s in strategies]
+                    fn(*vals)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    def settings(max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

@@ -7,7 +7,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.optim.compression import (CompressedGrad, compression_ratio,
                                      dequantize, quantize, tree_dequantize,
@@ -64,13 +64,11 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-try:
-    from jax import shard_map
-except ImportError:
-    from jax.experimental.shard_map import shard_map
+from repro.core.sharding import shard_map_compat
 from repro.optim.compression import quantize, compressed_psum, dequantize
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((8,), ("data",))
 G = jax.random.normal(jax.random.PRNGKey(0), (8, 512))   # per-worker grads
 
 def reduce_fn(g):
@@ -78,8 +76,8 @@ def reduce_fn(g):
     val, _ = compressed_psum(c, "data")
     return val[None] / 8.0
 
-fn = shard_map(reduce_fn, mesh=mesh, in_specs=(P("data", None),),
-               out_specs=P("data", None), check_vma=False)
+fn = shard_map_compat(reduce_fn, mesh=mesh, in_specs=(P("data", None),),
+                      out_specs=P("data", None))
 out = jax.jit(fn)(G)
 true = jnp.mean(G, axis=0)
 err = float(jnp.max(jnp.abs(out[0] - true)))

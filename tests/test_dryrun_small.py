@@ -14,8 +14,8 @@ import sys, json
 import jax
 from repro.launch import dryrun_lib
 
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((4, 4), ("data", "model"))
 arch, shape = sys.argv[1], sys.argv[2]
 res = dryrun_lib.run_cell(arch, shape, mesh)
 print("RESULT " + json.dumps(res.to_json()))
