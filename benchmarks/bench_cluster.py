@@ -1,6 +1,6 @@
 """Cluster scaling: throughput vs. replica count (1 -> 4) for the two
 serving workloads, through the full front door (router + admission +
-replica inboxes).
+replica inboxes), under both replica transports.
 
 Workload model.  An MLaaS request is not just device compute: the paper's
 service *reads each document from storage* (Gutenberg essays on disk/HDFS),
@@ -10,25 +10,33 @@ and a replica pool overlaps one request's ingest with another's compute.
 Ingest is modeled as a host stall of ``--ingest-ms`` per micro-batch
 (``StreamBackend.fetch``) so the benchmark is reproducible.
 
-Container caveat (same as ``benchmarks/common.py``): this box has 2 CPU
-cores and XLA-CPU already parallelizes a *single* jitted call across them,
-so added replicas cannot multiply raw device FLOPs here.  What scales — and
-what this benchmark measures — is the end-to-end service path: ingest,
-dispatch, and compute overlapped across replicas.  On real multi-host pools
-the same harness also multiplies compute.
+Transports.  ``thread`` replicas share one Python process and one JAX
+runtime: what scales is the ingest/dispatch/compute *overlap*, not device
+FLOPs (XLA-CPU already parallelizes a single jitted call across this box's
+2 cores).  ``process`` replicas are spawned workers with RPC inboxes and
+independent JAX runtimes — the configuration where adding replicas can
+scale compute itself on real multi-core/TPU hosts.  Comparing the two
+columns in ``BENCH_cluster.json`` is how the compute-scaling claim is
+tracked across PRs.
 
-    PYTHONPATH=src python -m benchmarks.bench_cluster [--quick] [--lm]
+    PYTHONPATH=src python -m benchmarks.bench_cluster [--quick] [--no-lm] \
+        [--transport {thread,process,both}]
+
+Machine-readable results land in ``BENCH_cluster.json`` at the repo root.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import numpy as np
 
 from repro.cluster import (AdmissionConfig, AdmissionController,
                            EngineBackend, MetricsRegistry, ReplicaConfig,
-                           Router, Status, StreamBackend)
+                           Router, Status, StreamBackend, engine_spec,
+                           stream_spec)
 from repro.core.pipeline import PipelineConfig
 from repro.core.stream import StreamConfig, StreamRuntime, make_stream_step
 from repro.data.text import corpus_arrays, margot_models, synthetic_corpus
@@ -36,28 +44,57 @@ from repro.data.text import corpus_arrays, margot_models, synthetic_corpus
 from benchmarks.common import emit
 
 REPLICAS = (1, 2, 4)
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_cluster.json")
 
 
-def _make_router(n_replicas: int, backend_factory, metrics, max_batch=4):
+def _make_router(n_replicas: int, metrics, max_batch=4,
+                 backend_factory=None, spec=None, transport="thread"):
     router = Router(policy="least_loaded", metrics=metrics,
                     admission=AdmissionController(
                         AdmissionConfig(max_queue_cost=1 << 16), metrics))
+    rcfg = ReplicaConfig(inbox_capacity=1024, max_batch=max_batch)
     for _ in range(n_replicas):
-        router.add_replica(backend_factory(),
-                           ReplicaConfig(inbox_capacity=1024,
-                                         max_batch=max_batch))
+        if transport == "process":
+            router.add_replica(spec=spec, cfg=rcfg, transport="process")
+        else:
+            router.add_replica(backend_factory(), rcfg)
     return router
 
 
 # ----------------------------------------------------------------------
-def bench_svm_stream(n_mb: int, mb_size: int, ingest_s: float):
+def bench_svm_stream(n_mb: int, mb_size: int, ingest_s: float,
+                     transport: str = "thread", replicas=REPLICAS):
     pcfg = PipelineConfig(feat_dim=256, claim_capacity=64, evid_capacity=128)
     scfg = StreamConfig(period=1.0, capacity=mb_size, scope="window",
                         window=10.0, ring_capacity=512)
-    models, _ = margot_models(pcfg)
     docs = synthetic_corpus(8, 64, seed=1)
     X, keys, _ = corpus_arrays(docs, dim=pcfg.feat_dim)
-    shared_step = make_stream_step(pcfg, scfg)   # one compile for all pools
+
+    backend_factory = spec = None
+    if transport == "process":
+        # workers rebuild the runtime from config alone (their own compile,
+        # their own JAX runtime) — the models derive deterministically
+        spec = stream_spec(feat_dim=pcfg.feat_dim,
+                           claim_capacity=pcfg.claim_capacity,
+                           evid_capacity=pcfg.evid_capacity,
+                           period=scfg.period, capacity=scfg.capacity,
+                           scope=scfg.scope, window=scfg.window,
+                           ring_capacity=scfg.ring_capacity,
+                           ingest_ms=ingest_s * 1e3)
+    else:
+        models, _ = margot_models(pcfg)
+        shared_step = make_stream_step(pcfg, scfg)  # one compile, all pools
+
+        def fetch(payload):                  # the storage read + parse stage
+            if ingest_s > 0:
+                time.sleep(ingest_s)
+            return payload
+
+        def backend_factory():
+            return StreamBackend(
+                StreamRuntime(models, pcfg, scfg, step_fn=shared_step),
+                fetch=fetch)
 
     rng = np.random.RandomState(0)
 
@@ -67,22 +104,16 @@ def bench_svm_stream(n_mb: int, mb_size: int, ingest_s: float):
                                            endpoint=False).astype(np.float32)
         return X[idx], keys[idx], ts
 
-    def fetch(payload):                      # the storage read + parse stage
-        if ingest_s > 0:
-            time.sleep(ingest_s)
-        return payload
-
     payloads = [make_mb(i) for i in range(n_mb)]
     results = {}
-    for n in REPLICAS:
+    for n in replicas:
         metrics = MetricsRegistry()
-        router = _make_router(
-            n, lambda: StreamBackend(
-                StreamRuntime(models, pcfg, scfg, step_fn=shared_step),
-                fetch=fetch),
-            metrics, max_batch=1)
-        # warm the jit cache outside the timed window
-        router.process_batch(payloads[:1], timeout_s=120.0)
+        router = _make_router(n, metrics, max_batch=1,
+                              backend_factory=backend_factory, spec=spec,
+                              transport=transport)
+        # warm every worker's jit cache outside the timed window (process
+        # workers each own a compile; least_loaded spreads the warm batch)
+        router.process_batch([payloads[0]] * n, timeout_s=300.0)
         t0 = time.perf_counter()
         reqs = [router.submit(p, cost=mb_size, timeout_s=600.0)
                 for p in payloads]
@@ -94,14 +125,16 @@ def bench_svm_stream(n_mb: int, mb_size: int, ingest_s: float):
         tput = n_mb * mb_size / wall
         results[n] = tput
         snap = metrics.snapshot()
-        emit(f"cluster/svm-stream/replicas={n}", 1e6 * wall / (n_mb * mb_size),
-             f"tput={tput:.0f}inst/s speedup={tput / results[1]:.2f}x "
+        emit(f"cluster/svm-stream/{transport}/replicas={n}",
+             1e6 * wall / (n_mb * mb_size),
+             f"tput={tput:.0f}inst/s speedup={tput / results[min(results)]:.2f}x "
              f"p95={snap['router.latency_s.p95'] * 1e3:.0f}ms")
     return results
 
 
 # ----------------------------------------------------------------------
-def bench_lm_engine(n_requests: int, max_new: int, ingest_s: float):
+def bench_lm_engine(n_requests: int, max_new: int, ingest_s: float,
+                    transport: str = "thread", replicas=REPLICAS):
     import jax
     from repro.configs import get_config
     from repro.configs.base import reduced
@@ -110,33 +143,45 @@ def bench_lm_engine(n_requests: int, max_new: int, ingest_s: float):
 
     from repro.serving.engine import make_engine_fns
 
-    cfg = reduced(get_config("internlm2-1.8b"))
-    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    arch = "internlm2-1.8b"
+    cfg = reduced(get_config(arch))
     scfg = ServeConfig(max_len=64, slots=2)
-    shared_fns = make_engine_fns(cfg, scfg)  # one compile for the whole pool
     rng = np.random.RandomState(0)
     # fixed prompt length -> a single prefill compile (shared cache)
     prompts = [rng.randint(0, cfg.vocab, size=8).astype(np.int32)
                for _ in range(n_requests)]
-    # warm the shared jit cache outside every timed window
-    warm = Engine(params, cfg, scfg, shared_fns=shared_fns)
-    warm.submit(prompts[0], max_new=2)
-    warm.run_until_drained()
 
-    class IngestEngineBackend(EngineBackend):
-        def process(self, payloads):
-            if ingest_s > 0:
-                time.sleep(ingest_s * len(payloads))   # per-request ingest
-            return super().process(payloads)
+    spec = backend_factory = None
+    if transport == "process":
+        spec = engine_spec(arch=arch, max_len=scfg.max_len, slots=scfg.slots,
+                           reduce=True, seed=0, ingest_ms=ingest_s * 1e3)
+    else:
+        params, _ = api.init(jax.random.PRNGKey(0), cfg)
+        shared_fns = make_engine_fns(cfg, scfg)  # one compile for the pool
+        # warm the shared jit cache outside every timed window
+        warm = Engine(params, cfg, scfg, shared_fns=shared_fns)
+        warm.submit(prompts[0], max_new=2)
+        warm.run_until_drained()
+
+        class IngestEngineBackend(EngineBackend):
+            def process(self, payloads):
+                if ingest_s > 0:
+                    time.sleep(ingest_s * len(payloads))  # per-request ingest
+                return super().process(payloads)
+
+        def backend_factory():
+            return IngestEngineBackend(
+                Engine(params, cfg, scfg, shared_fns=shared_fns))
 
     results = {}
-    for n in REPLICAS:
+    for n in replicas:
         metrics = MetricsRegistry()
-        router = _make_router(
-            n, lambda: IngestEngineBackend(
-                Engine(params, cfg, scfg, metrics=metrics,
-                       shared_fns=shared_fns)),
-            metrics, max_batch=scfg.slots)
+        router = _make_router(n, metrics, max_batch=scfg.slots,
+                              backend_factory=backend_factory, spec=spec,
+                              transport=transport)
+        if transport == "process":
+            # per-worker prefill/decode compile happens on first contact
+            router.process_batch([(prompts[0], 2)] * n, timeout_s=600.0)
         t0 = time.perf_counter()
         reqs = [router.submit((p, max_new), cost=max_new, timeout_s=600.0)
                 for p in prompts]
@@ -146,22 +191,58 @@ def bench_lm_engine(n_requests: int, max_new: int, ingest_s: float):
         toks = sum(len(o) for o in outs if isinstance(o, list))
         tput = toks / wall
         results[n] = tput
-        emit(f"cluster/lm-engine/replicas={n}", 1e6 * wall / max(toks, 1),
-             f"tput={tput:.1f}tok/s speedup={tput / results[1]:.2f}x")
+        emit(f"cluster/lm-engine/{transport}/replicas={n}",
+             1e6 * wall / max(toks, 1),
+             f"tput={tput:.1f}tok/s "
+             f"speedup={tput / results[min(results)]:.2f}x")
     return results
 
 
 # ----------------------------------------------------------------------
-def run(quick: bool = False, lm: bool = True, ingest_ms: float = 4.0):
+def run(quick: bool = False, lm: bool = True, ingest_ms: float = 4.0,
+        transports=("thread", "process"), json_path: str = JSON_PATH):
     ingest_s = ingest_ms * 1e-3
     n_mb = 24 if quick else 64
-    svm = bench_svm_stream(n_mb=n_mb, mb_size=256, ingest_s=ingest_s)
-    if svm[4] < 2.0 * svm[1]:
-        print(f"# WARNING: 4-replica speedup only "
-              f"{svm[4] / svm[1]:.2f}x (target >= 2x)")
-    if lm:
-        bench_lm_engine(n_requests=8 if quick else 16,
-                        max_new=4 if quick else 8, ingest_s=ingest_s)
+    replicas = (1, 2) if quick else REPLICAS
+    # meta is keyed by transport (like the result sections) so a partial
+    # run's parameters never misdescribe another transport's columns
+    meta = {"quick": quick, "ingest_ms": ingest_ms, "n_mb": n_mb,
+            "replicas": list(replicas), "cpu_count": os.cpu_count(),
+            "unix_time": time.time()}
+    out = {"meta": {tr: dict(meta) for tr in transports},
+           "svm_stream": {}, "lm_engine": {}}
+    for tr in transports:
+        svm = bench_svm_stream(n_mb=n_mb, mb_size=256, ingest_s=ingest_s,
+                               transport=tr, replicas=replicas)
+        out["svm_stream"][tr] = {str(k): v for k, v in svm.items()}
+        top = max(replicas)
+        if not quick and svm[top] < 2.0 * svm[1]:
+            print(f"# WARNING: {tr} {top}-replica speedup only "
+                  f"{svm[top] / svm[1]:.2f}x (target >= 2x)")
+        if lm:
+            eng = bench_lm_engine(n_requests=8 if quick else 16,
+                                  max_new=4 if quick else 8,
+                                  ingest_s=ingest_s, transport=tr,
+                                  replicas=replicas)
+            out["lm_engine"][tr] = {str(k): v for k, v in eng.items()}
+    if json_path:
+        # merge into any existing file: a partial run (--quick, one
+        # --transport) must update only its own columns, not clobber the
+        # cross-transport trajectory this file exists to track
+        if os.path.exists(json_path):
+            try:
+                with open(json_path) as f:
+                    prev = json.load(f)
+            except (OSError, ValueError):
+                prev = {}
+            for sec in ("svm_stream", "lm_engine", "meta"):
+                merged = dict(prev.get(sec, {}))
+                merged.update(out[sec])
+                out[sec] = merged
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
+    return out
 
 
 if __name__ == "__main__":
@@ -171,5 +252,11 @@ if __name__ == "__main__":
                     help="skip the LM engine sweep (per-replica jit compiles)")
     ap.add_argument("--ingest-ms", type=float, default=4.0,
                     help="modeled per-micro-batch document ingest stall")
+    ap.add_argument("--transport", default="both",
+                    choices=("thread", "process", "both"),
+                    help="which replica transports to sweep")
     args = ap.parse_args()
-    run(quick=args.quick, lm=args.lm, ingest_ms=args.ingest_ms)
+    trs = ("thread", "process") if args.transport == "both" \
+        else (args.transport,)
+    run(quick=args.quick, lm=args.lm, ingest_ms=args.ingest_ms,
+        transports=trs)

@@ -21,7 +21,7 @@ def main() -> None:
 
     from benchmarks import (bench_batch_scalability, bench_stream_rate,
                             bench_filter_fraction, bench_model_size,
-                            bench_roofline, bench_serving)
+                            bench_roofline, bench_serving, bench_cluster)
     suites = [
         ("bench_batch_scalability", bench_batch_scalability),
         ("bench_stream_rate", bench_stream_rate),
@@ -29,6 +29,8 @@ def main() -> None:
         ("bench_model_size", bench_model_size),
         ("bench_roofline", bench_roofline),
         ("bench_serving", bench_serving),
+        # writes BENCH_cluster.json at the repo root (perf trajectory)
+        ("bench_cluster", bench_cluster),
     ]
     print("name,us_per_call,derived")
     failed = []

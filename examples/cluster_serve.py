@@ -7,21 +7,26 @@ Shows the three cluster behaviours on one trace:
      ``Rejected`` result (no silent deadline misses);
   3. when the burst passes, idle replicas are drained back down.
 
-    PYTHONPATH=src python examples/cluster_serve.py
+Replica placement is pluggable: ``--transport process`` places each replica
+in a spawned worker process (its own JAX runtime, RPC inbox) — the
+autoscaler then scales *worker processes* with zero code change.
+
+    PYTHONPATH=src python examples/cluster_serve.py [--transport process]
 """
+import argparse
 import time
 
 import numpy as np
 
 from repro.cluster import (AdmissionConfig, AdmissionController, Autoscaler,
                            AutoscalerConfig, MetricsRegistry, ReplicaConfig,
-                           Router, Status, StreamBackend)
+                           Router, Status, StreamBackend, stream_spec)
 from repro.core.pipeline import PipelineConfig
 from repro.core.stream import StreamConfig, StreamRuntime, make_stream_step
 from repro.data.text import corpus_arrays, margot_models, synthetic_corpus
 
 
-def main():
+def main(transport: str = "thread"):
     pcfg = PipelineConfig(feat_dim=256, claim_capacity=64, evid_capacity=128)
     scfg = StreamConfig(period=1.0, capacity=128, scope="window", window=10.0)
     models, _ = margot_models(pcfg)
@@ -34,17 +39,27 @@ def main():
     router = Router(policy="least_loaded", admission=admission, metrics=metrics)
     rcfg = ReplicaConfig(inbox_capacity=64, max_batch=1)
 
-    def backend_factory():
-        rt = StreamRuntime(models, pcfg, scfg, step_fn=shared_step)
-        return StreamBackend(rt, fetch=lambda p: (time.sleep(0.01), p)[1])
-
-    router.add_replica(backend_factory(), rcfg)
+    if transport == "process":
+        # worker processes rebuild the runtime from this serializable spec
+        def backend_factory():
+            return stream_spec(feat_dim=pcfg.feat_dim,
+                               claim_capacity=pcfg.claim_capacity,
+                               evid_capacity=pcfg.evid_capacity,
+                               capacity=scfg.capacity, window=scfg.window,
+                               ingest_ms=10.0)
+        router.add_replica(spec=backend_factory(), cfg=rcfg,
+                           transport="process")
+    else:
+        def backend_factory():
+            rt = StreamRuntime(models, pcfg, scfg, step_fn=shared_step)
+            return StreamBackend(rt, fetch=lambda p: (time.sleep(0.01), p)[1])
+        router.add_replica(backend_factory(), rcfg)
     scaler = Autoscaler(
         router, backend_factory,
         AutoscalerConfig(min_replicas=1, max_replicas=4, scale_up_depth=4.0,
                          scale_down_depth=0.5, cooldown_s=0.2,
                          idle_ticks_to_drain=6, replica_cfg=rcfg),
-        metrics=metrics)
+        metrics=metrics, transport=transport)
 
     rng = np.random.RandomState(0)
 
@@ -85,4 +100,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--transport", default="thread",
+                    choices=("thread", "process"))
+    main(transport=ap.parse_args().transport)

@@ -1,24 +1,32 @@
 """Multi-replica serving cluster: the layer that turns one engine/stream
 into a service for "evergrowing user bases" (paper §1/§3).
 
-    Router (dispatch policies)  ->  N x ReplicaWorker (bounded inboxes)
-      ^ admission control              each owning one backend:
-      ^ autoscaler                     LM Engine | SVM stream | step fn
-      v unified MetricsRegistry across every component
+    Router (dispatch policies)  ->  N x Transport (bounded inboxes)
+      ^ admission control              thread replica (LocalTransport) or
+      ^ autoscaler                     worker process w/ RPC inbox
+      v unified MetricsRegistry        (ProcessTransport), each owning one
+        (+ worker-side snapshots)      backend: LM Engine | SVM stream | fn
 
 Layering: ``repro.core.service``/``repro.core.stream`` import the leaf
 modules here (metrics, admission), so cluster modules must not import
 ``repro.core.service``/``repro.core.stream`` back — backends are passed in
-as objects (see ``replica.StreamBackend``) precisely to keep this acyclic.
+as objects (``replica.StreamBackend``) or rebuilt from a serializable
+``backends.BackendSpec`` inside worker processes, precisely to keep this
+acyclic.
 """
 from repro.cluster.admission import (AdmissionConfig,  # noqa: F401
                                      AdmissionController, Rejected,
                                      deadline_slack)
 from repro.cluster.autoscaler import (Autoscaler, AutoscalerConfig,  # noqa: F401
                                       ScaleEvent)
+from repro.cluster.backends import (BackendSpec, echo_spec,  # noqa: F401
+                                    engine_spec, stream_spec)
 from repro.cluster.metrics import (Counter, Gauge, Histogram,  # noqa: F401
-                                   MetricsRegistry)
+                                   MetricsRegistry, merge_snapshots)
 from repro.cluster.replica import (ClusterRequest, EngineBackend,  # noqa: F401
                                    FnBackend, ReplicaConfig, ReplicaCrash,
-                                   ReplicaWorker, Status, StreamBackend)
+                                   Status, StreamBackend)
 from repro.cluster.router import POLICIES, Router  # noqa: F401
+from repro.cluster.transport import (TRANSPORTS, LocalTransport,  # noqa: F401
+                                     ProcessTransport, ReplicaWorker,
+                                     Transport, make_transport)

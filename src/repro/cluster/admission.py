@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Mapping, Optional
 
 from repro.core.partitioner import CostModel
 from repro.cluster.metrics import MetricsRegistry, null_registry
@@ -49,6 +49,11 @@ class AdmissionConfig:
     max_queue_cost: int = 1024        # bound on queued cost units (≈ requests)
     cost_model: Optional[CostModel] = None
     min_slack_s: float = 0.0          # extra safety margin on the deadline test
+    # Per-backend cost models, keyed by backend kind ("lm", "svm", ...):
+    # an LM token and an SVM row cost very different service time, so one
+    # global model either over-sheds the cheap backend or under-sheds the
+    # expensive one.  Falls back to ``cost_model`` for unknown kinds.
+    cost_models: Optional[Mapping[str, CostModel]] = None
 
 
 class AdmissionController:
@@ -62,16 +67,26 @@ class AdmissionController:
         self._shed_full = self.metrics.counter("admission.shed_queue_full")
         self._shed_deadline = self.metrics.counter("admission.shed_deadline")
 
-    def _estimate(self, queued_cost: int) -> float:
-        cm = self.cfg.cost_model
+    def _model_for(self, kind: Optional[str]) -> Optional[CostModel]:
+        if kind is not None and self.cfg.cost_models:
+            cm = self.cfg.cost_models.get(kind)
+            if cm is not None:
+                return cm
+        return self.cfg.cost_model
+
+    def _estimate(self, queued_cost: int, kind: Optional[str] = None) -> float:
+        cm = self._model_for(kind)
         return cm.time(max(queued_cost, 1)) if cm else 0.0
 
     def decide(self, queued_cost: int, cost: int, deadline_s: float,
-               now: Optional[float] = None) -> Optional[Rejected]:
+               now: Optional[float] = None,
+               kind: Optional[str] = None) -> Optional[Rejected]:
         """Returns None to admit, or a :class:`Rejected` describing the shed.
 
-        ``queued_cost`` is the cluster-wide outstanding cost (router queue
-        depth); ``cost`` the new request's own cost units.
+        ``queued_cost`` is the outstanding cost ahead of this request (the
+        router passes the per-kind queue depth when ``kind`` is given, else
+        cluster-wide); ``cost`` the new request's own cost units; ``kind``
+        selects a per-backend cost model for the deadline test.
         """
         if queued_cost + cost > self.cfg.max_queue_cost:
             self._shed_full.inc()
@@ -79,12 +94,12 @@ class AdmissionController:
                             f"queued={queued_cost} + {cost} > "
                             f"{self.cfg.max_queue_cost}")
         now = time.monotonic() if now is None else now
-        est = self._estimate(queued_cost + cost)
+        est = self._estimate(queued_cost + cost, kind)
         slack = deadline_slack(deadline_s, now, est)
         if slack < self.cfg.min_slack_s:
             self._shed_deadline.inc()
             return Rejected("deadline",
                             f"slack={slack:.4f}s < {self.cfg.min_slack_s}s "
-                            f"(est={est:.4f}s)")
+                            f"(est={est:.4f}s, kind={kind or 'global'})")
         self._admitted.inc()
         return None

@@ -26,6 +26,7 @@ import threading
 import time
 from typing import Callable, List, Optional
 
+from repro.cluster.backends import BackendSpec
 from repro.cluster.metrics import MetricsRegistry, null_registry
 from repro.cluster.replica import ReplicaConfig
 from repro.cluster.router import Router
@@ -56,9 +57,14 @@ class Autoscaler:
                  fall_behind: Optional[Callable[[], bool]] = None,
                  elastic=None, make_mesh: Optional[Callable[[int], object]] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 transport: str = "thread"):
+        # ``backend_factory`` may return a live backend (placed on a thread)
+        # or a serializable ``BackendSpec`` — required when ``transport`` is
+        # "process", where the new replica is a spawned worker.
         self.router = router
         self.backend_factory = backend_factory
+        self.transport = transport
         self.cfg = cfg
         self.fall_behind = fall_behind
         self.elastic = elastic
@@ -102,7 +108,24 @@ class Autoscaler:
             self.elastic.rescale(self.make_mesh(n))
 
     def _scale_up(self, now: float, reason: str) -> ScaleEvent:
-        self.router.add_replica(self.backend_factory(), self.cfg.replica_cfg)
+        # NB: with transport="process" this blocks the tick for the worker
+        # spawn (interpreter + backend build; bounded by
+        # replica_cfg.spawn_timeout_s) and can fail — a failed spawn must
+        # not kill the autoscaler loop, so it becomes an "up_failed" event
+        # and the cooldown backs the retry off.
+        try:
+            made = self.backend_factory()
+            if isinstance(made, BackendSpec):
+                self.router.add_replica(spec=made, cfg=self.cfg.replica_cfg,
+                                        transport=self.transport)
+            else:
+                self.router.add_replica(made, self.cfg.replica_cfg)
+        except Exception as e:          # noqa: BLE001 - spawn/build failure
+            self._last_action_t = now
+            self.metrics.counter("autoscaler.scale_up_failures").inc()
+            ev = ScaleEvent(now, "up_failed", self.router.n_alive(), repr(e))
+            self.events.append(ev)
+            return ev
         n = self.router.n_alive()
         self._replace_weights(n)
         self._last_action_t = now

@@ -1,0 +1,136 @@
+"""Serializable backend specifications.
+
+A thread replica can own any in-process object, but a *worker process* must
+be able to rebuild its backend from scratch after ``spawn`` — so the unit
+of deployment is a :class:`BackendSpec`: a dotted path to a module-level
+builder plus picklable kwargs (config values and a weights *path*, never a
+closure or a live array).  ``spec.build()`` runs on whichever side of the
+process boundary the transport puts it.
+
+Builders for the repo's three backend families live here; anything
+module-level and importable works (tests add their own).  Heavy imports
+(jax, models) happen inside the builders so that spawning a worker for a
+pure-Python backend never pays the jax import.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import time
+from typing import Any, Dict, Optional
+
+# Backend kinds — the admission controller's per-backend cost-model keys.
+KIND_FN = "fn"        # arbitrary step functions (cost unit: requests)
+KIND_LM = "lm"        # LM engine (cost unit: tokens)
+KIND_SVM = "svm"      # SVM stream runtime (cost unit: rows)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """``target`` is ``"module.path:callable"``; ``kwargs`` must pickle.
+
+    ``kind`` tags the backend family for per-backend admission cost models
+    and metrics; it defaults to :data:`KIND_FN`.
+    """
+    target: str
+    kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    kind: str = KIND_FN
+
+    def build(self):
+        mod_name, sep, fn_name = self.target.partition(":")
+        if not sep:
+            raise ValueError(f"BackendSpec target {self.target!r} must be "
+                             f"'module.path:callable'")
+        fn = getattr(importlib.import_module(mod_name), fn_name)
+        return fn(**dict(self.kwargs))
+
+
+# ----------------------------------------------------------------------
+# Builders (module-level: importable from a spawned worker process).
+
+def build_echo(delay_s: float = 0.0, scale: int = 2):
+    """Deterministic test/bench backend: ``payload * scale`` after an
+    optional per-batch stall (models host-side work)."""
+    from repro.cluster.replica import FnBackend
+
+    def step(payloads):
+        if delay_s:
+            time.sleep(delay_s)
+        return [p * scale for p in payloads]
+
+    return FnBackend(step)
+
+
+def build_stream(feat_dim: int = 256, claim_capacity: int = 64,
+                 evid_capacity: int = 128, period: float = 1.0,
+                 capacity: int = 256, scope: str = "window",
+                 window: float = 10.0, ring_capacity: int = 512,
+                 ingest_ms: float = 0.0, model_seed: int = 7):
+    """One SVM stream runtime, rebuilt from config alone.  The MARGOT SVM
+    models are derived deterministically from ``model_seed`` (the repo has
+    no trained-weights artifact for them), so every worker process converges
+    on identical models without shipping arrays."""
+    from repro.cluster.replica import StreamBackend
+    from repro.core.pipeline import PipelineConfig
+    from repro.core.stream import StreamConfig, StreamRuntime
+    from repro.data.text import margot_models
+
+    pcfg = PipelineConfig(feat_dim=feat_dim, claim_capacity=claim_capacity,
+                          evid_capacity=evid_capacity)
+    scfg = StreamConfig(period=period, capacity=capacity, scope=scope,
+                        window=window, ring_capacity=ring_capacity)
+    models, _ = margot_models(pcfg, link_seed=model_seed)
+    runtime = StreamRuntime(models, pcfg, scfg)
+    fetch = None
+    if ingest_ms > 0:
+        fetch = lambda p: (time.sleep(ingest_ms * 1e-3), p)[1]  # noqa: E731
+    return StreamBackend(runtime, fetch=fetch)
+
+
+def build_engine(arch: str = "internlm2-1.8b", max_len: int = 64,
+                 slots: int = 2, reduce: bool = True, seed: int = 0,
+                 weights_path: Optional[str] = None,
+                 ingest_ms: float = 0.0):
+    """One continuous-batching LM engine.  Weights come from
+    ``weights_path`` (a ``checkpoint.Checkpointer`` directory) when given,
+    else from deterministic init at ``seed`` — either way the worker holds
+    its own copy in its own JAX runtime, which is the whole point of the
+    process transport."""
+    import jax
+
+    from repro.cluster.replica import EngineBackend
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.models import api
+    from repro.serving import Engine, ServeConfig
+
+    cfg = get_config(arch)
+    if reduce:
+        cfg = reduced(cfg)
+    params, _ = api.init(jax.random.PRNGKey(seed), cfg)
+    if weights_path is not None:
+        from repro.checkpoint import Checkpointer
+        params = Checkpointer(weights_path).restore(params)
+    engine = Engine(params, cfg, ServeConfig(max_len=max_len, slots=slots))
+    if ingest_ms > 0:
+        class _IngestEngineBackend(EngineBackend):
+            def process(self, payloads):
+                time.sleep(ingest_ms * 1e-3 * len(payloads))
+                return super().process(payloads)
+        return _IngestEngineBackend(engine)
+    return EngineBackend(engine)
+
+
+# ----------------------------------------------------------------------
+# Spec helpers: the canonical way callers name a backend family.
+
+def echo_spec(**kwargs) -> BackendSpec:
+    return BackendSpec("repro.cluster.backends:build_echo", kwargs, KIND_FN)
+
+
+def stream_spec(**kwargs) -> BackendSpec:
+    return BackendSpec("repro.cluster.backends:build_stream", kwargs, KIND_SVM)
+
+
+def engine_spec(**kwargs) -> BackendSpec:
+    return BackendSpec("repro.cluster.backends:build_engine", kwargs, KIND_LM)

@@ -154,6 +154,37 @@ class MetricsRegistry:
         return "\n".join(f"{k}={snap[k]:.6g}" for k in sorted(snap))
 
 
+def merge_snapshots(base: Dict[str, float],
+                    worker_snaps: List[Dict[str, float]]) -> Dict[str, float]:
+    """Aggregate worker-side snapshots into one cluster view.
+
+    Process replicas cannot write into the parent's registry, so they ship
+    ``snapshot()`` dicts over the heartbeat channel and the parent merges:
+    counters/gauges and histogram ``.count`` s sum; histogram ``.mean`` s
+    combine count-weighted; percentiles take the max across workers (an
+    upper bound — exact cluster-wide percentiles would need the samples).
+    """
+    out = dict(base)
+    for snap in worker_snaps:
+        # counts *before* this worker is merged, for mean re-weighting
+        pre = {k: out.get(k, 0.0) for k in snap if k.endswith(".count")}
+        for k, v in snap.items():
+            if k not in out:
+                out[k] = v
+            elif k.endswith((".p50", ".p95", ".p99")):
+                out[k] = max(out[k], v)
+            elif k.endswith(".mean"):
+                stem = k[:-len(".mean")]
+                n_out = pre.get(f"{stem}.count", 0.0)
+                n_new = snap.get(f"{stem}.count", 0.0)
+                total = n_out + n_new
+                out[k] = (out[k] * n_out + v * n_new) / total if total \
+                    else 0.0
+            else:
+                out[k] = out[k] + v
+    return out
+
+
 _NULL: Optional[MetricsRegistry] = None
 
 

@@ -1,30 +1,37 @@
-"""Replica workers: one backend (LM engine, SVM stream runtime, or any
-batched step function) owned by one host thread with a bounded inbox.
+"""Replica requests, backends, and the transport-agnostic worker driver.
 
-This is the cluster's unit of scale — the paper's "worker node".  A replica:
+The cluster's unit of scale — the paper's "worker node" — is a *replica*:
+one backend (LM engine, SVM stream runtime, or any batched step function)
+behind a bounded inbox.  A replica:
 
-  * pulls up to ``max_batch`` requests from its bounded inbox and runs them
-    through the backend as one batch (the mapPartitions amortization);
+  * pulls up to ``max_batch`` requests from its inbox and runs them through
+    the backend as one batch (the mapPartitions amortization);
   * reports liveness via a heartbeat timestamp and a busy fraction;
   * on a crash (injected fault or backend exception) *spills* every
     unacknowledged request — the batch that was in flight plus the whole
-    inbox — to an ``on_spill`` callback so the router can requeue them on
-    survivors.  Semantics are at-least-once (a crash between backend
-    completion and acknowledgement reprocesses the batch elsewhere), which
-    is the Spark lineage-recomputation contract; zero requests are lost.
+    inbox — so the router can requeue them on survivors.  Semantics are
+    at-least-once (a crash between backend completion and acknowledgement
+    reprocesses the batch elsewhere), which is the Spark
+    lineage-recomputation contract; zero requests are lost.
+
+*Where* the replica runs is a transport concern (``cluster/transport.py``):
+``LocalTransport`` runs this driver on a host thread over a ``queue.Queue``
+inbox; ``ProcessTransport`` runs the same driver inside a spawned worker
+process over an RPC inbox fed by a pipe.  The loop itself —
+:func:`run_replica_loop` — is shared, so batching, crash-before-ack, and
+graceful-drain semantics are identical on both sides of the process
+boundary.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-import itertools
 import queue
 import threading
 import time
 from typing import Any, Callable, List, Optional
 
 from repro.cluster.admission import Rejected
-from repro.cluster.metrics import MetricsRegistry, null_registry
 
 
 class Status(enum.Enum):
@@ -40,6 +47,7 @@ class ClusterRequest:
     payload: Any
     cost: int = 1                         # load units (e.g. tokens, rows)
     session_key: Optional[str] = None     # affinity key (user/session id)
+    kind: Optional[str] = None            # backend kind (admission cost model)
     deadline_s: float = float("inf")      # absolute time.monotonic deadline
     rid: int = -1
     submitted_s: float = 0.0
@@ -79,7 +87,8 @@ class ClusterRequest:
 
 
 class ReplicaCrash(RuntimeError):
-    """Raised inside a worker loop by fault injection."""
+    """Raised inside a worker loop by fault injection (or raised on the
+    parent side of a process transport when the worker process dies)."""
 
 
 # ----------------------------------------------------------------------
@@ -143,193 +152,61 @@ class ReplicaConfig:
     max_batch: int = 8
     poll_s: float = 0.002
     heartbeat_timeout_s: float = 5.0
+    # process transports only: how often the worker ships a heartbeat +
+    # metrics snapshot back to the parent, and how long the parent waits
+    # for the spawned interpreter to import + build its backend.
+    heartbeat_interval_s: float = 0.25
+    spawn_timeout_s: float = 120.0
 
 
-class ReplicaWorker:
-    """One backend on one thread with a bounded inbox and health reporting."""
+# ----------------------------------------------------------------------
+# The transport-agnostic driver.  A transport hands it an "inbox IO" object:
+#
+#   rid                      replica id (for error messages)
+#   heartbeat()              refresh the liveness signal
+#   crash_requested() -> bool   fault injection checkpoint
+#   closing() -> bool        graceful drain requested
+#   get(timeout) / get_nowait()   next work item (raise queue.Empty)
+#   payload(item)            the backend payload carried by an item
+#   begin(batch)             batch is now in flight (unacknowledged)
+#   ack(batch, results, busy_s)   acknowledge a completed batch
+#   spill(batch, error)      crash path: `batch` was in flight; the
+#                            transport must also spill everything still
+#                            queued and mark itself dead
+#   close()                  graceful-exit path after the loop breaks
+#
+# Items are opaque to the driver: ``ClusterRequest`` objects on a local
+# transport, ``(rid, cost, payload)`` triples inside a worker process.
 
-    _ids = itertools.count()
-
-    def __init__(self, backend, cfg: ReplicaConfig = ReplicaConfig(),
-                 rid: Optional[int] = None,
-                 metrics: Optional[MetricsRegistry] = None,
-                 on_spill: Optional[Callable[[List[ClusterRequest], "ReplicaWorker"], None]] = None):
-        self.rid = next(self._ids) if rid is None else rid
-        self.backend = backend
-        self.cfg = cfg
-        self.metrics = metrics if metrics is not None else null_registry()
-        self.on_spill = on_spill
-        self.inbox: "queue.Queue[ClusterRequest]" = \
-            queue.Queue(maxsize=cfg.inbox_capacity)
-        self._lock = threading.Lock()
-        self._outstanding_cost = 0
-        self._in_flight: List[ClusterRequest] = []
-        self._crash = threading.Event()
-        self._closing = threading.Event()
-        self.alive = False
-        self.heartbeat_s = 0.0
-        self.started_s = 0.0
-        self.busy_s = 0.0
-        self.processed = 0
-        self._thread = threading.Thread(target=self._loop, daemon=True,
-                                        name=f"replica-{self.rid}")
-
-    # -------------------------------------------------- control surface
-    def start(self) -> "ReplicaWorker":
-        self.alive = True
-        self.started_s = self.heartbeat_s = time.monotonic()
-        self._thread.start()
-        return self
-
-    def offer(self, req: ClusterRequest) -> bool:
-        """Enqueue; False == backpressure (inbox full / replica down)."""
-        if not self.alive or self._closing.is_set():
-            return False
+def run_replica_loop(backend, cfg: ReplicaConfig, io) -> None:
+    """Pull -> process -> acknowledge, with crash-before-ack spill
+    semantics.  Shared by ``LocalTransport``'s thread and the
+    ``ProcessTransport`` worker process."""
+    while True:
+        io.heartbeat()
+        if io.crash_requested():
+            io.spill([], ReplicaCrash(f"replica {io.rid}: injected crash"))
+            return
+        batch: List[Any] = []
         try:
-            self.inbox.put_nowait(req)
-        except queue.Full:
-            return False
-        with self._lock:
-            self._outstanding_cost += req.cost
-        if not self.alive:
-            # Raced with a concurrent crash: the dying thread may already
-            # have drained the inbox, so reclaim whatever is left ourselves
-            # and report failure — the caller re-dispatches elsewhere.
-            leftovers: List[ClusterRequest] = []
-            while True:
-                try:
-                    leftovers.append(self.inbox.get_nowait())
-                except queue.Empty:
-                    break
-            with self._lock:
-                self._outstanding_cost -= sum(r.cost for r in leftovers)
-            others = [r for r in leftovers if r is not req]
-            if others and self.on_spill is not None:
-                self.on_spill(others, self)
-            return False
-        return True
-
-    def outstanding_cost(self) -> int:
-        with self._lock:
-            return self._outstanding_cost
-
-    def healthy(self, now: Optional[float] = None) -> bool:
-        now = time.monotonic() if now is None else now
-        return self.alive and \
-            now - self.heartbeat_s < self.cfg.heartbeat_timeout_s
-
-    def busy_fraction(self) -> float:
-        wall = time.monotonic() - self.started_s
-        return self.busy_s / wall if wall > 0 else 0.0
-
-    def inject_crash(self):
-        """Fault injection: the worker dies at its next loop checkpoint and
-        spills all unacknowledged requests."""
-        self._crash.set()
-
-    def drain(self, timeout: float = 10.0):
-        """Graceful: stop accepting, finish the inbox, exit."""
-        self._closing.set()
-        self._thread.join(timeout)
-
-    def join(self, timeout: float = 10.0):
-        self._thread.join(timeout)
-
-    # -------------------------------------------------- worker loop
-    def _pull_batch(self) -> List[ClusterRequest]:
-        batch: List[ClusterRequest] = []
-        try:
-            batch.append(self.inbox.get(timeout=self.cfg.poll_s))
-            while len(batch) < self.cfg.max_batch:
-                batch.append(self.inbox.get_nowait())
+            batch.append(io.get(cfg.poll_s))
+            while len(batch) < cfg.max_batch:
+                batch.append(io.get_nowait())
         except queue.Empty:
             pass
-        return batch
-
-    def _loop(self):
-        hist = self.metrics.histogram("replica.batch_s")
-        while True:
-            self.heartbeat_s = time.monotonic()
-            if self._crash.is_set():
-                self._die(ReplicaCrash(f"replica {self.rid}: injected crash"))
-                return
-            batch = self._pull_batch()
-            if not batch:
-                if self._closing.is_set():
-                    break
-                continue
-            with self._lock:
-                self._in_flight = batch
-            t0 = time.monotonic()
-            try:
-                results = self.backend.process([r.payload for r in batch])
-                if self._crash.is_set():
-                    # crash before acknowledgement: the whole batch spills
-                    raise ReplicaCrash(
-                        f"replica {self.rid}: crashed before ack")
-            except BaseException as e:
-                self._die(e)
-                return
-            dt = time.monotonic() - t0
-            self.busy_s += dt
-            hist.observe(dt)
-            done_cost = 0
-            for r, res in zip(batch, results):
-                r.complete(res, self.rid)
-                done_cost += r.cost
-                self.processed += 1
-            with self._lock:
-                self._in_flight = []
-                self._outstanding_cost -= done_cost
-        # Graceful exit: refuse new offers first, then finish any request
-        # that raced into the inbox between the final empty poll and the
-        # flip (offer's post-put aliveness re-check closes the rest of the
-        # window by reclaiming and re-dispatching).
-        self.alive = False
-        time.sleep(self.cfg.poll_s)
-        stragglers: List[ClusterRequest] = []
-        while True:
-            try:
-                stragglers.append(self.inbox.get_nowait())
-            except queue.Empty:
+        if not batch:
+            if io.closing():
                 break
-        if stragglers:
-            try:
-                results = self.backend.process([r.payload for r in stragglers])
-                for r, res in zip(stragglers, results):
-                    r.complete(res, self.rid)
-                    self.processed += 1
-            except BaseException as e:
-                if self.on_spill is not None:
-                    self.on_spill(stragglers, self)
-                else:
-                    for r in stragglers:
-                        r.fail(e)
-        with self._lock:
-            self._outstanding_cost = 0
-
-    def _die(self, error: BaseException):
-        """Crash path: mark dead, spill in-flight + inbox to the router."""
-        self.alive = False
-        with self._lock:
-            spilled = list(self._in_flight)
-            self._in_flight = []
-        # Two drain passes with a grace gap: an `offer` that read `alive`
-        # just before we flipped it may still land a request (offer's own
-        # post-put check is the second line of defence).
-        for _ in range(2):
-            while True:
-                try:
-                    spilled.append(self.inbox.get_nowait())
-                except queue.Empty:
-                    break
-            time.sleep(0.005)
-        with self._lock:
-            self._outstanding_cost = 0
-        self.metrics.counter("replica.crashes").inc()
-        self.metrics.counter("replica.spilled_requests").inc(len(spilled))
-        if self.on_spill is not None:
-            self.on_spill(spilled, self)
-        else:
-            for r in spilled:
-                r.fail(error)
+            continue
+        io.begin(batch)
+        t0 = time.monotonic()
+        try:
+            results = backend.process([io.payload(r) for r in batch])
+            if io.crash_requested():
+                # crash before acknowledgement: the whole batch spills
+                raise ReplicaCrash(f"replica {io.rid}: crashed before ack")
+        except BaseException as e:
+            io.spill(batch, e)
+            return
+        io.ack(batch, results, time.monotonic() - t0)
+    io.close()

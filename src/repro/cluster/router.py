@@ -1,4 +1,4 @@
-"""Request router: fan user requests out over a pool of replica workers.
+"""Request router: fan user requests out over a pool of replica transports.
 
 The paper distributes the *pipeline* over Spark workers; this module
 distributes the *service* — the missing piece between one `Engine`/stream
@@ -13,10 +13,18 @@ policies:
                            (warm caches / per-user state) and only the keys
                            of a *removed* replica ever remap.
 
+The router sees replicas only through the :class:`~repro.cluster.transport.
+Transport` surface — it neither knows nor cares whether a replica is a
+thread in this process (``transport="thread"``) or a worker subprocess
+behind an RPC inbox (``transport="process"``, built from a serializable
+:class:`~repro.cluster.backends.BackendSpec`).
+
 Fault path: a replica crash spills its unacknowledged requests back here;
 they are requeued on survivors (bounded retries, `core/fault.py` semantics).
 Admission control (`cluster/admission.py`) runs at `submit`, so overload is
-an explicit `Rejected` result instead of unbounded queueing.
+an explicit `Rejected` result instead of unbounded queueing; when replicas
+carry a backend *kind* ("lm", "svm", ...) the deadline test uses that
+backend's own cost model and queue depth.
 """
 from __future__ import annotations
 
@@ -27,9 +35,11 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.cluster.admission import AdmissionController, Rejected
-from repro.cluster.metrics import MetricsRegistry, null_registry
-from repro.cluster.replica import (ClusterRequest, ReplicaConfig,
-                                   ReplicaWorker, Status)
+from repro.cluster.backends import BackendSpec
+from repro.cluster.metrics import (MetricsRegistry, merge_snapshots,
+                                   null_registry)
+from repro.cluster.replica import ClusterRequest, ReplicaConfig, Status
+from repro.cluster.transport import Transport, make_transport
 
 POLICIES = ("round_robin", "least_loaded", "session_affinity")
 
@@ -40,7 +50,7 @@ def _rendezvous_weight(session_key: str, rid: int) -> int:
 
 
 class Router:
-    """Front door over N :class:`ReplicaWorker` s."""
+    """Front door over N replica :class:`Transport` s."""
 
     def __init__(self, policy: str = "round_robin",
                  admission: Optional[AdmissionController] = None,
@@ -54,7 +64,7 @@ class Router:
         self.admission = admission
         self.max_retries = max_retries
         self.requeue_timeout_s = requeue_timeout_s
-        self._replicas: Dict[int, ReplicaWorker] = {}
+        self._replicas: Dict[int, Transport] = {}
         self._lock = threading.Lock()
         self._rr = itertools.count()
         self._rids = itertools.count(1)
@@ -64,10 +74,18 @@ class Router:
         self._requeued = self.metrics.counter("router.requeued")
 
     # -------------------------------------------------- replica pool
-    def add_replica(self, backend, cfg: ReplicaConfig = ReplicaConfig(),
-                    rid: Optional[int] = None) -> ReplicaWorker:
-        worker = ReplicaWorker(backend, cfg, rid=rid, metrics=self.metrics,
-                               on_spill=self._on_spill).start()
+    def add_replica(self, backend=None, cfg: ReplicaConfig = ReplicaConfig(),
+                    rid: Optional[int] = None, *,
+                    spec: Optional[BackendSpec] = None,
+                    transport: str = "thread",
+                    kind: Optional[str] = None) -> Transport:
+        """Add one replica.  ``backend`` (a live object) keeps PR 1's
+        signature and runs on a thread; ``spec=`` + ``transport="process"``
+        places the same replica in a spawned worker process instead."""
+        worker = make_transport(transport, backend=backend, spec=spec,
+                                cfg=cfg, rid=rid, metrics=self.metrics,
+                                on_spill=self._on_spill, kind=kind)
+        worker.start()
         with self._lock:
             self._replicas[worker.rid] = worker
         self._set_pool_gauge()
@@ -82,24 +100,33 @@ class Router:
         if worker is not None and drain:
             worker.drain()
 
-    def alive_replicas(self) -> List[ReplicaWorker]:
+    def alive_replicas(self) -> List[Transport]:
         with self._lock:
             return [w for w in self._replicas.values() if w.alive]
 
     def n_alive(self) -> int:
         return len(self.alive_replicas())
 
-    def queue_depth(self) -> int:
-        """Cluster-wide outstanding cost (inbox + in-flight, all replicas)."""
-        return sum(w.outstanding_cost() for w in self.alive_replicas())
+    def queue_depth(self, kind: Optional[str] = None) -> int:
+        """Outstanding cost (inbox + in-flight) over alive replicas —
+        cluster-wide, or restricted to one backend kind."""
+        return sum(w.outstanding_cost() for w in self.alive_replicas()
+                   if kind is None or w.kind == kind)
 
     def _set_pool_gauge(self):
         self.metrics.gauge("router.replicas").set(self.n_alive())
 
     # -------------------------------------------------- dispatch policies
-    def _ranked(self, req: ClusterRequest) -> List[ReplicaWorker]:
-        """Alive replicas in dispatch-preference order for this request."""
+    def _ranked(self, req: ClusterRequest) -> List[Transport]:
+        """Alive replicas in dispatch-preference order for this request.
+        Dead transports are never candidates (see
+        ``tests/test_transport.py`` for the property test)."""
         alive = sorted(self.alive_replicas(), key=lambda w: w.rid)
+        if req.kind is not None:
+            # strict: a kind with no live replica sheds explicitly rather
+            # than falling back to wrong-kind backends (whose process()
+            # would raise on the foreign payload and cascade-kill the pool)
+            alive = [w for w in alive if w.kind == req.kind]
         if not alive:
             return []
         if self.policy == "least_loaded":
@@ -113,14 +140,15 @@ class Router:
     # -------------------------------------------------- submission
     def submit(self, payload: Any, *, cost: int = 1,
                session_key: Optional[str] = None,
+               kind: Optional[str] = None,
                timeout_s: float = 30.0) -> ClusterRequest:
         now = time.monotonic()
         req = ClusterRequest(payload, cost=cost, session_key=session_key,
-                             deadline_s=now + timeout_s, rid=next(self._rids),
-                             submitted_s=now)
+                             kind=kind, deadline_s=now + timeout_s,
+                             rid=next(self._rids), submitted_s=now)
         if self.admission is not None:
-            shed = self.admission.decide(self.queue_depth(), cost,
-                                         req.deadline_s, now)
+            shed = self.admission.decide(self.queue_depth(kind), cost,
+                                         req.deadline_s, now, kind=kind)
             if shed is not None:
                 req.reject(shed)
                 return req
@@ -145,7 +173,7 @@ class Router:
 
     # -------------------------------------------------- fault path
     def _on_spill(self, spilled: List[ClusterRequest],
-                  dead: ReplicaWorker) -> None:
+                  dead: Transport) -> None:
         """Requeue a crashed replica's unacknowledged requests on survivors.
 
         At-least-once: a request whose batch finished compute but was never
@@ -204,6 +232,16 @@ class Router:
 
     def as_step_fn(self, **kwargs) -> Callable[[List[Any]], List[Any]]:
         return lambda payloads: self.process_batch(payloads, **kwargs)
+
+    # -------------------------------------------------- telemetry
+    def cluster_snapshot(self) -> Dict[str, float]:
+        """One flat view of the whole service: the router-side registry
+        merged with each alive worker's last shipped snapshot (process
+        replicas report their counters over the heartbeat channel; thread
+        replicas already share the registry)."""
+        return merge_snapshots(self.metrics.snapshot(),
+                               [w.metrics_snapshot()
+                                for w in self.alive_replicas()])
 
     # -------------------------------------------------- lifecycle
     def stop(self, drain: bool = True) -> None:

@@ -1,0 +1,698 @@
+"""Replica transports: where a replica runs and how requests reach it.
+
+The router, autoscaler and metrics speak to replicas only through the
+:class:`Transport` surface (submit/ack/spill/heartbeat over a bounded
+inbox), so worker *placement* is pluggable:
+
+  * :class:`LocalTransport`  — the replica driver on a host thread over a
+    ``queue.Queue`` inbox.  Threads share one JAX runtime: weights are
+    zero-copy, but device FLOPs do not scale beyond one client.
+  * :class:`ProcessTransport` — a spawned worker subprocess with an RPC
+    inbox: requests travel over a duplex pipe as msgpack/pickle-framed
+    messages, acknowledgements and heartbeat/metrics snapshots travel back,
+    and crash detection is by process liveness (a SIGKILL'd worker is
+    noticed at the next pipe read).  Each worker owns an independent Python
+    interpreter and JAX runtime, so device FLOPs scale with workers — the
+    paper's worker *nodes*.
+
+Both implement the same at-least-once contract: every request is either
+acknowledged exactly once or spilled back to ``on_spill`` for redispatch;
+none are lost.  The in-replica loop is shared
+(:func:`repro.cluster.replica.run_replica_loop`), so batching and
+crash-before-ack semantics are identical.
+
+Process workers are rebuilt from a :class:`~repro.cluster.backends.
+BackendSpec` (config + weights path), never from live objects — the only
+things that cross the spawn boundary are picklable.
+"""
+from __future__ import annotations
+
+import itertools
+import multiprocessing as mp
+import pickle
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+try:
+    import msgpack
+except ImportError:                                   # pragma: no cover - env
+    msgpack = None
+
+from repro.cluster.backends import BackendSpec
+from repro.cluster.metrics import MetricsRegistry, null_registry
+from repro.cluster.replica import (ClusterRequest, ReplicaConfig,
+                                   ReplicaCrash, run_replica_loop)
+
+TRANSPORTS = ("thread", "process")
+
+OnSpill = Callable[[List[ClusterRequest], "Transport"], None]
+
+
+# ----------------------------------------------------------------------
+# Wire framing: msgpack for the control plane (tags, rids, heartbeat
+# snapshots — known plain types), pickle for anything carrying *user*
+# payloads or results (``pickle_only=True``): msgpack would silently
+# round-trip tuples as lists, making a backend behave differently across
+# the process boundary.  One tag byte keeps decode unambiguous.
+
+def encode_frame(obj: Any, pickle_only: bool = False) -> bytes:
+    if not pickle_only and msgpack is not None:
+        try:
+            return b"M" + msgpack.packb(obj, use_bin_type=True)
+        except (TypeError, ValueError, OverflowError):
+            pass
+    return b"P" + pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def decode_frame(buf: bytes) -> Any:
+    tag, body = buf[:1], buf[1:]
+    if tag == b"M":
+        if msgpack is None:
+            raise RuntimeError("msgpack frame received without msgpack")
+        return msgpack.unpackb(body, raw=False)
+    if tag == b"P":
+        return pickle.loads(body)
+    raise ValueError(f"unknown frame tag {tag!r}")
+
+
+# ----------------------------------------------------------------------
+class Transport:
+    """What the router/autoscaler may assume about a replica.
+
+    Lifecycle: ``start()`` -> ``offer()`` x N -> ``drain()`` (graceful) or
+    ``inject_crash()`` (fault).  A dead transport spills every
+    unacknowledged request to ``on_spill`` exactly once.
+    """
+
+    _ids = itertools.count()
+
+    def __init__(self, cfg: ReplicaConfig, rid: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 on_spill: Optional[OnSpill] = None, kind: str = "fn"):
+        self.rid = next(Transport._ids) if rid is None else rid
+        self.cfg = cfg
+        self.metrics = metrics if metrics is not None else null_registry()
+        self.on_spill = on_spill
+        self.kind = kind
+        self.alive = False
+        self.heartbeat_s = 0.0
+        self.started_s = 0.0
+        self.busy_s = 0.0
+        self.processed = 0
+
+    # -- control surface -------------------------------------------------
+    def start(self) -> "Transport":
+        raise NotImplementedError
+
+    def offer(self, req: ClusterRequest) -> bool:
+        """Enqueue; False == backpressure (inbox full / replica down)."""
+        raise NotImplementedError
+
+    def outstanding_cost(self) -> int:
+        raise NotImplementedError
+
+    def inject_crash(self) -> None:
+        raise NotImplementedError
+
+    def drain(self, timeout: float = 10.0) -> None:
+        raise NotImplementedError
+
+    def join(self, timeout: float = 10.0) -> None:
+        raise NotImplementedError
+
+    # -- health / telemetry ----------------------------------------------
+    def healthy(self, now: Optional[float] = None) -> bool:
+        now = time.monotonic() if now is None else now
+        return self.alive and \
+            now - self.heartbeat_s < self.cfg.heartbeat_timeout_s
+
+    def busy_fraction(self) -> float:
+        wall = time.monotonic() - self.started_s
+        return self.busy_s / wall if wall > 0 else 0.0
+
+    def metrics_snapshot(self) -> Dict[str, float]:
+        """Worker-side metrics.  Local replicas write into the shared
+        registry directly, so their snapshot is empty; process replicas
+        return the last heartbeat's registry snapshot."""
+        return {}
+
+    def _record_crash(self, n_spilled: int) -> None:
+        self.metrics.counter("replica.crashes").inc()
+        self.metrics.counter("replica.spilled_requests").inc(n_spilled)
+
+
+# ----------------------------------------------------------------------
+class LocalTransport(Transport):
+    """The replica driver on a host thread with a ``queue.Queue`` inbox.
+
+    Behavior-preserving port of PR 1's ``ReplicaWorker`` (which remains as
+    an alias): same offer/crash/drain races, same straggler handling.
+    """
+
+    def __init__(self, backend, cfg: ReplicaConfig = ReplicaConfig(),
+                 rid: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 on_spill: Optional[OnSpill] = None, kind: str = "fn"):
+        super().__init__(cfg, rid=rid, metrics=metrics, on_spill=on_spill,
+                         kind=kind)
+        self.backend = backend
+        self.inbox: "queue.Queue[ClusterRequest]" = \
+            queue.Queue(maxsize=cfg.inbox_capacity)
+        self._lock = threading.Lock()
+        self._outstanding_cost = 0
+        self._crash = threading.Event()
+        self._closing = threading.Event()
+        self._hist = self.metrics.histogram("replica.batch_s")
+        self._thread = threading.Thread(
+            target=run_replica_loop, args=(backend, cfg, self),
+            daemon=True, name=f"replica-{self.rid}")
+
+    # -- control surface -------------------------------------------------
+    def start(self) -> "LocalTransport":
+        self.alive = True
+        self.started_s = self.heartbeat_s = time.monotonic()
+        self._thread.start()
+        return self
+
+    def offer(self, req: ClusterRequest) -> bool:
+        if not self.alive or self._closing.is_set():
+            return False
+        try:
+            self.inbox.put_nowait(req)
+        except queue.Full:
+            return False
+        with self._lock:
+            self._outstanding_cost += req.cost
+        if not self.alive:
+            # Raced with a concurrent crash: the dying thread may already
+            # have drained the inbox, so reclaim whatever is left ourselves
+            # and report failure — the caller re-dispatches elsewhere.
+            leftovers: List[ClusterRequest] = []
+            while True:
+                try:
+                    leftovers.append(self.inbox.get_nowait())
+                except queue.Empty:
+                    break
+            with self._lock:
+                self._outstanding_cost -= sum(r.cost for r in leftovers)
+            others = [r for r in leftovers if r is not req]
+            if others and self.on_spill is not None:
+                self.on_spill(others, self)
+            return False
+        return True
+
+    def outstanding_cost(self) -> int:
+        with self._lock:
+            return self._outstanding_cost
+
+    def inject_crash(self) -> None:
+        """Fault injection: the worker dies at its next loop checkpoint and
+        spills all unacknowledged requests."""
+        self._crash.set()
+
+    def drain(self, timeout: float = 10.0) -> None:
+        """Graceful: stop accepting, finish the inbox, exit."""
+        self._closing.set()
+        self._thread.join(timeout)
+
+    def join(self, timeout: float = 10.0) -> None:
+        self._thread.join(timeout)
+
+    # -- driver inbox IO (run_replica_loop callbacks) --------------------
+    def heartbeat(self) -> None:
+        self.heartbeat_s = time.monotonic()
+
+    def crash_requested(self) -> bool:
+        return self._crash.is_set()
+
+    def closing(self) -> bool:
+        return self._closing.is_set()
+
+    def get(self, timeout: float) -> ClusterRequest:
+        return self.inbox.get(timeout=timeout)
+
+    def get_nowait(self) -> ClusterRequest:
+        return self.inbox.get_nowait()
+
+    @staticmethod
+    def payload(req: ClusterRequest) -> Any:
+        return req.payload
+
+    def begin(self, batch: List[ClusterRequest]) -> None:
+        pass            # the driver hands the in-flight batch to spill()
+
+    def ack(self, batch: List[ClusterRequest], results: List[Any],
+            busy_s: float) -> None:
+        self.busy_s += busy_s
+        self._hist.observe(busy_s)
+        done_cost = 0
+        for r, res in zip(batch, results):
+            r.complete(res, self.rid)
+            done_cost += r.cost
+            self.processed += 1
+        with self._lock:
+            self._outstanding_cost -= done_cost
+
+    def spill(self, batch: List[ClusterRequest], error: BaseException) -> None:
+        """Crash path: mark dead, spill in-flight + inbox to the router."""
+        self.alive = False
+        spilled = list(batch)
+        # Two drain passes with a grace gap: an `offer` that read `alive`
+        # just before we flipped it may still land a request (offer's own
+        # post-put check is the second line of defence).
+        for _ in range(2):
+            while True:
+                try:
+                    spilled.append(self.inbox.get_nowait())
+                except queue.Empty:
+                    break
+            time.sleep(0.005)
+        with self._lock:
+            self._outstanding_cost = 0
+        self._record_crash(len(spilled))
+        if self.on_spill is not None:
+            self.on_spill(spilled, self)
+        else:
+            for r in spilled:
+                r.fail(error)
+
+    def close(self) -> None:
+        # Graceful exit: refuse new offers first, then finish any request
+        # that raced into the inbox between the final empty poll and the
+        # flip (offer's post-put aliveness re-check closes the rest of the
+        # window by reclaiming and re-dispatching).
+        self.alive = False
+        time.sleep(self.cfg.poll_s)
+        stragglers: List[ClusterRequest] = []
+        while True:
+            try:
+                stragglers.append(self.inbox.get_nowait())
+            except queue.Empty:
+                break
+        if stragglers:
+            try:
+                results = self.backend.process([r.payload for r in stragglers])
+                for r, res in zip(stragglers, results):
+                    r.complete(res, self.rid)
+                    self.processed += 1
+            except BaseException as e:
+                if self.on_spill is not None:
+                    self.on_spill(stragglers, self)
+                else:
+                    for r in stragglers:
+                        r.fail(e)
+        with self._lock:
+            self._outstanding_cost = 0
+
+
+# ----------------------------------------------------------------------
+# Worker-process side.
+
+class _WorkerIO:
+    """Driver inbox IO inside the worker process: work items are
+    ``(rid, cost, payload)`` triples received over the pipe; acks,
+    heartbeats and metrics snapshots are shipped back.
+
+    A dedicated reader thread pumps the pipe into ``pending`` continuously,
+    so the parent's sends never back up behind a long ``backend.process``
+    call — ``offer()`` on the parent side stays non-blocking even when
+    payloads exceed the OS pipe buffer."""
+
+    def __init__(self, conn, cfg: ReplicaConfig, rid: int,
+                 registry: MetricsRegistry):
+        self.conn = conn
+        self.cfg = cfg
+        self.rid = rid
+        self.registry = registry
+        self._hist = registry.histogram("replica.batch_s")
+        self.pending: "queue.Queue[Tuple[int, int, Any]]" = queue.Queue()
+        self._crash = False
+        self._closing = False
+        self._send_lock = threading.Lock()
+        self._last_hb = 0.0
+        self.processed = 0
+        self.busy_s = 0.0
+        self._reader = threading.Thread(target=self._pump_loop, daemon=True,
+                                        name=f"replica-{rid}-pump")
+        self._reader.start()
+
+    def _send(self, msg: Any, pickle_only: bool = False) -> None:
+        with self._send_lock:
+            self.conn.send_bytes(encode_frame(msg, pickle_only))
+
+    def _pump_loop(self) -> None:
+        """Reader thread: keep the parent->worker pipe drained."""
+        while True:
+            try:
+                if not self.conn.poll(0.05):
+                    continue
+                msg = decode_frame(self.conn.recv_bytes())
+            except (EOFError, OSError):
+                self._closing = True       # parent went away: wind down
+                return
+            tag = msg[0]
+            if tag == "req":
+                self.pending.put((msg[1], msg[2], msg[3]))
+            elif tag == "drain":
+                self._closing = True
+            elif tag == "crash":
+                self._crash = True
+
+    # -- driver callbacks ------------------------------------------------
+    def heartbeat(self) -> None:
+        now = time.monotonic()
+        if now - self._last_hb >= self.cfg.heartbeat_interval_s:
+            self._last_hb = now
+            self._send(("hb", self.processed, self.busy_s,
+                        self.registry.snapshot()))
+
+    def crash_requested(self) -> bool:
+        return self._crash
+
+    def closing(self) -> bool:
+        return self._closing
+
+    def get(self, timeout: float):
+        return self.pending.get(timeout=timeout)
+
+    def get_nowait(self):
+        return self.pending.get_nowait()
+
+    @staticmethod
+    def payload(item) -> Any:
+        return item[2]
+
+    def begin(self, batch) -> None:
+        pass                            # the parent tracks in-flight state
+
+    def ack(self, batch, results, busy_s: float) -> None:
+        self.busy_s += busy_s
+        self.processed += len(batch)
+        self._hist.observe(busy_s)
+        self._send(("ack", [(item[0], res)
+                            for item, res in zip(batch, results)], busy_s),
+                   pickle_only=True)    # results must round-trip type-exact
+
+    def spill(self, batch, error: BaseException) -> None:
+        # The parent owns every unacknowledged request; telling it why we
+        # died is all that is needed — it spills from its own table.
+        try:
+            self._send(("dead", repr(error)))
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        # FIFO pipe order guarantees every request sent before the drain
+        # control message has already been pumped into `pending`, and the
+        # driver only reaches here once `pending` is empty.
+        try:
+            self._send(("hb", self.processed, self.busy_s,
+                        self.registry.snapshot()))
+            self._send(("drained",))
+        except OSError:
+            pass
+
+
+def _worker_entry(conn, spec: BackendSpec, cfg: ReplicaConfig,
+                  rid: int) -> None:
+    """Entry point of a spawned replica worker process."""
+    registry = MetricsRegistry()
+    io = _WorkerIO(conn, cfg, rid, registry)
+    try:
+        backend = spec.build()
+    except BaseException as e:          # noqa: BLE001 - report, don't raise
+        io.spill([], e)
+        return
+    io._send(("ready",))
+    run_replica_loop(backend, cfg, io)
+
+
+# ----------------------------------------------------------------------
+class ProcessTransport(Transport):
+    """A replica in its own worker process behind an RPC inbox.
+
+    The parent keeps the table of unacknowledged requests; the worker only
+    ever sees ``(rid, cost, payload)`` triples.  If the process dies — a
+    backend exception, an injected ``SIGKILL``, an OOM kill — the pipe
+    breaks, the receiver notices within one poll interval, and every
+    unacknowledged request spills to ``on_spill``: the same zero-lost
+    contract as the thread transport, now robust to interpreter death.
+    """
+
+    def __init__(self, spec: BackendSpec, cfg: ReplicaConfig = ReplicaConfig(),
+                 rid: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 on_spill: Optional[OnSpill] = None,
+                 kind: Optional[str] = None, start_method: str = "spawn"):
+        super().__init__(cfg, rid=rid, metrics=metrics, on_spill=on_spill,
+                         kind=kind if kind is not None else spec.kind)
+        self.spec = spec
+        self._ctx = mp.get_context(start_method)
+        self._conn, self._child_conn = self._ctx.Pipe(duplex=True)
+        self._proc = None
+        self._recv_thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self._send_lock = threading.Lock()   # pipe writes only: a full pipe
+        # must never stall the receiver's ack bookkeeping via self._lock
+        self._outstanding: Dict[int, ClusterRequest] = {}
+        self._outstanding_cost = 0
+        self._closing = threading.Event()
+        self._ready = threading.Event()
+        self._drained = threading.Event()
+        self._worker_snapshot: Dict[str, float] = {}
+
+    # -- control surface -------------------------------------------------
+    def start(self, wait_ready: bool = True) -> "ProcessTransport":
+        self._proc = self._ctx.Process(
+            target=_worker_entry,
+            args=(self._child_conn, self.spec, self.cfg, self.rid),
+            daemon=True, name=f"replica-{self.rid}")
+        self._proc.start()
+        self._child_conn.close()        # the child holds its own handle now
+        self.alive = True
+        self.started_s = self.heartbeat_s = time.monotonic()
+        self._recv_thread = threading.Thread(
+            target=self._recv_loop, daemon=True,
+            name=f"replica-{self.rid}-recv")
+        self._recv_thread.start()
+        if wait_ready:
+            if not self._ready.wait(self.cfg.spawn_timeout_s):
+                err = ReplicaCrash(
+                    f"replica {self.rid}: worker not ready within "
+                    f"{self.cfg.spawn_timeout_s}s")
+                self._die(err)
+                raise err
+            if not self.alive:          # died during startup (build failed)
+                raise ReplicaCrash(
+                    f"replica {self.rid}: worker died during startup")
+        return self
+
+    def offer(self, req: ClusterRequest) -> bool:
+        if not self.alive or self._closing.is_set():
+            return False
+        try:
+            # serialize before registering: payloads must round-trip
+            # type-exact (tuples stay tuples), and an unpicklable payload
+            # must neither kill the replica nor leak an outstanding entry —
+            # refusing here lets the router shed it explicitly
+            frame = encode_frame(("req", req.rid, req.cost, req.payload),
+                                 pickle_only=True)
+        except Exception:               # noqa: BLE001 - unserializable
+            return False
+        with self._lock:
+            if not self.alive or len(self._outstanding) >= \
+                    self.cfg.inbox_capacity:
+                return False
+            self._outstanding[req.rid] = req
+            self._outstanding_cost += req.cost
+        try:
+            with self._send_lock:
+                self._conn.send_bytes(frame)
+        except (OSError, ValueError):
+            with self._lock:
+                if self._outstanding.pop(req.rid, None) is not None:
+                    self._outstanding_cost -= req.cost
+            self._die(ReplicaCrash(
+                f"replica {self.rid}: pipe closed on offer"))
+            return False
+        if not self.alive:
+            # Raced with a concurrent death.  If the receiver's spill
+            # already took this request, the fault path owns it (it is
+            # being requeued); otherwise reclaim it and report failure.
+            with self._lock:
+                if self._outstanding.pop(req.rid, None) is not None:
+                    self._outstanding_cost -= req.cost
+                    return False
+        return True
+
+    def outstanding_cost(self) -> int:
+        with self._lock:
+            return self._outstanding_cost
+
+    def inject_crash(self, soft: bool = False) -> None:
+        """Fault injection.  Hard (default) == real process death: SIGKILL
+        the worker; the receiver detects the broken pipe and spills every
+        unacknowledged request, exactly as an OOM-killed production worker
+        would.  Soft sends a ``("crash",)`` control frame instead: the
+        worker raises at its next loop checkpoint (crash-*before*-ack if a
+        batch is in flight) and reports back over the pipe."""
+        if self._proc is None or not self._proc.is_alive():
+            self._die(ReplicaCrash(f"replica {self.rid}: injected crash"))
+            return
+        if soft:
+            try:
+                self._send(("crash",))
+            except (OSError, ValueError):
+                self._die(ReplicaCrash(
+                    f"replica {self.rid}: pipe closed on soft crash"))
+        else:
+            self._proc.kill()
+
+    def drain(self, timeout: float = 10.0) -> None:
+        self._closing.set()
+        try:
+            self._send(("drain",))
+        except (OSError, ValueError):
+            pass
+        self._drained.wait(timeout)
+        self.join(timeout)
+
+    def join(self, timeout: float = 10.0) -> None:
+        if self._proc is not None:
+            self._proc.join(timeout)
+        if self._recv_thread is not None and \
+                self._recv_thread is not threading.current_thread():
+            self._recv_thread.join(timeout)
+
+    def wait_ready(self, timeout: Optional[float] = None) -> bool:
+        return self._ready.wait(
+            self.cfg.spawn_timeout_s if timeout is None else timeout)
+
+    def metrics_snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._worker_snapshot)
+
+    # -- parent-side receive path ----------------------------------------
+    def _send(self, msg: Any, pickle_only: bool = False) -> None:
+        with self._send_lock:
+            self._conn.send_bytes(encode_frame(msg, pickle_only))
+
+    def _recv_loop(self) -> None:
+        while True:
+            try:
+                if not self._conn.poll(0.05):
+                    if not self.alive:
+                        return
+                    if self._proc is not None and not self._proc.is_alive():
+                        # exited without a frame on the wire (e.g. killed
+                        # between messages, or a clean post-drain exit)
+                        self._on_eof()
+                        return
+                    continue
+                msg = decode_frame(self._conn.recv_bytes())
+            except (EOFError, OSError, ValueError):
+                self._on_eof()
+                return
+            tag = msg[0]
+            self.heartbeat_s = time.monotonic()
+            if tag == "ack":
+                self.busy_s += msg[2]
+                for rid, res in msg[1]:
+                    with self._lock:
+                        req = self._outstanding.pop(rid, None)
+                        if req is not None:
+                            self._outstanding_cost -= req.cost
+                    if req is not None:
+                        req.complete(res, self.rid)
+                        self.processed += 1
+            elif tag == "hb":
+                with self._lock:
+                    self._worker_snapshot = dict(msg[3])
+            elif tag == "ready":
+                self._ready.set()
+            elif tag == "drained":
+                self._drained.set()
+            elif tag == "dead":
+                self._die(ReplicaCrash(
+                    f"replica {self.rid}: worker died: {msg[1]}"))
+                return
+
+    def _on_eof(self) -> None:
+        clean = self._closing.is_set() and self._drained.is_set()
+        if clean:
+            self.alive = False
+            with self._lock:
+                leftovers = sorted(self._outstanding.values(),
+                                   key=lambda r: r.rid)
+                self._outstanding.clear()
+                self._outstanding_cost = 0
+            # a clean drain should leave nothing behind; spill defensively
+            if leftovers:
+                self._spill_out(leftovers, ReplicaCrash(
+                    f"replica {self.rid}: drained with leftovers"))
+        else:
+            self._die(ReplicaCrash(
+                f"replica {self.rid}: worker process died"))
+
+    def _die(self, error: BaseException) -> None:
+        with self._lock:
+            if not self.alive:
+                return
+            self.alive = False
+            spilled = sorted(self._outstanding.values(), key=lambda r: r.rid)
+            self._outstanding.clear()
+            self._outstanding_cost = 0
+        self._ready.set()               # unblock any start()/wait_ready()
+        self._drained.set()
+        if self._proc is not None and self._proc.is_alive():
+            self._proc.kill()
+        self._record_crash(len(spilled))
+        self._spill_out(spilled, error)
+
+    def _spill_out(self, spilled: List[ClusterRequest],
+                   error: BaseException) -> None:
+        if self.on_spill is not None:
+            if spilled:
+                self.on_spill(spilled, self)
+        else:
+            for r in spilled:
+                r.fail(error)
+
+
+# ----------------------------------------------------------------------
+def make_transport(transport: str, *, backend=None,
+                   spec: Optional[BackendSpec] = None,
+                   cfg: ReplicaConfig = ReplicaConfig(),
+                   rid: Optional[int] = None,
+                   metrics: Optional[MetricsRegistry] = None,
+                   on_spill: Optional[OnSpill] = None,
+                   kind: Optional[str] = None) -> Transport:
+    """Build (but do not start) a transport.
+
+    ``thread`` accepts a live backend object or a spec (built in-process);
+    ``process`` requires a :class:`BackendSpec` — live backends cannot
+    cross the spawn boundary.
+    """
+    if transport not in TRANSPORTS:
+        raise ValueError(f"transport {transport!r} not in {TRANSPORTS}")
+    if transport == "process":
+        if spec is None:
+            raise ValueError("ProcessTransport needs a BackendSpec "
+                             "(a live backend cannot cross the process "
+                             "boundary)")
+        return ProcessTransport(spec, cfg, rid=rid, metrics=metrics,
+                                on_spill=on_spill, kind=kind)
+    if backend is None:
+        if spec is None:
+            raise ValueError("LocalTransport needs a backend or a spec")
+        backend = spec.build()
+    resolved_kind = kind if kind is not None else \
+        (spec.kind if spec is not None else "fn")
+    return LocalTransport(backend, cfg, rid=rid, metrics=metrics,
+                          on_spill=on_spill, kind=resolved_kind)
+
+
+# Back-compat: PR 1's thread replica, by its old name.
+ReplicaWorker = LocalTransport

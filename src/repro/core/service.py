@@ -37,7 +37,7 @@ class ServiceRequest:
     payload: Any
     deadline_s: float                  # absolute time.monotonic deadline
     submitted_s: float = 0.0
-    done = None                        # threading.Event
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: Any = None
     missed_deadline: bool = False
 
@@ -88,7 +88,6 @@ class MLaaSService:
     def submit(self, payload, timeout_s: float = 10.0) -> ServiceRequest:
         req = ServiceRequest(payload, deadline_s=time.monotonic() + timeout_s,
                              submitted_s=time.monotonic())
-        req.done = threading.Event()
         # The lock makes check+enqueue atomic w.r.t. the loop's final drain:
         # once `_closed` is observed, no request can slip in behind the
         # drain and block its caller forever.

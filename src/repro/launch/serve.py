@@ -1,13 +1,18 @@
 """Production serving driver: continuous-batching engine(s) + the MLaaS
 request path.  With ``--replicas N`` (N > 1) requests travel through the
-cluster layer — a Router fanning out over N engine replicas (each with its
-own decode slots/caches, sharing one set of weights) with admission control
-and unified metrics.
+cluster layer — a Router fanning out over N engine replicas with admission
+control and unified metrics.  ``--transport`` picks replica placement:
+
+  * ``thread``  — replicas share this process and its JAX runtime; weights
+    are zero-copy but device FLOPs do not scale.
+  * ``process`` — each replica is a spawned worker process with an RPC
+    inbox, rebuilt from a serializable spec (arch + seed or
+    ``--weights-dir``); independent JAX runtimes, so compute scales.
 
     PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b \
         --requests 8 --max-new 16
     PYTHONPATH=src python -m repro.launch.serve --replicas 2 \
-        --router-policy least_loaded --requests 8
+        --router-policy least_loaded --requests 8 --transport process
 """
 from __future__ import annotations
 
@@ -19,7 +24,7 @@ import numpy as np
 
 from repro.cluster import (AdmissionConfig, AdmissionController,
                            EngineBackend, MetricsRegistry, POLICIES,
-                           ReplicaConfig, Router)
+                           ReplicaConfig, Router, TRANSPORTS, engine_spec)
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import reduced as reduce_cfg
 from repro.models import api
@@ -41,10 +46,20 @@ def main(argv=None):
                     choices=list(POLICIES))
     ap.add_argument("--max-queue", type=int, default=4096,
                     help="admission control: global queued-cost bound")
+    ap.add_argument("--transport", default="thread", choices=list(TRANSPORTS),
+                    help="replica placement: host threads or worker "
+                         "processes with RPC inboxes")
+    ap.add_argument("--weights-dir", default=None,
+                    help="checkpoint dir for process workers to load "
+                         "weights from (default: deterministic init at "
+                         "seed 0 inside each worker, matching the "
+                         "thread/single-replica paths)")
     args = ap.parse_args(argv)
 
     cfg = reduce_cfg(get_config(args.arch))
-    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    # process workers init/load their own weights; don't pay for a parent copy
+    need_params = args.replicas <= 1 or args.transport != "process"
+    params = api.init(jax.random.PRNGKey(0), cfg)[0] if need_params else None
     scfg = ServeConfig(max_len=args.max_len, slots=args.slots)
     rng = np.random.RandomState(args.seed)
     prompts = [rng.randint(0, cfg.vocab,
@@ -65,12 +80,20 @@ def main(argv=None):
                         admission=AdmissionController(
                             AdmissionConfig(max_queue_cost=args.max_queue),
                             metrics))
-        shared_fns = make_engine_fns(cfg, scfg)
-        for _ in range(args.replicas):
-            router.add_replica(
-                EngineBackend(Engine(params, cfg, scfg, metrics=metrics,
-                                     shared_fns=shared_fns)),
-                ReplicaConfig(max_batch=args.slots))
+        rcfg = ReplicaConfig(max_batch=args.slots)
+        if args.transport == "process":
+            spec = engine_spec(arch=args.arch, max_len=args.max_len,
+                               slots=args.slots, reduce=True, seed=0,
+                               weights_path=args.weights_dir)
+            for _ in range(args.replicas):
+                router.add_replica(spec=spec, cfg=rcfg, transport="process")
+        else:
+            shared_fns = make_engine_fns(cfg, scfg)
+            for _ in range(args.replicas):
+                router.add_replica(
+                    EngineBackend(Engine(params, cfg, scfg, metrics=metrics,
+                                         shared_fns=shared_fns)),
+                    rcfg)
         t0 = time.perf_counter()
         creqs = [router.submit((p, args.max_new), cost=args.max_new,
                                session_key=str(i), timeout_s=600.0)
@@ -82,6 +105,7 @@ def main(argv=None):
         lats = [r.finished_s - r.submitted_s for r in creqs]
         snap = metrics.snapshot()
         print(f"[cluster] replicas={args.replicas} "
+              f"transport={args.transport} "
               f"policy={args.router_policy} "
               f"completed={snap['router.completed']:.0f} "
               f"shed={snap.get('admission.shed_queue_full', 0):.0f}")

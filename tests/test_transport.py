@@ -1,0 +1,334 @@
+"""Transport layer: process workers with RPC inboxes, wire framing,
+crash-spill over real process death (SIGKILL), worker-side metrics
+aggregation, per-backend admission cost models, and the router property
+that dead transports are never dispatch candidates.
+
+Process tests use the echo BackendSpec (no jax in the worker) so spawn
+cost is interpreter + numpy import only."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from tests._hyp_compat import given, settings, st
+
+from repro.cluster import (AdmissionConfig, AdmissionController, Autoscaler,
+                           AutoscalerConfig, BackendSpec, FnBackend,
+                           LocalTransport, MetricsRegistry, ProcessTransport,
+                           Rejected, ReplicaConfig, Router, Status,
+                           echo_spec, make_transport, merge_snapshots)
+from repro.cluster.replica import ClusterRequest
+from repro.cluster.transport import decode_frame, encode_frame
+from repro.core.partitioner import CostModel
+from repro.core.service import MLaaSService
+
+PROC_CFG = ReplicaConfig(inbox_capacity=256, max_batch=4)
+
+
+# ----------------------------------------------------------------------
+def test_frame_codec_roundtrips_plain_and_numpy():
+    plain = ["req", 7, 3, {"a": [1, 2, 3], "b": "x"}]
+    buf = encode_frame(plain)
+    assert decode_frame(buf) == plain
+    arr = np.arange(12, dtype=np.float32).reshape(3, 4)
+    tagged = decode_frame(encode_frame(("req", 1, 1, arr)))
+    assert tagged[0] == "req"
+    np.testing.assert_array_equal(tagged[3], arr)
+    # payload-carrying frames must round-trip type-exact: a tuple payload
+    # stays a tuple (msgpack would flatten it to a list)
+    exact = decode_frame(encode_frame(("req", 1, 1, (1, 2)), pickle_only=True))
+    assert exact == ("req", 1, 1, (1, 2)) and isinstance(exact[3], tuple)
+
+
+def test_backend_spec_builds_and_validates():
+    b = echo_spec(delay_s=0.0, scale=3).build()
+    assert b.process([1, 2]) == [3, 6]
+    with pytest.raises(ValueError):
+        BackendSpec("no.colon.in.target").build()
+    with pytest.raises(ValueError):
+        make_transport("process", backend=FnBackend(lambda ps: ps))
+    with pytest.raises(ValueError):
+        make_transport("carrier-pigeon", spec=echo_spec())
+
+
+# ----------------------------------------------------------------------
+def test_process_transport_round_trip_and_worker_metrics():
+    m = MetricsRegistry()
+    r = Router(policy="round_robin", metrics=m)
+    for _ in range(2):
+        r.add_replica(spec=echo_spec(delay_s=0.001), cfg=PROC_CFG,
+                      transport="process")
+    reqs = [r.submit(i) for i in range(24)]
+    assert [r.wait(q, 30.0) for q in reqs] == [2 * i for i in range(24)]
+    assert all(q.status is Status.OK for q in reqs)
+    # composite payloads/results keep their exact types across the pipe
+    tup = r.submit((1, 2))
+    out = r.wait(tup, 30.0)
+    assert out == (1, 2, 1, 2) and isinstance(out, tuple)
+    # worker-side counters arrive via heartbeat snapshots and aggregate
+    deadline = time.monotonic() + 5.0
+    while time.monotonic() < deadline:
+        snap = r.cluster_snapshot()
+        if snap.get("replica.batch_s.count", 0) > 0:
+            break
+        time.sleep(0.05)
+    assert snap["replica.batch_s.count"] > 0
+    assert snap["router.completed"] == 25      # 24 ints + the tuple probe
+    r.stop()
+    assert r.n_alive() == 0
+
+
+def test_process_crash_mid_batch_loses_zero_requests():
+    """Kill the worker *process* (SIGKILL) mid-batch: every unacknowledged
+    request must spill and complete on survivors — at-least-once, zero
+    lost, across a real process boundary."""
+    m = MetricsRegistry()
+    r = Router(policy="round_robin", metrics=m, max_retries=3)
+    workers = [r.add_replica(spec=echo_spec(delay_s=0.01), cfg=PROC_CFG,
+                             transport="process")
+               for _ in range(3)]
+    reqs = [r.submit(i) for i in range(60)]
+    time.sleep(0.02)                      # mid-load…
+    workers[0].inject_crash()             # …SIGKILL one worker process
+    results = [r.wait(q, 30.0) for q in reqs]
+    assert all(q.status is Status.OK for q in reqs), \
+        {q.status for q in reqs}
+    assert results == [2 * i for i in range(60)]
+    assert r.n_alive() == 2
+    assert not workers[0].alive
+    assert not workers[0]._proc.is_alive()
+    snap = m.snapshot()
+    assert snap["replica.crashes"] == 1
+    assert snap["router.failed"] == 0
+    r.stop()
+
+
+def test_unpicklable_payload_sheds_without_killing_the_worker():
+    """A payload that cannot cross the process boundary is refused at
+    offer() (explicit shed), never sent, and never leaks outstanding cost."""
+    r = Router()
+    w = r.add_replica(spec=echo_spec(), cfg=PROC_CFG, transport="process")
+    q = r.submit(threading.Lock(), timeout_s=5.0)
+    assert q.status is Status.REJECTED and q.result.reason == "queue_full"
+    assert w.outstanding_cost() == 0
+    ok = r.submit(3)                      # replica still alive and serving
+    assert r.wait(ok, 15.0) == 6
+    r.stop()
+
+
+def test_process_soft_crash_spills_before_ack():
+    """The ("crash",) control frame: the worker raises at its next loop
+    checkpoint instead of being SIGKILLed, exercising the in-worker
+    crash-before-ack path across the pipe."""
+    m = MetricsRegistry()
+    r = Router(policy="round_robin", metrics=m, max_retries=3)
+    workers = [r.add_replica(spec=echo_spec(delay_s=0.01), cfg=PROC_CFG,
+                             transport="process")
+               for _ in range(2)]
+    reqs = [r.submit(i) for i in range(30)]
+    time.sleep(0.02)
+    workers[0].inject_crash(soft=True)
+    results = [r.wait(q, 30.0) for q in reqs]
+    assert all(q.status is Status.OK for q in reqs)
+    assert results == [2 * i for i in range(30)]
+    assert not workers[0].alive and r.n_alive() == 1
+    assert m.snapshot()["replica.crashes"] == 1
+    r.stop()
+
+
+def test_kind_with_no_live_replica_sheds_explicitly():
+    """Strict kind routing: a request whose backend kind has no live
+    replica must shed, not fall back onto wrong-kind backends."""
+    r = Router()
+    r.add_replica(FnBackend(lambda ps: [p * 2 for p in ps]),
+                  ReplicaConfig(), kind="svm")
+    q = r.submit(1, kind="lm", timeout_s=5.0)
+    assert q.status is Status.REJECTED and q.result.reason == "queue_full"
+    ok = r.submit(2, kind="svm", timeout_s=5.0)
+    assert r.wait(ok, 5.0) == 4
+    r.stop()
+
+
+def test_process_crash_with_no_survivors_fails_explicitly():
+    r = Router()
+    w = r.add_replica(spec=echo_spec(delay_s=0.2), cfg=PROC_CFG,
+                      transport="process")
+    reqs = [r.submit(i) for i in range(6)]
+    w.inject_crash()
+    for q in reqs:
+        assert q.done.wait(15.0), "must fail explicitly, not hang"
+    assert all(q.status is Status.FAILED for q in reqs)
+    r.stop()
+
+
+def test_process_drain_finishes_outstanding():
+    r = Router()
+    w = r.add_replica(spec=echo_spec(delay_s=0.002), cfg=PROC_CFG,
+                      transport="process")
+    reqs = [r.submit(i) for i in range(16)]
+    r.remove_replica(w.rid, drain=True)
+    for q in reqs:
+        assert q.done.wait(15.0)
+    assert all(q.status is Status.OK for q in reqs)
+    assert [q.result for q in reqs] == [2 * i for i in range(16)]
+
+
+def test_process_backend_exception_spills_to_survivors():
+    """A worker whose backend raises dies like a thread replica: the batch
+    spills and survivors absorb it."""
+    r = Router(max_retries=3)
+    bomb = BackendSpec("tests.test_transport:build_bomb", {"trip": 3})
+    r.add_replica(spec=bomb, cfg=PROC_CFG, transport="process")
+    r.add_replica(spec=echo_spec(delay_s=0.001), cfg=PROC_CFG,
+                  transport="process")
+    reqs = [r.submit(i) for i in range(20)]
+    for q in reqs:
+        assert q.done.wait(30.0)
+    assert all(q.status is Status.OK for q in reqs)
+    assert r.n_alive() == 1
+    r.stop()
+
+
+def build_bomb(trip: int = 3):
+    """Module-level builder (spawn-importable): explodes on any payload
+    >= ``trip``, echoing otherwise."""
+    def step(payloads):
+        if any(p >= trip for p in payloads):
+            raise RuntimeError(f"bomb tripped at {trip}")
+        return [p * 2 for p in payloads]
+    return FnBackend(step)
+
+
+def test_service_front_targets_process_cluster():
+    r = Router(policy="least_loaded")
+    for _ in range(2):
+        r.add_replica(spec=echo_spec(), cfg=PROC_CFG, transport="process")
+    svc = MLaaSService(router=r, capacity=4).start()
+    reqs = [svc.submit(i, timeout_s=15.0) for i in range(12)]
+    for q in reqs:
+        assert q.done.wait(15.0)
+    svc.stop()
+    r.stop()
+    assert [q.result for q in reqs] == [2 * i for i in range(12)]
+
+
+def test_autoscaler_scales_up_with_process_transport():
+    gate_delay = 0.05
+    r = Router(policy="least_loaded")
+    r.add_replica(spec=echo_spec(delay_s=gate_delay), cfg=PROC_CFG,
+                  transport="process")
+    sc = Autoscaler(r, lambda: echo_spec(delay_s=gate_delay),
+                    AutoscalerConfig(max_replicas=2, cooldown_s=0.0,
+                                     scale_up_depth=4.0,
+                                     replica_cfg=PROC_CFG),
+                    transport="process")
+    reqs = [r.submit(i) for i in range(30)]
+    ev = sc.tick()
+    assert ev and ev.action == "up" and r.n_alive() == 2
+    assert isinstance(r.alive_replicas()[0], ProcessTransport)
+    for q in reqs:
+        assert q.done.wait(30.0)
+    r.stop()
+
+
+# ----------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 6), st.sampled_from(["round_robin", "least_loaded",
+                                           "session_affinity"]),
+       st.integers(0, 99))
+def test_router_never_ranks_a_dead_transport(dead_mask, policy, key):
+    """Property: whatever the policy and whichever replicas have died,
+    the dispatch preference order contains only alive transports."""
+    r = Router(policy=policy)
+    transports = []
+    for i in range(3):
+        t = LocalTransport(FnBackend(lambda ps: ps), ReplicaConfig())
+        t.alive = not (dead_mask >> i) & 1    # died without starting a thread
+        r._replicas[t.rid] = t
+        transports.append(t)
+    req = ClusterRequest(payload=0, session_key=f"user-{key}", rid=key)
+    ranked = r._ranked(req)
+    assert all(t.alive for t in ranked)
+    alive = [t for t in transports if t.alive]
+    assert sorted(t.rid for t in ranked) == sorted(t.rid for t in alive)
+    if not alive:
+        # dispatch must shed explicitly, never hang or pick a corpse
+        q = r.submit(1, timeout_s=5.0)
+        assert q.status is Status.REJECTED and q.result.reason == "queue_full"
+
+
+# ----------------------------------------------------------------------
+def test_admission_uses_per_backend_cost_models():
+    lm_cm = CostModel(overhead_s=0.0, per_item_s=0.5, r2=1.0)    # 0.5 s/token
+    svm_cm = CostModel(overhead_s=0.0, per_item_s=1e-4, r2=1.0)  # 0.1 ms/row
+    ctrl = AdmissionController(AdmissionConfig(
+        max_queue_cost=10_000,
+        cost_models={"lm": lm_cm, "svm": svm_cm}))
+    now = 0.0
+    # 100 cost units in 1s: infeasible for LM tokens, trivial for SVM rows
+    shed = ctrl.decide(0, 100, deadline_s=1.0, now=now, kind="lm")
+    assert shed is not None and shed.reason == "deadline"
+    assert ctrl.decide(0, 100, deadline_s=1.0, now=now, kind="svm") is None
+    # unknown kind falls back to the global model (none here -> admit)
+    assert ctrl.decide(0, 100, deadline_s=1.0, now=now, kind="vlm") is None
+
+
+def test_router_routes_by_kind_and_sheds_per_kind_queue():
+    """Per-kind admission sees only that backend's queue: a deep LM queue
+    must not shed SVM traffic."""
+    lm_cm = CostModel(overhead_s=0.0, per_item_s=1.0, r2=1.0)
+    ctrl = AdmissionController(AdmissionConfig(
+        max_queue_cost=10_000, cost_models={"lm": lm_cm}))
+    gate = threading.Event()
+
+    def gated(payloads):
+        assert gate.wait(10.0)
+        return [p * 2 for p in payloads]
+
+    r = Router(policy="least_loaded", admission=ctrl)
+    r.add_replica(FnBackend(gated), ReplicaConfig(inbox_capacity=256),
+                  kind="lm")
+    r.add_replica(FnBackend(gated), ReplicaConfig(inbox_capacity=256),
+                  kind="svm")
+    # pile cost onto the LM replica
+    lm_reqs = [r.submit(i, cost=5, kind="lm", timeout_s=60.0)
+               for i in range(4)]
+    assert r.queue_depth("lm") >= 15 and r.queue_depth("svm") == 0
+    # an LM request with a tight deadline sheds (queued lm cost is huge)...
+    shed = r.submit(99, cost=1, kind="lm", timeout_s=2.0)
+    assert shed.status is Status.REJECTED and shed.result.reason == "deadline"
+    # ...but SVM traffic with the same deadline is admitted: its queue is
+    # empty and it has no slow cost model
+    ok = r.submit(7, cost=1, kind="svm", timeout_s=2.0)
+    assert ok.status is Status.PENDING
+    gate.set()
+    for q in lm_reqs + [ok]:
+        assert q.done.wait(15.0)
+    assert ok.status is Status.OK and ok.replica_rid is not None
+    r.stop()
+
+
+def test_merge_snapshots_counters_sum_means_weight_percentiles_max():
+    base = {"replica.batch_s.count": 10.0, "replica.batch_s.mean": 2.0,
+            "replica.batch_s.p95": 5.0, "replica.crashes": 1.0}
+    w1 = {"replica.batch_s.count": 30.0, "replica.batch_s.mean": 4.0,
+          "replica.batch_s.p95": 9.0, "replica.crashes": 2.0}
+    w2 = {"only.in.worker": 3.0}
+    out = merge_snapshots(base, [w1, w2])
+    assert out["replica.batch_s.count"] == 40.0
+    assert out["replica.batch_s.mean"] == pytest.approx(
+        (10 * 2.0 + 30 * 4.0) / 40)
+    assert out["replica.batch_s.p95"] == 9.0
+    assert out["replica.crashes"] == 3.0
+    assert out["only.in.worker"] == 3.0
+
+
+def test_service_request_done_is_a_real_event_field():
+    from repro.core.service import ServiceRequest
+    import dataclasses as dc
+    names = [f.name for f in dc.fields(ServiceRequest)]
+    assert "done" in names, "done must be a dataclass field, not a class attr"
+    a, b = ServiceRequest(1, deadline_s=0.0), ServiceRequest(2, deadline_s=0.0)
+    assert isinstance(a.done, threading.Event)
+    assert a.done is not b.done, "each request needs its own Event"
