@@ -15,12 +15,16 @@ runtime: what scales is the ingest/dispatch/compute *overlap*, not device
 FLOPs (XLA-CPU already parallelizes a single jitted call across this box's
 2 cores).  ``process`` replicas are spawned workers with RPC inboxes and
 independent JAX runtimes — the configuration where adding replicas can
-scale compute itself on real multi-core/TPU hosts.  Comparing the two
-columns in ``BENCH_cluster.json`` is how the compute-scaling claim is
-tracked across PRs.
+scale compute itself on real multi-core/TPU hosts.  ``socket`` replicas
+are the same spec-rebuilt workers behind framed localhost TCP (the
+multi-host configuration, measured here over loopback): the delta between
+the ``process`` and ``socket`` columns is the wire cost of
+network-transparent placement.  Comparing columns in
+``BENCH_cluster.json`` is how the compute-scaling claim is tracked across
+PRs.
 
     PYTHONPATH=src python -m benchmarks.bench_cluster [--quick] [--no-lm] \
-        [--transport {thread,process,both}]
+        [--transport {thread,process,socket,both,all}]
 
 Machine-readable results land in ``BENCH_cluster.json`` at the repo root.
 """
@@ -55,8 +59,8 @@ def _make_router(n_replicas: int, metrics, max_batch=4,
                         AdmissionConfig(max_queue_cost=1 << 16), metrics))
     rcfg = ReplicaConfig(inbox_capacity=1024, max_batch=max_batch)
     for _ in range(n_replicas):
-        if transport == "process":
-            router.add_replica(spec=spec, cfg=rcfg, transport="process")
+        if transport in ("process", "socket"):
+            router.add_replica(spec=spec, cfg=rcfg, transport=transport)
         else:
             router.add_replica(backend_factory(), rcfg)
     return router
@@ -72,7 +76,7 @@ def bench_svm_stream(n_mb: int, mb_size: int, ingest_s: float,
     X, keys, _ = corpus_arrays(docs, dim=pcfg.feat_dim)
 
     backend_factory = spec = None
-    if transport == "process":
+    if transport in ("process", "socket"):
         # workers rebuild the runtime from config alone (their own compile,
         # their own JAX runtime) — the models derive deterministically
         spec = stream_spec(feat_dim=pcfg.feat_dim,
@@ -152,7 +156,7 @@ def bench_lm_engine(n_requests: int, max_new: int, ingest_s: float,
                for _ in range(n_requests)]
 
     spec = backend_factory = None
-    if transport == "process":
+    if transport in ("process", "socket"):
         spec = engine_spec(arch=arch, max_len=scfg.max_len, slots=scfg.slots,
                            reduce=True, seed=0, ingest_ms=ingest_s * 1e3)
     else:
@@ -179,7 +183,7 @@ def bench_lm_engine(n_requests: int, max_new: int, ingest_s: float,
         router = _make_router(n, metrics, max_batch=scfg.slots,
                               backend_factory=backend_factory, spec=spec,
                               transport=transport)
-        if transport == "process":
+        if transport in ("process", "socket"):
             # per-worker prefill/decode compile happens on first contact
             router.process_batch([(prompts[0], 2)] * n, timeout_s=600.0)
         t0 = time.perf_counter()
@@ -253,10 +257,12 @@ if __name__ == "__main__":
     ap.add_argument("--ingest-ms", type=float, default=4.0,
                     help="modeled per-micro-batch document ingest stall")
     ap.add_argument("--transport", default="both",
-                    choices=("thread", "process", "both"),
-                    help="which replica transports to sweep")
+                    choices=("thread", "process", "socket", "both", "all"),
+                    help="which replica transports to sweep (both = "
+                         "thread+process; all adds socket)")
     args = ap.parse_args()
-    trs = ("thread", "process") if args.transport == "both" \
-        else (args.transport,)
+    trs = {"both": ("thread", "process"),
+           "all": ("thread", "process", "socket")}.get(
+        args.transport, (args.transport,))
     run(quick=args.quick, lm=args.lm, ingest_ms=args.ingest_ms,
         transports=trs)

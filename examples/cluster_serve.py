@@ -9,9 +9,12 @@ Shows the three cluster behaviours on one trace:
 
 Replica placement is pluggable: ``--transport process`` places each replica
 in a spawned worker process (its own JAX runtime, RPC inbox) — the
-autoscaler then scales *worker processes* with zero code change.
+autoscaler then scales *worker processes* with zero code change — and
+``--transport socket`` puts the same worker behind a framed TCP connection
+with a reconnect handshake (here over loopback; the identical worker runs
+on any host via ``python -m repro.cluster.worker_main``).
 
-    PYTHONPATH=src python examples/cluster_serve.py [--transport process]
+    PYTHONPATH=src python examples/cluster_serve.py [--transport socket]
 """
 import argparse
 import time
@@ -39,8 +42,8 @@ def main(transport: str = "thread"):
     router = Router(policy="least_loaded", admission=admission, metrics=metrics)
     rcfg = ReplicaConfig(inbox_capacity=64, max_batch=1)
 
-    if transport == "process":
-        # worker processes rebuild the runtime from this serializable spec
+    if transport in ("process", "socket"):
+        # remote workers rebuild the runtime from this serializable spec
         def backend_factory():
             return stream_spec(feat_dim=pcfg.feat_dim,
                                claim_capacity=pcfg.claim_capacity,
@@ -48,7 +51,7 @@ def main(transport: str = "thread"):
                                capacity=scfg.capacity, window=scfg.window,
                                ingest_ms=10.0)
         router.add_replica(spec=backend_factory(), cfg=rcfg,
-                           transport="process")
+                           transport=transport)
     else:
         def backend_factory():
             rt = StreamRuntime(models, pcfg, scfg, step_fn=shared_step)
@@ -102,5 +105,5 @@ def main(transport: str = "thread"):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--transport", default="thread",
-                    choices=("thread", "process"))
+                    choices=("thread", "process", "socket"))
     main(transport=ap.parse_args().transport)

@@ -17,6 +17,8 @@ acyclic.
 from repro.cluster.admission import (AdmissionConfig,  # noqa: F401
                                      AdmissionController, Rejected,
                                      deadline_slack)
+from repro.cluster.artifacts import (ArtifactStore, artifact_ref,  # noqa: F401
+                                     resolve_spec, spec_fingerprint)
 from repro.cluster.autoscaler import (Autoscaler, AutoscalerConfig,  # noqa: F401
                                       ScaleEvent)
 from repro.cluster.backends import (BackendSpec, echo_spec,  # noqa: F401
@@ -29,4 +31,6 @@ from repro.cluster.replica import (ClusterRequest, EngineBackend,  # noqa: F401
 from repro.cluster.router import POLICIES, Router  # noqa: F401
 from repro.cluster.transport import (TRANSPORTS, LocalTransport,  # noqa: F401
                                      ProcessTransport, ReplicaWorker,
-                                     Transport, make_transport)
+                                     SocketTransport, Transport,
+                                     default_listener, make_transport)
+from repro.cluster.wire import (PROTOCOL_VERSION, WorkerListener)  # noqa: F401

@@ -10,12 +10,26 @@ registry so a single ``snapshot()`` describes the whole service.
 """
 from __future__ import annotations
 
+import bisect
+import re
 import threading
 import time
 from contextlib import contextmanager
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
+
+# Shared log-spaced histogram bucket upper bounds (seconds): 1e-4 .. 1e3 at
+# four buckets per decade (resolution factor 10^(1/4) ~ 1.78x), plus an
+# implicit overflow bucket — the top must clear a worker's first-batch jax
+# compile (minutes).  Fixed module-wide so worker-side snapshots and the
+# router-side registry always agree on bucket meaning — that is what makes
+# cluster-wide percentile *merging* exact up to bucket resolution
+# (``merge_snapshots``), instead of the old max-across-workers upper bound.
+HIST_BUCKET_BOUNDS: Sequence[float] = tuple(
+    float(10.0 ** (e / 4.0)) for e in range(-16, 13))
+_N_BUCKETS = len(HIST_BUCKET_BOUNDS) + 1          # + overflow
+_BUCKET_KEY_RE = re.compile(r"^(?P<stem>.+)\.le(?P<i>\d+)$")
 
 
 class Counter:
@@ -56,9 +70,12 @@ class Gauge:
 
 class Histogram:
     """Bounded reservoir of observations with exact percentiles over the
-    retained sample (uniform reservoir replacement once full)."""
+    retained sample (uniform reservoir replacement once full), plus fixed
+    log-spaced bucket counts (:data:`HIST_BUCKET_BOUNDS`) so snapshots can
+    be *merged* across workers with bucket-resolution percentiles."""
 
-    __slots__ = ("_samples", "_count", "_sum", "_cap", "_rng", "_lock")
+    __slots__ = ("_samples", "_count", "_sum", "_cap", "_rng", "_lock",
+                 "_buckets")
 
     def __init__(self, cap: int = 4096):
         self._samples: List[float] = []
@@ -67,17 +84,24 @@ class Histogram:
         self._cap = cap
         self._rng = np.random.RandomState(0)
         self._lock = threading.Lock()
+        self._buckets = [0] * _N_BUCKETS
 
     def observe(self, v: float) -> None:
         with self._lock:
             self._count += 1
             self._sum += v
+            self._buckets[bisect.bisect_left(HIST_BUCKET_BOUNDS,
+                                             float(v))] += 1
             if len(self._samples) < self._cap:
                 self._samples.append(float(v))
             else:                     # reservoir: keep each obs w.p. cap/count
                 j = self._rng.randint(self._count)
                 if j < self._cap:
                     self._samples[j] = float(v)
+
+    def bucket_counts(self) -> List[int]:
+        with self._lock:
+            return list(self._buckets)
 
     @property
     def count(self) -> int:
@@ -132,7 +156,9 @@ class MetricsRegistry:
 
     def snapshot(self) -> Dict[str, float]:
         """Flat view: counters/gauges by name, histograms expanded to
-        count/mean/p50/p95/p99."""
+        count/mean/p50/p95/p99 plus their non-empty bucket counts
+        (``<name>.le<i>`` against :data:`HIST_BUCKET_BOUNDS`), which is
+        what lets ``merge_snapshots`` combine percentiles exactly."""
         out: Dict[str, float] = {}
         with self._lock:
             counters = dict(self._counters)
@@ -147,6 +173,9 @@ class MetricsRegistry:
             out[f"{k}.mean"] = h.mean()
             for p in (50, 95, 99):
                 out[f"{k}.p{p}"] = h.percentile(p)
+            for i, n in enumerate(h.bucket_counts()):
+                if n:
+                    out[f"{k}.le{i}"] = float(n)
         return out
 
     def report(self) -> str:
@@ -154,21 +183,53 @@ class MetricsRegistry:
         return "\n".join(f"{k}={snap[k]:.6g}" for k in sorted(snap))
 
 
+def bucket_percentile(counts: Sequence[float], p: float) -> float:
+    """Percentile estimate from :data:`HIST_BUCKET_BOUNDS` bucket counts,
+    linearly interpolated within the containing bucket (exact up to the
+    10^(1/4)x bucket resolution).  A percentile landing in the overflow
+    bucket returns ``inf`` — the buckets cannot bound it, and the caller
+    falls back to a conservative estimate rather than under-reporting the
+    tail."""
+    total = float(sum(counts))
+    if total <= 0:
+        return 0.0
+    target = (p / 100.0) * total
+    cum = 0.0
+    for i, c in enumerate(counts):
+        if c <= 0:
+            continue
+        if cum + c >= target:
+            if i >= len(HIST_BUCKET_BOUNDS):      # overflow bucket
+                return float("inf")
+            lo = HIST_BUCKET_BOUNDS[i - 1] if i > 0 else 0.0
+            hi = HIST_BUCKET_BOUNDS[i]
+            return float(lo + (hi - lo) * max(target - cum, 0.0) / c)
+        cum += c
+    return float("inf")
+
+
 def merge_snapshots(base: Dict[str, float],
                     worker_snaps: List[Dict[str, float]]) -> Dict[str, float]:
     """Aggregate worker-side snapshots into one cluster view.
 
-    Process replicas cannot write into the parent's registry, so they ship
+    Remote replicas cannot write into the parent's registry, so they ship
     ``snapshot()`` dicts over the heartbeat channel and the parent merges:
-    counters/gauges and histogram ``.count`` s sum; histogram ``.mean`` s
-    combine count-weighted; percentiles take the max across workers (an
-    upper bound — exact cluster-wide percentiles would need the samples).
+    counters/gauges, histogram ``.count`` s and bucket ``.le<i>`` counts
+    sum; histogram ``.mean`` s combine count-weighted.  Percentiles of any
+    histogram that ships bucket counts are *recomputed from the summed
+    buckets* — a true cluster-wide percentile up to bucket resolution —
+    and only histograms with no bucket data anywhere (legacy snapshots)
+    fall back to the old max-across-workers upper bound.
     """
     out = dict(base)
+    bucket_stems = set()
     for snap in worker_snaps:
         # counts *before* this worker is merged, for mean re-weighting
         pre = {k: out.get(k, 0.0) for k in snap if k.endswith(".count")}
         for k, v in snap.items():
+            m = _BUCKET_KEY_RE.match(k)
+            if m:
+                bucket_stems.add(m.group("stem"))
             if k not in out:
                 out[k] = v
             elif k.endswith((".p50", ".p95", ".p99")):
@@ -182,6 +243,17 @@ def merge_snapshots(base: Dict[str, float],
                     else 0.0
             else:
                 out[k] = out[k] + v
+    for stem in bucket_stems:
+        counts = [out.get(f"{stem}.le{i}", 0.0) for i in range(_N_BUCKETS)]
+        if sum(counts) <= 0:
+            continue
+        for p in (50, 95, 99):
+            est = bucket_percentile(counts, p)
+            if est != float("inf"):
+                out[f"{stem}.p{p}"] = est
+            # overflow: keep the max-merged value already in `out` — an
+            # observation beyond the last bound (e.g. a first-batch
+            # compile) must not be *under*-reported as the bound itself
     return out
 
 

@@ -30,9 +30,12 @@ from __future__ import annotations
 
 import hashlib
 import itertools
+import logging
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
+
+log = logging.getLogger(__name__)
 
 from repro.cluster.admission import AdmissionController, Rejected
 from repro.cluster.backends import BackendSpec
@@ -68,6 +71,16 @@ class Router:
         self._lock = threading.Lock()
         self._rr = itertools.count()
         self._rids = itertools.count(1)
+        # session placement ledger: session_key -> replica rid of the last
+        # successful dispatch, kept so a drain can *report* which sessions
+        # lose their warm state (ROADMAP: no cache handoff yet — remapped
+        # sessions restart cold, so surface them instead of hiding it).
+        # Bounded: this is drain-time reporting, not request state, so old
+        # entries evict LRU-ish rather than growing with total sessions
+        # ever served.
+        self._session_homes: Dict[str, int] = {}
+        self.session_ledger_cap = 65536
+        self.last_remapped_sessions: Dict[int, List[str]] = {}
         self._latency = self.metrics.histogram("router.latency_s")
         self._completed = self.metrics.counter("router.completed")
         self._failed = self.metrics.counter("router.failed")
@@ -78,13 +91,19 @@ class Router:
                     rid: Optional[int] = None, *,
                     spec: Optional[BackendSpec] = None,
                     transport: str = "thread",
-                    kind: Optional[str] = None) -> Transport:
+                    kind: Optional[str] = None,
+                    **transport_kwargs) -> Transport:
         """Add one replica.  ``backend`` (a live object) keeps PR 1's
         signature and runs on a thread; ``spec=`` + ``transport="process"``
-        places the same replica in a spawned worker process instead."""
+        places the same replica in a spawned worker process instead.
+        Extra keyword arguments pass through to ``make_transport`` — e.g.
+        ``transport="socket"`` accepts ``artifacts=`` (the weight store
+        fetches resolve against), ``listener=``, ``token=``, and
+        ``spawn=False`` for operator-run remote workers."""
         worker = make_transport(transport, backend=backend, spec=spec,
                                 cfg=cfg, rid=rid, metrics=self.metrics,
-                                on_spill=self._on_spill, kind=kind)
+                                on_spill=self._on_spill, kind=kind,
+                                **transport_kwargs)
         worker.start()
         with self._lock:
             self._replicas[worker.rid] = worker
@@ -93,12 +112,44 @@ class Router:
 
     def remove_replica(self, rid: int, drain: bool = True) -> None:
         """Take a replica out of rotation; by default let it finish its
-        inbox first (graceful drain)."""
+        inbox first (graceful drain).
+
+        Removing a replica remaps its rendezvous-hashed sessions — and
+        *only* its sessions: every key homed on a surviving replica keeps
+        its placement (the rendezvous property,
+        ``tests/test_cluster.py::test_drain_remaps_only_drained_sessions``).
+        Because there is no cache-state handoff yet, the remapped keys
+        restart cold elsewhere, so they are logged and exported via
+        ``last_remapped_sessions`` / the ``router.sessions_remapped``
+        counter for operators to correlate with latency spikes."""
         with self._lock:
             worker = self._replicas.pop(rid, None)
+        self._note_remapped_sessions(rid)
         self._set_pool_gauge()
         if worker is not None and drain:
             worker.drain()
+
+    def _note_remapped_sessions(self, rid: int) -> None:
+        with self._lock:
+            remapped = sorted(k for k, home in self._session_homes.items()
+                              if home == rid)
+            for k in remapped:
+                del self._session_homes[k]
+            if not remapped and rid in self.last_remapped_sessions:
+                # second notification for the same replica (e.g. a drain
+                # followed by its death spill): don't clobber the export
+                return
+            self.last_remapped_sessions[rid] = remapped
+            while len(self.last_remapped_sessions) > 64:  # bounded history
+                self.last_remapped_sessions.pop(
+                    next(iter(self.last_remapped_sessions)))
+        if remapped:
+            self.metrics.counter("router.sessions_remapped") \
+                .inc(len(remapped))
+            log.info("replica %d removed: %d session(s) remap and restart "
+                     "cold: %s", rid, len(remapped),
+                     ", ".join(remapped[:16]) +
+                     (" …" if len(remapped) > 16 else ""))
 
     def alive_replicas(self) -> List[Transport]:
         with self._lock:
@@ -155,9 +206,24 @@ class Router:
         self._dispatch(req)
         return req
 
+    def _note_session_home(self, key: str, rid: int) -> None:
+        with self._lock:
+            self._session_homes.pop(key, None)    # refresh insertion order
+            self._session_homes[key] = rid
+            while len(self._session_homes) > self.session_ledger_cap:
+                self._session_homes.pop(next(iter(self._session_homes)))
+
     def _dispatch(self, req: ClusterRequest) -> None:
         for worker in self._ranked(req):
+            attempts_before = req.attempts
             if worker.offer(req):
+                # offer() may report True because a concurrent spill took
+                # ownership (the fault path requeues it elsewhere and bumps
+                # req.attempts); only an undisturbed accept makes this
+                # worker the session's home
+                if req.session_key is not None and \
+                        req.attempts == attempts_before:
+                    self._note_session_home(req.session_key, worker.rid)
                 self.metrics.gauge("router.queue_depth").set(self.queue_depth())
                 return
         # every alive inbox full (or pool empty): explicit backpressure
@@ -174,13 +240,22 @@ class Router:
     # -------------------------------------------------- fault path
     def _on_spill(self, spilled: List[ClusterRequest],
                   dead: Transport) -> None:
-        """Requeue a crashed replica's unacknowledged requests on survivors.
+        """Requeue a spilling replica's unacknowledged requests.
 
-        At-least-once: a request whose batch finished compute but was never
-        acknowledged is re-executed elsewhere; none are lost."""
-        with self._lock:
-            self._replicas.pop(dead.rid, None)
-        self._set_pool_gauge()
+        Two spill sources share this path: a *dead* transport (crash,
+        heartbeat timeout) is removed from the pool and its requests go to
+        survivors only; a transport that is merely *disconnected* (socket
+        drop inside its reconnect window, ``dead.alive`` still True) stays
+        in the pool and may even re-accept its own spilled requests once
+        the worker reconnects.  At-least-once either way: a request whose
+        batch finished compute but was never acknowledged is re-executed;
+        none are lost."""
+        if not dead.alive:
+            with self._lock:
+                self._replicas.pop(dead.rid, None)
+            self._note_remapped_sessions(dead.rid)
+            self._set_pool_gauge()
+        exclude = dead.rid if not dead.alive else None
         for req in spilled:
             req.attempts += 1
             if req.attempts > self.max_retries:
@@ -189,14 +264,15 @@ class Router:
                     f"{dead.rid} crash"))
                 self._failed.inc()
                 continue
-            if not self._requeue_blocking(req, exclude=dead.rid):
+            if not self._requeue_blocking(req, exclude=exclude):
                 req.fail(RuntimeError(
                     f"request {req.rid}: no surviving replica accepted it"))
                 self._failed.inc()
             else:
                 self._requeued.inc()
 
-    def _requeue_blocking(self, req: ClusterRequest, exclude: int) -> bool:
+    def _requeue_blocking(self, req: ClusterRequest,
+                          exclude: Optional[int]) -> bool:
         """Offer to survivors, waiting out transient inbox fullness (a crash
         dumps a burst on the pool) up to ``requeue_timeout_s``."""
         t_end = time.monotonic() + self.requeue_timeout_s
@@ -205,7 +281,11 @@ class Router:
             if not ranked:
                 return False
             for worker in ranked:
+                attempts_before = req.attempts
                 if worker.offer(req):
+                    if req.session_key is not None and \
+                            req.attempts == attempts_before:
+                        self._note_session_home(req.session_key, worker.rid)
                     return True
             time.sleep(0.002)
         return False

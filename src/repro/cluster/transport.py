@@ -8,73 +8,60 @@ inbox), so worker *placement* is pluggable:
     ``queue.Queue`` inbox.  Threads share one JAX runtime: weights are
     zero-copy, but device FLOPs do not scale beyond one client.
   * :class:`ProcessTransport` — a spawned worker subprocess with an RPC
-    inbox: requests travel over a duplex pipe as msgpack/pickle-framed
-    messages, acknowledgements and heartbeat/metrics snapshots travel back,
-    and crash detection is by process liveness (a SIGKILL'd worker is
-    noticed at the next pipe read).  Each worker owns an independent Python
-    interpreter and JAX runtime, so device FLOPs scale with workers — the
-    paper's worker *nodes*.
+    inbox over a duplex pipe; crash detection is by process liveness.
+    Each worker owns an independent Python interpreter and JAX runtime.
+  * :class:`SocketTransport`  — the same worker behind a framed TCP
+    connection (``cluster/wire.py``), so the worker may live on *any*
+    host: the paper's worker nodes, finally network-transparent.  The
+    worker dials the parent's :class:`~repro.cluster.wire.WorkerListener`
+    and completes a versioned (re)connect handshake (token, kind,
+    ``BackendSpec`` fingerprint); weights resolve through a
+    content-addressed artifact store (``cluster/artifacts.py``).  Crash
+    detection is by *heartbeat timeout*, not process liveness — the
+    parent may not own the worker's process.  A dropped connection spills
+    every unacknowledged request immediately (zero lost) while the
+    transport stays in the pool for a reconnect window, so a network blip
+    costs a requeue, not a replica.
 
-Both implement the same at-least-once contract: every request is either
-acknowledged exactly once or spilled back to ``on_spill`` for redispatch;
-none are lost.  The in-replica loop is shared
-(:func:`repro.cluster.replica.run_replica_loop`), so batching and
-crash-before-ack semantics are identical.
+All transports implement the same at-least-once contract: every request
+is either acknowledged exactly once or spilled back to ``on_spill`` for
+redispatch; none are lost.  The in-replica loop is shared
+(:func:`repro.cluster.replica.run_replica_loop`) and the parent-side
+bookkeeping for both remote transports is shared too
+(:class:`RemoteTransport`): the outstanding-request table, ack/heartbeat
+dispatch, and the die/spill path are one implementation, with the process
+and socket classes supplying only their carrier (pipe vs. TCP channel)
+and their death detector (liveness vs. heartbeat timeout).
 
-Process workers are rebuilt from a :class:`~repro.cluster.backends.
-BackendSpec` (config + weights path), never from live objects — the only
-things that cross the spawn boundary are picklable.
+Remote workers are rebuilt from a :class:`~repro.cluster.backends.
+BackendSpec` (config + weights path or ``artifact:<sha256>`` reference),
+never from live objects — the only things that cross a process or host
+boundary are picklable.
 """
 from __future__ import annotations
 
 import itertools
 import multiprocessing as mp
-import pickle
+import os
 import queue
 import threading
 import time
+import uuid
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-try:
-    import msgpack
-except ImportError:                                   # pragma: no cover - env
-    msgpack = None
-
+from repro.cluster.artifacts import ArtifactStore, spec_fingerprint
 from repro.cluster.backends import BackendSpec
+from repro.cluster.framing import decode_frame, encode_frame  # noqa: F401
+# (re-exported: the framed wire protocol predates cluster/framing.py)
 from repro.cluster.metrics import MetricsRegistry, null_registry
 from repro.cluster.replica import (ClusterRequest, ReplicaConfig,
                                    ReplicaCrash, run_replica_loop)
+from repro.cluster.wire import (Channel, ChannelClosed, PipeChannel,
+                                WorkerListener)
 
-TRANSPORTS = ("thread", "process")
+TRANSPORTS = ("thread", "process", "socket")
 
 OnSpill = Callable[[List[ClusterRequest], "Transport"], None]
-
-
-# ----------------------------------------------------------------------
-# Wire framing: msgpack for the control plane (tags, rids, heartbeat
-# snapshots — known plain types), pickle for anything carrying *user*
-# payloads or results (``pickle_only=True``): msgpack would silently
-# round-trip tuples as lists, making a backend behave differently across
-# the process boundary.  One tag byte keeps decode unambiguous.
-
-def encode_frame(obj: Any, pickle_only: bool = False) -> bytes:
-    if not pickle_only and msgpack is not None:
-        try:
-            return b"M" + msgpack.packb(obj, use_bin_type=True)
-        except (TypeError, ValueError, OverflowError):
-            pass
-    return b"P" + pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
-
-
-def decode_frame(buf: bytes) -> Any:
-    tag, body = buf[:1], buf[1:]
-    if tag == b"M":
-        if msgpack is None:
-            raise RuntimeError("msgpack frame received without msgpack")
-        return msgpack.unpackb(body, raw=False)
-    if tag == b"P":
-        return pickle.loads(body)
-    raise ValueError(f"unknown frame tag {tag!r}")
 
 
 # ----------------------------------------------------------------------
@@ -134,7 +121,7 @@ class Transport:
 
     def metrics_snapshot(self) -> Dict[str, float]:
         """Worker-side metrics.  Local replicas write into the shared
-        registry directly, so their snapshot is empty; process replicas
+        registry directly, so their snapshot is empty; remote replicas
         return the last heartbeat's registry snapshot."""
         return {}
 
@@ -308,57 +295,109 @@ class LocalTransport(Transport):
 
 
 # ----------------------------------------------------------------------
-# Worker-process side.
+# Worker side, shared by the process and socket transports.
 
-class _WorkerIO:
-    """Driver inbox IO inside the worker process: work items are
-    ``(rid, cost, payload)`` triples received over the pipe; acks,
+class WorkerIO:
+    """Driver inbox IO inside a remote worker: work items are
+    ``(rid, cost, payload)`` triples received over the channel; acks,
     heartbeats and metrics snapshots are shipped back.
 
-    A dedicated reader thread pumps the pipe into ``pending`` continuously,
-    so the parent's sends never back up behind a long ``backend.process``
-    call — ``offer()`` on the parent side stays non-blocking even when
-    payloads exceed the OS pipe buffer."""
+    A dedicated reader thread pumps the channel into ``pending``
+    continuously, so the parent's sends never back up behind a long
+    ``backend.process`` call — ``offer()`` on the parent side stays
+    non-blocking even when payloads exceed the OS transport buffer.
 
-    def __init__(self, conn, cfg: ReplicaConfig, rid: int,
-                 registry: MetricsRegistry):
-        self.conn = conn
+    With ``heartbeat_thread=True`` (socket workers) a second thread sends
+    heartbeats on the wire every ``heartbeat_interval_s`` even while the
+    replica loop is deep inside a long batch — the parent's only death
+    signal is heartbeat staleness, so the worker must stay audibly alive
+    through a minutes-long compile."""
+
+    def __init__(self, chan: Channel, cfg: ReplicaConfig, rid: int,
+                 registry: MetricsRegistry, heartbeat_thread: bool = False,
+                 backlog: Optional[List[Any]] = None):
+        self.chan = chan
         self.cfg = cfg
         self.rid = rid
         self.registry = registry
         self._hist = registry.histogram("replica.batch_s")
         self.pending: "queue.Queue[Tuple[int, int, Any]]" = queue.Queue()
+        self.disconnected = False
+        self.crashed = False
         self._crash = False
         self._closing = False
-        self._send_lock = threading.Lock()
         self._last_hb = 0.0
         self.processed = 0
         self.busy_s = 0.0
+        self._stop_hb = threading.Event()
+        # frames read off the channel before this IO existed (e.g. control
+        # frames that arrived while the artifact fetch loop owned the
+        # connection) are replayed first, in arrival order
+        for msg in (backlog or []):
+            self._ingest(msg)
         self._reader = threading.Thread(target=self._pump_loop, daemon=True,
                                         name=f"replica-{rid}-pump")
         self._reader.start()
+        self._hb_thread: Optional[threading.Thread] = None
+        if heartbeat_thread:
+            self._hb_thread = threading.Thread(
+                target=self._hb_loop, daemon=True, name=f"replica-{rid}-hb")
+            self._hb_thread.start()
 
     def _send(self, msg: Any, pickle_only: bool = False) -> None:
-        with self._send_lock:
-            self.conn.send_bytes(encode_frame(msg, pickle_only))
+        try:
+            self.chan.send(msg, pickle_only)
+        except ChannelClosed:
+            self._on_lost()
 
-    def _pump_loop(self) -> None:
-        """Reader thread: keep the parent->worker pipe drained."""
+    def _on_lost(self) -> None:
+        """The parent is unreachable: wind down.  Everything still queued
+        here is parent-owned state the parent has already spilled, so drop
+        it rather than burning compute on work that was re-dispatched."""
+        self.disconnected = True
+        self._closing = True
         while True:
             try:
-                if not self.conn.poll(0.05):
-                    continue
-                msg = decode_frame(self.conn.recv_bytes())
-            except (EOFError, OSError):
-                self._closing = True       # parent went away: wind down
+                self.pending.get_nowait()
+            except queue.Empty:
+                break
+
+    def _ingest(self, msg) -> None:
+        tag = msg[0]
+        if tag == "req":
+            self.pending.put((msg[1], msg[2], msg[3]))
+        elif tag == "drain":
+            self._closing = True
+        elif tag == "crash":
+            self._crash = True
+
+    def _pump_loop(self) -> None:
+        """Reader thread: keep the parent->worker channel drained."""
+        while not self.disconnected:
+            try:
+                msg = self.chan.recv(0.05)
+            except ChannelClosed:
+                self._on_lost()
                 return
-            tag = msg[0]
-            if tag == "req":
-                self.pending.put((msg[1], msg[2], msg[3]))
-            elif tag == "drain":
-                self._closing = True
-            elif tag == "crash":
-                self._crash = True
+            if msg is None:
+                continue
+            self._ingest(msg)
+
+    def _hb_loop(self) -> None:
+        while not self._stop_hb.wait(self.cfg.heartbeat_interval_s):
+            if self.disconnected:
+                return
+            self._last_hb = time.monotonic()
+            self._send(("hb", self.processed, self.busy_s,
+                        self.registry.snapshot()))
+
+    def send_ready(self) -> None:
+        self._send(("ready",))
+
+    def stop(self) -> None:
+        self._stop_hb.set()
+        if self._hb_thread is not None:
+            self._hb_thread.join(timeout=2.0)
 
     # -- driver callbacks ------------------------------------------------
     def heartbeat(self) -> None:
@@ -398,64 +437,56 @@ class _WorkerIO:
     def spill(self, batch, error: BaseException) -> None:
         # The parent owns every unacknowledged request; telling it why we
         # died is all that is needed — it spills from its own table.
-        try:
-            self._send(("dead", repr(error)))
-        except OSError:
-            pass
+        self.crashed = True
+        self._send(("dead", repr(error)))
 
     def close(self) -> None:
-        # FIFO pipe order guarantees every request sent before the drain
+        if self.disconnected:
+            return                      # the parent already spilled our work
+        # FIFO channel order guarantees every request sent before the drain
         # control message has already been pumped into `pending`, and the
         # driver only reaches here once `pending` is empty.
-        try:
-            self._send(("hb", self.processed, self.busy_s,
-                        self.registry.snapshot()))
-            self._send(("drained",))
-        except OSError:
-            pass
+        self._send(("hb", self.processed, self.busy_s,
+                    self.registry.snapshot()))
+        self._send(("drained",))
 
 
 def _worker_entry(conn, spec: BackendSpec, cfg: ReplicaConfig,
                   rid: int) -> None:
-    """Entry point of a spawned replica worker process."""
+    """Entry point of a spawned pipe-replica worker process."""
     registry = MetricsRegistry()
-    io = _WorkerIO(conn, cfg, rid, registry)
+    io = WorkerIO(PipeChannel(conn), cfg, rid, registry)
     try:
         backend = spec.build()
     except BaseException as e:          # noqa: BLE001 - report, don't raise
         io.spill([], e)
         return
-    io._send(("ready",))
+    io.send_ready()
     run_replica_loop(backend, cfg, io)
 
 
 # ----------------------------------------------------------------------
-class ProcessTransport(Transport):
-    """A replica in its own worker process behind an RPC inbox.
+class RemoteTransport(Transport):
+    """Parent-side half shared by :class:`ProcessTransport` and
+    :class:`SocketTransport`.
 
-    The parent keeps the table of unacknowledged requests; the worker only
-    ever sees ``(rid, cost, payload)`` triples.  If the process dies — a
-    backend exception, an injected ``SIGKILL``, an OOM kill — the pipe
-    breaks, the receiver notices within one poll interval, and every
-    unacknowledged request spills to ``on_spill``: the same zero-lost
-    contract as the thread transport, now robust to interpreter death.
+    Owns the table of unacknowledged requests — the worker only ever sees
+    ``(rid, cost, payload)`` triples — plus the ack/heartbeat/fetch frame
+    dispatch and the die/spill path.  Subclasses supply the carrier
+    (pipe/TCP), death detection (process liveness/heartbeat timeout) and
+    carrier teardown.
     """
 
     def __init__(self, spec: BackendSpec, cfg: ReplicaConfig = ReplicaConfig(),
                  rid: Optional[int] = None,
                  metrics: Optional[MetricsRegistry] = None,
                  on_spill: Optional[OnSpill] = None,
-                 kind: Optional[str] = None, start_method: str = "spawn"):
+                 kind: Optional[str] = None):
         super().__init__(cfg, rid=rid, metrics=metrics, on_spill=on_spill,
                          kind=kind if kind is not None else spec.kind)
         self.spec = spec
-        self._ctx = mp.get_context(start_method)
-        self._conn, self._child_conn = self._ctx.Pipe(duplex=True)
-        self._proc = None
-        self._recv_thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
-        self._send_lock = threading.Lock()   # pipe writes only: a full pipe
-        # must never stall the receiver's ack bookkeeping via self._lock
+        self._chan: Optional[Channel] = None
         self._outstanding: Dict[int, ClusterRequest] = {}
         self._outstanding_cost = 0
         self._closing = threading.Event()
@@ -464,31 +495,6 @@ class ProcessTransport(Transport):
         self._worker_snapshot: Dict[str, float] = {}
 
     # -- control surface -------------------------------------------------
-    def start(self, wait_ready: bool = True) -> "ProcessTransport":
-        self._proc = self._ctx.Process(
-            target=_worker_entry,
-            args=(self._child_conn, self.spec, self.cfg, self.rid),
-            daemon=True, name=f"replica-{self.rid}")
-        self._proc.start()
-        self._child_conn.close()        # the child holds its own handle now
-        self.alive = True
-        self.started_s = self.heartbeat_s = time.monotonic()
-        self._recv_thread = threading.Thread(
-            target=self._recv_loop, daemon=True,
-            name=f"replica-{self.rid}-recv")
-        self._recv_thread.start()
-        if wait_ready:
-            if not self._ready.wait(self.cfg.spawn_timeout_s):
-                err = ReplicaCrash(
-                    f"replica {self.rid}: worker not ready within "
-                    f"{self.cfg.spawn_timeout_s}s")
-                self._die(err)
-                raise err
-            if not self.alive:          # died during startup (build failed)
-                raise ReplicaCrash(
-                    f"replica {self.rid}: worker died during startup")
-        return self
-
     def offer(self, req: ClusterRequest) -> bool:
         if not self.alive or self._closing.is_set():
             return False
@@ -502,23 +508,26 @@ class ProcessTransport(Transport):
         except Exception:               # noqa: BLE001 - unserializable
             return False
         with self._lock:
-            if not self.alive or len(self._outstanding) >= \
-                    self.cfg.inbox_capacity:
+            chan = self._chan
+            if not self.alive or chan is None or \
+                    len(self._outstanding) >= self.cfg.inbox_capacity:
                 return False
             self._outstanding[req.rid] = req
             self._outstanding_cost += req.cost
         try:
-            with self._send_lock:
-                self._conn.send_bytes(frame)
-        except (OSError, ValueError):
+            chan.send_bytes(frame)
+        except ChannelClosed:
             with self._lock:
-                if self._outstanding.pop(req.rid, None) is not None:
+                owned = self._outstanding.pop(req.rid, None) is not None
+                if owned:
                     self._outstanding_cost -= req.cost
-            self._die(ReplicaCrash(
-                f"replica {self.rid}: pipe closed on offer"))
-            return False
-        if not self.alive:
-            # Raced with a concurrent death.  If the receiver's spill
+            self._channel_broken(chan, "send failed")
+            # if the fault path already took the request it is being
+            # requeued over there — claim success so the caller does not
+            # dispatch a second copy
+            return not owned
+        if not self.alive or self._chan is not chan:
+            # Raced with a concurrent death/disconnect.  If the spill
             # already took this request, the fault path owns it (it is
             # being requeued); otherwise reclaim it and report failure.
             with self._lock:
@@ -531,6 +540,181 @@ class ProcessTransport(Transport):
         with self._lock:
             return self._outstanding_cost
 
+    def drain(self, timeout: float = 10.0) -> None:
+        self._closing.set()
+        chan = self._chan
+        if chan is not None:
+            try:
+                chan.send(("drain",))
+            except ChannelClosed:
+                pass
+        self._drained.wait(timeout)
+        self.join(timeout)
+
+    def wait_ready(self, timeout: Optional[float] = None) -> bool:
+        return self._ready.wait(
+            self.cfg.spawn_timeout_s if timeout is None else timeout)
+
+    def metrics_snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._worker_snapshot)
+
+    def _await_ready(self) -> None:
+        if not self._ready.wait(self.cfg.spawn_timeout_s):
+            err = ReplicaCrash(
+                f"replica {self.rid}: worker not ready within "
+                f"{self.cfg.spawn_timeout_s}s")
+            self._die(err)
+            raise err
+        if not self.alive:              # died during startup (build failed)
+            raise ReplicaCrash(
+                f"replica {self.rid}: worker died during startup")
+
+    # -- receive path ----------------------------------------------------
+    def _recv_loop(self, chan: Channel) -> None:
+        while True:
+            if not self.alive or self._chan is not chan:
+                return
+            try:
+                msg = chan.recv(0.05)
+            except ChannelClosed:
+                self._channel_broken(chan, "connection lost")
+                return
+            if msg is None:
+                if not self._idle_tick(chan):
+                    return
+                continue
+            if not self._handle(chan, msg):
+                return
+
+    def _handle(self, chan: Channel, msg) -> bool:
+        tag = msg[0]
+        self.heartbeat_s = time.monotonic()
+        if tag == "ack":
+            self.busy_s += msg[2]
+            for rid, res in msg[1]:
+                with self._lock:
+                    req = self._outstanding.pop(rid, None)
+                    if req is not None:
+                        self._outstanding_cost -= req.cost
+                if req is not None:
+                    req.complete(res, self.rid)
+                    self.processed += 1
+        elif tag == "hb":
+            with self._lock:
+                self._worker_snapshot = dict(msg[3])
+        elif tag == "ready":
+            self._ready.set()
+        elif tag == "drained":
+            self._drained.set()
+        elif tag == "dead":
+            self._die(ReplicaCrash(
+                f"replica {self.rid}: worker died: {msg[1]}"))
+            return False
+        else:
+            return self._handle_extra(chan, msg)
+        return True
+
+    def _handle_extra(self, chan: Channel, msg) -> bool:
+        return True
+
+    def _idle_tick(self, chan: Channel) -> bool:
+        """Called on every recv timeout; False stops the loop."""
+        return True
+
+    def _channel_broken(self, chan: Channel, why: str) -> None:
+        raise NotImplementedError
+
+    # -- death / teardown ------------------------------------------------
+    def _take_outstanding(self) -> List[ClusterRequest]:
+        spilled = sorted(self._outstanding.values(), key=lambda r: r.rid)
+        self._outstanding.clear()
+        self._outstanding_cost = 0
+        return spilled
+
+    def _die(self, error: BaseException) -> None:
+        with self._lock:
+            if not self.alive:
+                return
+            self.alive = False
+            spilled = self._take_outstanding()
+            chan, self._chan = self._chan, None
+        self._ready.set()               # unblock any start()/wait_ready()
+        self._drained.set()
+        self._kill_carrier(chan)
+        self._record_crash(len(spilled))
+        self._spill_out(spilled, error)
+
+    def _drain_clean(self) -> None:
+        with self._lock:
+            self.alive = False
+            leftovers = self._take_outstanding()
+            chan, self._chan = self._chan, None
+        if chan is not None:
+            chan.close()
+        # a clean drain should leave nothing behind; spill defensively
+        if leftovers:
+            self._spill_out(leftovers, ReplicaCrash(
+                f"replica {self.rid}: drained with leftovers"))
+
+    def _kill_carrier(self, chan: Optional[Channel]) -> None:
+        if chan is not None:
+            chan.close()
+
+    def _spill_out(self, spilled: List[ClusterRequest],
+                   error: BaseException) -> None:
+        if self.on_spill is not None:
+            # called even when nothing spilled: the router uses the empty
+            # spill as the death notification (pool removal, session-remap
+            # export) for workers that died idle
+            self.on_spill(spilled, self)
+        else:
+            for r in spilled:
+                r.fail(error)
+
+
+# ----------------------------------------------------------------------
+class ProcessTransport(RemoteTransport):
+    """A replica in its own worker process behind an RPC inbox.
+
+    If the process dies — a backend exception, an injected ``SIGKILL``, an
+    OOM kill — the pipe breaks, the receiver notices within one poll
+    interval, and every unacknowledged request spills to ``on_spill``: the
+    same zero-lost contract as the thread transport, now robust to
+    interpreter death.
+    """
+
+    def __init__(self, spec: BackendSpec, cfg: ReplicaConfig = ReplicaConfig(),
+                 rid: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 on_spill: Optional[OnSpill] = None,
+                 kind: Optional[str] = None, start_method: str = "spawn"):
+        super().__init__(spec, cfg, rid=rid, metrics=metrics,
+                         on_spill=on_spill, kind=kind)
+        self._ctx = mp.get_context(start_method)
+        self._conn, self._child_conn = self._ctx.Pipe(duplex=True)
+        self._proc = None
+        self._recv_thread: Optional[threading.Thread] = None
+
+    # -- control surface -------------------------------------------------
+    def start(self, wait_ready: bool = True) -> "ProcessTransport":
+        self._proc = self._ctx.Process(
+            target=_worker_entry,
+            args=(self._child_conn, self.spec, self.cfg, self.rid),
+            daemon=True, name=f"replica-{self.rid}")
+        self._proc.start()
+        self._child_conn.close()        # the child holds its own handle now
+        self.alive = True
+        self.started_s = self.heartbeat_s = time.monotonic()
+        self._chan = PipeChannel(self._conn)
+        self._recv_thread = threading.Thread(
+            target=self._recv_loop, args=(self._chan,), daemon=True,
+            name=f"replica-{self.rid}-recv")
+        self._recv_thread.start()
+        if wait_ready:
+            self._await_ready()
+        return self
+
     def inject_crash(self, soft: bool = False) -> None:
         """Fault injection.  Hard (default) == real process death: SIGKILL
         the worker; the receiver detects the broken pipe and spills every
@@ -542,22 +726,16 @@ class ProcessTransport(Transport):
             self._die(ReplicaCrash(f"replica {self.rid}: injected crash"))
             return
         if soft:
+            chan = self._chan
             try:
-                self._send(("crash",))
-            except (OSError, ValueError):
+                if chan is None:
+                    raise ChannelClosed("no channel")
+                chan.send(("crash",))
+            except ChannelClosed:
                 self._die(ReplicaCrash(
                     f"replica {self.rid}: pipe closed on soft crash"))
         else:
             self._proc.kill()
-
-    def drain(self, timeout: float = 10.0) -> None:
-        self._closing.set()
-        try:
-            self._send(("drain",))
-        except (OSError, ValueError):
-            pass
-        self._drained.wait(timeout)
-        self.join(timeout)
 
     def join(self, timeout: float = 10.0) -> None:
         if self._proc is not None:
@@ -566,114 +744,355 @@ class ProcessTransport(Transport):
                 self._recv_thread is not threading.current_thread():
             self._recv_thread.join(timeout)
 
-    def wait_ready(self, timeout: Optional[float] = None) -> bool:
-        return self._ready.wait(
-            self.cfg.spawn_timeout_s if timeout is None else timeout)
+    # -- death detection: process liveness -------------------------------
+    def _idle_tick(self, chan: Channel) -> bool:
+        if self._proc is not None and not self._proc.is_alive():
+            # exited without a frame on the wire (e.g. killed between
+            # messages, or a clean post-drain exit)
+            self._channel_broken(chan, "worker exited")
+            return False
+        return True
 
-    def metrics_snapshot(self) -> Dict[str, float]:
-        with self._lock:
-            return dict(self._worker_snapshot)
-
-    # -- parent-side receive path ----------------------------------------
-    def _send(self, msg: Any, pickle_only: bool = False) -> None:
-        with self._send_lock:
-            self._conn.send_bytes(encode_frame(msg, pickle_only))
-
-    def _recv_loop(self) -> None:
-        while True:
-            try:
-                if not self._conn.poll(0.05):
-                    if not self.alive:
-                        return
-                    if self._proc is not None and not self._proc.is_alive():
-                        # exited without a frame on the wire (e.g. killed
-                        # between messages, or a clean post-drain exit)
-                        self._on_eof()
-                        return
-                    continue
-                msg = decode_frame(self._conn.recv_bytes())
-            except (EOFError, OSError, ValueError):
-                self._on_eof()
-                return
-            tag = msg[0]
-            self.heartbeat_s = time.monotonic()
-            if tag == "ack":
-                self.busy_s += msg[2]
-                for rid, res in msg[1]:
-                    with self._lock:
-                        req = self._outstanding.pop(rid, None)
-                        if req is not None:
-                            self._outstanding_cost -= req.cost
-                    if req is not None:
-                        req.complete(res, self.rid)
-                        self.processed += 1
-            elif tag == "hb":
-                with self._lock:
-                    self._worker_snapshot = dict(msg[3])
-            elif tag == "ready":
-                self._ready.set()
-            elif tag == "drained":
-                self._drained.set()
-            elif tag == "dead":
-                self._die(ReplicaCrash(
-                    f"replica {self.rid}: worker died: {msg[1]}"))
-                return
-
-    def _on_eof(self) -> None:
-        clean = self._closing.is_set() and self._drained.is_set()
-        if clean:
-            self.alive = False
-            with self._lock:
-                leftovers = sorted(self._outstanding.values(),
-                                   key=lambda r: r.rid)
-                self._outstanding.clear()
-                self._outstanding_cost = 0
-            # a clean drain should leave nothing behind; spill defensively
-            if leftovers:
-                self._spill_out(leftovers, ReplicaCrash(
-                    f"replica {self.rid}: drained with leftovers"))
+    def _channel_broken(self, chan: Channel, why: str) -> None:
+        if self._closing.is_set() and self._drained.is_set():
+            self._drain_clean()
         else:
             self._die(ReplicaCrash(
-                f"replica {self.rid}: worker process died"))
+                f"replica {self.rid}: worker process died ({why})"))
 
-    def _die(self, error: BaseException) -> None:
+    def _kill_carrier(self, chan: Optional[Channel]) -> None:
+        super()._kill_carrier(chan)
+        if self._proc is not None and self._proc.is_alive():
+            self._proc.kill()
+
+
+# ----------------------------------------------------------------------
+class SocketTransport(RemoteTransport):
+    """A replica on the far side of a framed TCP connection.
+
+    The worker dials the parent's :class:`~repro.cluster.wire.
+    WorkerListener` and opens with a versioned hello (token, kind, spec
+    fingerprint); the parent answers ``("welcome", rid, spec, cfg)`` and
+    the worker builds its backend from the shipped spec, pulling any
+    ``artifact:<sha256>`` weights reference from the parent's
+    :class:`~repro.cluster.artifacts.ArtifactStore` over the same
+    connection.  By default ``start()`` also spawns a local
+    ``worker_main`` process that dials back over loopback, so the socket
+    path is exercised end-to-end on one host; with ``spawn=False`` the
+    parent only listens, and the operator runs
+    ``python -m repro.cluster.worker_main --connect HOST:PORT --token T``
+    on any machine.
+
+    Failure model (vs. :class:`ProcessTransport`): the parent cannot see
+    the worker's process, so
+
+      * a *dropped connection* (RST, severed cable, SIGKILL'd worker)
+        spills every unacknowledged request immediately — zero lost — but
+        leaves the transport in the pool for a reconnect window;
+      * a worker that reconnects within ``heartbeat_timeout_s`` (same
+        token, same spec fingerprint) resumes service on the same rid, so
+        session-affinity placement is undisturbed;
+      * *heartbeat staleness* past ``heartbeat_timeout_s`` — never process
+        liveness — declares the transport dead.
+    """
+
+    def __init__(self, spec: BackendSpec, cfg: ReplicaConfig = ReplicaConfig(),
+                 rid: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 on_spill: Optional[OnSpill] = None,
+                 kind: Optional[str] = None,
+                 listener: Optional[WorkerListener] = None,
+                 spawn: bool = True, token: Optional[str] = None,
+                 artifacts: Optional[ArtifactStore] = None,
+                 start_method: str = "spawn"):
+        super().__init__(spec, cfg, rid=rid, metrics=metrics,
+                         on_spill=on_spill, kind=kind)
+        self.listener = listener if listener is not None \
+            else default_listener()
+        self.token = token if token is not None \
+            else f"w{self.rid}-{uuid.uuid4().hex[:10]}"
+        self.spawn = spawn
+        self.artifacts = artifacts
+        self._spec_hash = spec_fingerprint(spec)
+        self._ctx = mp.get_context(start_method)
+        self._proc = None
+        self._recv_threads: List[threading.Thread] = []
+        self._monitor: Optional[threading.Thread] = None
+        self._ever_connected = False
+
+    # -- control surface -------------------------------------------------
+    def start(self, wait_ready: bool = True) -> "SocketTransport":
+        self.alive = True
+        self.started_s = self.heartbeat_s = time.monotonic()
+        self.listener.register(self.token, self._adopt)
+        if self.spawn:
+            from repro.cluster import worker_main
+            self._proc = self._ctx.Process(
+                target=worker_main.run_worker,
+                args=(tuple(self.listener.address), self.token),
+                daemon=True, name=f"replica-{self.rid}-sock")
+            self._proc.start()
+        self._monitor = threading.Thread(
+            target=self._monitor_loop, daemon=True,
+            name=f"replica-{self.rid}-monitor")
+        self._monitor.start()
+        if wait_ready:
+            self._await_ready()
+        return self
+
+    def inject_crash(self, soft: bool = False) -> None:
+        """Hard (default): SIGKILL the spawned worker — the connection
+        drops, unacknowledged requests spill at once, and the heartbeat
+        monitor declares the transport dead when no reconnect arrives.
+        For a non-spawned (remote) worker there is no process to kill, so
+        hard crash degrades to immediate transport death.  Soft asks the
+        worker to raise at its next loop checkpoint, as on a pipe."""
+        if soft:
+            chan = self._chan
+            if chan is not None:
+                try:
+                    chan.send(("crash",))
+                    return
+                except ChannelClosed:
+                    pass
+        if self._proc is not None and self._proc.is_alive():
+            self._proc.kill()
+            if not soft:
+                return              # disconnect spill + hb timeout follow
+        self._die(ReplicaCrash(f"replica {self.rid}: injected crash"))
+
+    def sever_connection(self) -> None:
+        """Fault injection: cut the TCP connection without touching the
+        worker — a network partition.  Unacknowledged requests spill
+        immediately; the worker notices EOF and re-runs the handshake."""
+        chan = self._chan
+        if chan is not None:
+            chan.close()            # recv loops on both sides see EOF
+
+    def connected(self) -> bool:
+        return self._chan is not None
+
+    def drain(self, timeout: float = 10.0) -> None:
+        self._closing.set()
+        chan = self._chan
+        if chan is not None:
+            try:
+                chan.send(("drain",))
+            except ChannelClosed:
+                pass
+        t_end = time.monotonic() + timeout
+        while time.monotonic() < t_end:
+            if self._drained.wait(0.05):
+                break
+            if not self.alive:
+                break
+            if self._chan is None:
+                break               # disconnected mid-drain: nothing to wait
+        if self.alive and not self._drained.is_set():
+            self._retire()          # worker unreachable; close the slot
+        self.join(min(timeout, 5.0))
+
+    def _retire(self) -> None:
+        """Take the transport out of service without the crash metric —
+        used when a drain cannot complete because no worker is connected
+        (its outstanding table is already empty in that case)."""
         with self._lock:
             if not self.alive:
                 return
             self.alive = False
-            spilled = sorted(self._outstanding.values(), key=lambda r: r.rid)
-            self._outstanding.clear()
-            self._outstanding_cost = 0
-        self._ready.set()               # unblock any start()/wait_ready()
+            spilled = self._take_outstanding()
+            chan, self._chan = self._chan, None
+        self._ready.set()
         self._drained.set()
+        self._kill_carrier(chan)
+        if spilled:
+            self._record_crash(len(spilled))
+            self._spill_out(spilled, ReplicaCrash(
+                f"replica {self.rid}: retired with outstanding requests"))
+
+    def join(self, timeout: float = 10.0) -> None:
+        if self._proc is not None:
+            self._proc.join(timeout)
+        me = threading.current_thread()
+        for t in list(self._recv_threads):
+            if t is not me:
+                t.join(timeout)
+
+    # -- handshake (listener callback) -----------------------------------
+    def _adopt(self, chan: Channel, hello: tuple) -> None:
+        """Version was already checked by the listener; this half verifies
+        the spec fingerprint and swaps the live channel (first contact and
+        reconnect are the same path)."""
+        _tag, _ver, _token, _w_kind, w_hash = hello[:5]
+        if not self.alive:
+            try:
+                chan.send(("reject", f"replica {self.rid} is dead"))
+            except ChannelClosed:
+                pass
+            chan.close()
+            return
+        if w_hash is not None and w_hash != self._spec_hash:
+            # a stale worker (old deployment / different weights) must be
+            # refused at the door, not allowed to serve wrong results
+            # (count first: the peer acts on the reject the moment it lands)
+            self.metrics.counter("replica.handshake_rejects").inc()
+            try:
+                chan.send(("reject", "backend spec fingerprint mismatch"))
+            except ChannelClosed:
+                pass
+            chan.close()
+            return
+        # welcome must hit the wire BEFORE the channel is published: once
+        # self._chan is set, a concurrent offer() may send ("req", ...)
+        # frames, and the worker treats anything-but-welcome as a reject
+        try:
+            chan.send(("welcome", self.rid, self.spec, self.cfg),
+                      pickle_only=True)
+            if self._closing.is_set():
+                chan.send(("drain",))   # drain started while disconnected
+        except ChannelClosed:
+            chan.close()
+            return                      # worker will redial (or is gone)
+        with self._lock:
+            if not self.alive:
+                chan.close()
+                return
+            old, self._chan = self._chan, chan
+            # the worker may redial before *we* notice the old connection
+            # died (NAT drop, racing poll): anything still outstanding was
+            # sent down the old pipe and the new incarnation never saw it,
+            # so it must spill now — the stale recv loop will see the swap
+            # and stand down without spilling
+            stale = self._take_outstanding() if old is not None else []
+        if old is not None:
+            old.close()
+        reconnect = self._ever_connected
+        self._ever_connected = True
+        self.heartbeat_s = time.monotonic()
+        if reconnect:
+            self.metrics.counter("replica.reconnects").inc()
+        if stale:
+            self.metrics.counter("replica.disconnect_spills").inc(len(stale))
+            self._spill_out(stale, ReplicaCrash(
+                f"replica {self.rid}: reconnect superseded the previous "
+                f"connection"))
+        t = threading.Thread(target=self._recv_loop, args=(chan,),
+                             daemon=True, name=f"replica-{self.rid}-recv")
+        # prune loops whose channels are gone: a flaky link reconnecting
+        # for days must not accumulate dead Thread objects
+        self._recv_threads = [r for r in self._recv_threads if r.is_alive()]
+        self._recv_threads.append(t)
+        t.start()
+
+    # -- death detection: heartbeat timeout ------------------------------
+    def _monitor_loop(self) -> None:
+        period = min(0.05, self.cfg.heartbeat_timeout_s / 4)
+        while self.alive:
+            time.sleep(period)
+            if not self.alive:
+                return
+            if not self._ready.is_set():
+                continue            # startup is governed by spawn_timeout_s
+            stale = time.monotonic() - self.heartbeat_s
+            if stale > self.cfg.heartbeat_timeout_s:
+                self._die(ReplicaCrash(
+                    f"replica {self.rid}: heartbeat timeout "
+                    f"({stale:.2f}s > {self.cfg.heartbeat_timeout_s}s)"))
+                return
+
+    def _channel_broken(self, chan: Channel, why: str) -> None:
+        with self._lock:
+            if self._chan is not chan:
+                return              # stale loop; a newer channel took over
+            self._chan = None
+            spilled = self._take_outstanding()
+        chan.close()
+        if self._closing.is_set() and self._drained.is_set():
+            self.alive = False
+            self.listener.unregister(self.token)
+            if spilled:             # clean drain leaves nothing; defensive
+                self._spill_out(spilled, ReplicaCrash(
+                    f"replica {self.rid}: drained with leftovers"))
+            return
+        # Mid-flight disconnect: the zero-lost contract pays out *now* —
+        # every unacknowledged request spills for redispatch — but the
+        # transport stays in the pool for the reconnect window (the
+        # monitor declares death if no worker returns in time).
+        self.metrics.counter("replica.disconnects").inc()
+        if spilled:
+            self.metrics.counter("replica.disconnect_spills") \
+                .inc(len(spilled))
+            self._spill_out(spilled, ReplicaCrash(
+                f"replica {self.rid}: connection lost ({why})"))
+
+    #: one-frame fetch replies cap the shippable artifact (chunked
+    #: transfer is a ROADMAP item); past this the reply is an explicit
+    #: miss, not a dead recv thread
+    MAX_ARTIFACT_BYTES = 1 << 30
+
+    def _handle_extra(self, chan: Channel, msg) -> bool:
+        if msg[0] == "fetch":
+            # served off-thread: a gigabyte read + sendall on the recv
+            # thread would starve heartbeat processing for the whole
+            # transfer and let the monitor kill a healthy worker mid-fetch
+            threading.Thread(target=self._serve_fetch, args=(chan, msg[1]),
+                             daemon=True,
+                             name=f"replica-{self.rid}-fetch").start()
+        return True
+
+    def _serve_fetch(self, chan: Channel, digest) -> None:
+        data = None
+        try:
+            if self.artifacts is not None and self.artifacts.has(digest):
+                path = self.artifacts.get_path(digest)
+                if os.path.getsize(path) <= self.MAX_ARTIFACT_BYTES:
+                    data = self.artifacts.read_bytes(digest)
+        except (ValueError, OSError, KeyError):
+            data = None         # malformed digest / store hiccup: a miss,
+            # never an exception that would kill a transport thread
+        try:
+            chan.send(("artifact", digest, data))
+        except ChannelClosed:
+            pass                # the recv loop notices the break itself
+
+    def _kill_carrier(self, chan: Optional[Channel]) -> None:
+        self.listener.unregister(self.token)
+        super()._kill_carrier(chan)
         if self._proc is not None and self._proc.is_alive():
             self._proc.kill()
-        self._record_crash(len(spilled))
-        self._spill_out(spilled, error)
-
-    def _spill_out(self, spilled: List[ClusterRequest],
-                   error: BaseException) -> None:
-        if self.on_spill is not None:
-            if spilled:
-                self.on_spill(spilled, self)
-        else:
-            for r in spilled:
-                r.fail(error)
 
 
 # ----------------------------------------------------------------------
+_default_listener: Optional[WorkerListener] = None
+_default_listener_lock = threading.Lock()
+
+
+def default_listener() -> WorkerListener:
+    """Process-wide listener shared by socket transports that were not
+    given one explicitly (lazily bound to an ephemeral loopback port)."""
+    global _default_listener
+    with _default_listener_lock:
+        if _default_listener is None:
+            _default_listener = WorkerListener()
+        return _default_listener
+
+
 def make_transport(transport: str, *, backend=None,
                    spec: Optional[BackendSpec] = None,
                    cfg: ReplicaConfig = ReplicaConfig(),
                    rid: Optional[int] = None,
                    metrics: Optional[MetricsRegistry] = None,
                    on_spill: Optional[OnSpill] = None,
-                   kind: Optional[str] = None) -> Transport:
+                   kind: Optional[str] = None,
+                   listener: Optional[WorkerListener] = None,
+                   artifacts: Optional[ArtifactStore] = None,
+                   spawn: bool = True,
+                   token: Optional[str] = None) -> Transport:
     """Build (but do not start) a transport.
 
     ``thread`` accepts a live backend object or a spec (built in-process);
-    ``process`` requires a :class:`BackendSpec` — live backends cannot
-    cross the spawn boundary.
+    ``process`` and ``socket`` require a :class:`BackendSpec` — live
+    backends cannot cross a process or host boundary.
     """
     if transport not in TRANSPORTS:
         raise ValueError(f"transport {transport!r} not in {TRANSPORTS}")
@@ -684,6 +1103,15 @@ def make_transport(transport: str, *, backend=None,
                              "boundary)")
         return ProcessTransport(spec, cfg, rid=rid, metrics=metrics,
                                 on_spill=on_spill, kind=kind)
+    if transport == "socket":
+        if spec is None:
+            raise ValueError("SocketTransport needs a BackendSpec "
+                             "(a live backend cannot cross the host "
+                             "boundary)")
+        return SocketTransport(spec, cfg, rid=rid, metrics=metrics,
+                               on_spill=on_spill, kind=kind,
+                               listener=listener, artifacts=artifacts,
+                               spawn=spawn, token=token)
     if backend is None:
         if spec is None:
             raise ValueError("LocalTransport needs a backend or a spec")

@@ -8,11 +8,17 @@ control and unified metrics.  ``--transport`` picks replica placement:
   * ``process`` — each replica is a spawned worker process with an RPC
     inbox, rebuilt from a serializable spec (arch + seed or
     ``--weights-dir``); independent JAX runtimes, so compute scales.
+  * ``socket``  — the same spec-rebuilt worker behind a framed TCP
+    connection with a versioned reconnect handshake: here the workers are
+    spawned locally and dial back over loopback, but the identical worker
+    (``python -m repro.cluster.worker_main``) can run on any host that
+    reaches this process — heartbeat-timeout crash detection and
+    artifact-store weight fetch included.
 
     PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b \
         --requests 8 --max-new 16
     PYTHONPATH=src python -m repro.launch.serve --replicas 2 \
-        --router-policy least_loaded --requests 8 --transport process
+        --router-policy least_loaded --requests 8 --transport socket
 """
 from __future__ import annotations
 
@@ -47,8 +53,9 @@ def main(argv=None):
     ap.add_argument("--max-queue", type=int, default=4096,
                     help="admission control: global queued-cost bound")
     ap.add_argument("--transport", default="thread", choices=list(TRANSPORTS),
-                    help="replica placement: host threads or worker "
-                         "processes with RPC inboxes")
+                    help="replica placement: host threads, worker processes "
+                         "with RPC inboxes, or socket workers over framed "
+                         "TCP (remote-host capable)")
     ap.add_argument("--weights-dir", default=None,
                     help="checkpoint dir for process workers to load "
                          "weights from (default: deterministic init at "
@@ -57,8 +64,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = reduce_cfg(get_config(args.arch))
-    # process workers init/load their own weights; don't pay for a parent copy
-    need_params = args.replicas <= 1 or args.transport != "process"
+    # remote workers init/load their own weights; don't pay for a parent copy
+    need_params = args.replicas <= 1 or \
+        args.transport not in ("process", "socket")
     params = api.init(jax.random.PRNGKey(0), cfg)[0] if need_params else None
     scfg = ServeConfig(max_len=args.max_len, slots=args.slots)
     rng = np.random.RandomState(args.seed)
@@ -81,12 +89,13 @@ def main(argv=None):
                             AdmissionConfig(max_queue_cost=args.max_queue),
                             metrics))
         rcfg = ReplicaConfig(max_batch=args.slots)
-        if args.transport == "process":
+        if args.transport in ("process", "socket"):
             spec = engine_spec(arch=args.arch, max_len=args.max_len,
                                slots=args.slots, reduce=True, seed=0,
                                weights_path=args.weights_dir)
             for _ in range(args.replicas):
-                router.add_replica(spec=spec, cfg=rcfg, transport="process")
+                router.add_replica(spec=spec, cfg=rcfg,
+                                   transport=args.transport)
         else:
             shared_fns = make_engine_fns(cfg, scfg)
             for _ in range(args.replicas):

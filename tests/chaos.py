@@ -1,0 +1,203 @@
+"""Chaos harness for the cluster layer.
+
+Drives a replica pool through a randomized *fault schedule* — worker
+kills (SIGKILL / injected crash), connection drops, submission delays —
+while a steady request stream flows through the router, then checks the
+contract every transport promises:
+
+  * **nothing is lost** — every submitted request reaches a terminal
+    state (OK, REJECTED, or FAILED with an explicit error); none hang;
+  * **nothing is double-completed** — ``ClusterRequest.complete`` fires
+    at most once per request, however many times crashes force the
+    at-least-once machinery to re-execute its batch;
+  * **results are right** — every OK echo result equals ``2 * payload``.
+
+Schedules derive deterministically from a seed, so the property tests in
+``tests/test_chaos.py`` (via ``tests/_hyp_compat.py``) shrink/replay like
+any other property.  The same harness runs against thread, process, and
+socket transports — the point is that the zero-lost contract is a
+property of the *transport surface*, not of any one carrier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster import (MetricsRegistry, ReplicaConfig, Router, Status,
+                           echo_spec)
+from repro.cluster.replica import ClusterRequest
+from repro.cluster.transport import SocketTransport
+
+# what a fault may do to a replica (or to the arrival stream)
+ACTIONS = ("kill", "crash", "drop", "delay")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    at_s: float             # offset from schedule start
+    action: str             # one of ACTIONS
+    target: int             # replica index (ignored for "delay")
+    duration_s: float = 0.05  # "delay" only: arrival-stream stall
+
+
+def random_schedule(seed: int, n_faults: int, horizon_s: float,
+                    n_replicas: int,
+                    actions: Sequence[str] = ACTIONS) -> List[Fault]:
+    """Deterministic fault schedule from a seed."""
+    rng = np.random.RandomState(seed)
+    faults = [Fault(at_s=float(rng.uniform(0.0, horizon_s)),
+                    action=str(rng.choice(list(actions))),
+                    target=int(rng.randint(n_replicas)),
+                    duration_s=float(rng.uniform(0.02, 0.15)))
+              for _ in range(n_faults)]
+    return sorted(faults, key=lambda f: f.at_s)
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    transport: str
+    n_requests: int
+    ok: int
+    rejected: int
+    failed: int
+    lost: List[int]                       # payloads never reaching a terminal state
+    double_completed: List[int]           # payloads completed more than once
+    wrong_results: List[int]              # OK payloads with a wrong result
+    crashes: float
+    disconnects: float
+
+    def assert_invariants(self) -> "ChaosReport":
+        assert not self.lost, \
+            f"{self.transport}: {len(self.lost)} request(s) lost " \
+            f"(no terminal state): {self.lost[:10]}"
+        assert not self.double_completed, \
+            f"{self.transport}: double-completed: {self.double_completed[:10]}"
+        assert not self.wrong_results, \
+            f"{self.transport}: wrong results for {self.wrong_results[:10]}"
+        assert self.ok + self.rejected + self.failed == self.n_requests
+        return self
+
+
+class _CompletionCounter:
+    """Counts ``ClusterRequest.complete`` invocations per request object
+    via a class-level patch, so a double ack/requeue race that completes
+    one request twice cannot hide behind the last-writer's result."""
+
+    def __init__(self):
+        self.counts: Dict[int, int] = {}
+        self._lock = threading.Lock()
+        self._orig = None
+
+    def __enter__(self):
+        self._orig = ClusterRequest.complete
+        counter = self
+
+        def counting_complete(req, result, replica_rid):
+            with counter._lock:
+                counter.counts[id(req)] = counter.counts.get(id(req), 0) + 1
+            return counter._orig(req, result, replica_rid)
+
+        ClusterRequest.complete = counting_complete
+        return self
+
+    def __exit__(self, *exc):
+        ClusterRequest.complete = self._orig
+        return False
+
+
+def _apply_fault(fault: Fault, workers: List, gate: threading.Event) -> None:
+    if fault.action == "delay":
+        gate.clear()
+        time.sleep(fault.duration_s)
+        gate.set()
+        return
+    w = workers[fault.target % len(workers)]
+    if fault.action == "drop" and isinstance(w, SocketTransport):
+        w.sever_connection()          # partition: worker survives, reconnects
+    elif fault.action == "crash":
+        try:
+            w.inject_crash(soft=True)  # in-worker raise at a loop checkpoint
+        except TypeError:              # thread transport: one crash flavour
+            w.inject_crash()
+    else:                              # "kill" (and "drop" on non-sockets)
+        w.inject_crash()
+
+
+def run_chaos(transport: str, faults: Sequence[Fault], n_replicas: int = 3,
+              n_requests: int = 120, horizon_s: float = 0.6,
+              cfg: Optional[ReplicaConfig] = None, max_retries: int = 8,
+              timeout_s: float = 60.0) -> ChaosReport:
+    """Run one randomized episode and report the outcome tally.
+
+    Requests are spread over ``horizon_s`` so faults land before, between,
+    and after dispatches; ``gate`` models "delay" faults as arrival
+    stalls.  Whatever the schedule does — including killing every replica
+    — the invariants of :meth:`ChaosReport.assert_invariants` must hold.
+    """
+    if cfg is None:
+        cfg = ReplicaConfig(inbox_capacity=512, max_batch=4,
+                            heartbeat_timeout_s=1.5)
+    metrics = MetricsRegistry()
+    router = Router(policy="round_robin", metrics=metrics,
+                    max_retries=max_retries, requeue_timeout_s=3.0)
+    # "mixed" == one pool spanning every carrier at once: the contract is a
+    # property of the Transport surface, so a heterogeneous pool must hold
+    # it too
+    placements = ("thread", "process", "socket") if transport == "mixed" \
+        else (transport,) * n_replicas
+    workers = [router.add_replica(spec=echo_spec(delay_s=0.002), cfg=cfg,
+                                  transport=placements[i % len(placements)])
+               for i in range(n_replicas)]
+    gate = threading.Event()
+    gate.set()
+    reqs: List[ClusterRequest] = []
+    pause = horizon_s / max(n_requests, 1)
+
+    with _CompletionCounter() as counter:
+        start = time.monotonic()
+        stop_faults = threading.Event()
+
+        def fault_loop():
+            for f in faults:
+                wait = start + f.at_s - time.monotonic()
+                if wait > 0 and stop_faults.wait(wait):
+                    return
+                _apply_fault(f, workers, gate)
+
+        injector = threading.Thread(target=fault_loop, daemon=True,
+                                    name="chaos-injector")
+        injector.start()
+        try:
+            for i in range(n_requests):
+                gate.wait(1.0)
+                reqs.append(router.submit(i, session_key=f"s{i % 7}",
+                                          timeout_s=timeout_s))
+                time.sleep(pause)
+            t_end = time.monotonic() + timeout_s
+            for q in reqs:
+                q.done.wait(max(t_end - time.monotonic(), 0.1))
+        finally:
+            stop_faults.set()
+            injector.join(timeout=5.0)
+            router.stop(drain=True)
+
+        lost = [q.payload for q in reqs if not q.done.is_set()]
+        double = [q.payload for q in reqs
+                  if counter.counts.get(id(q), 0) > 1]
+
+    wrong = [q.payload for q in reqs
+             if q.status is Status.OK and q.result != 2 * q.payload]
+    snap = metrics.snapshot()
+    return ChaosReport(
+        transport=transport,
+        n_requests=n_requests,
+        ok=sum(q.status is Status.OK for q in reqs),
+        rejected=sum(q.status is Status.REJECTED for q in reqs),
+        failed=sum(q.status is Status.FAILED for q in reqs),
+        lost=lost, double_completed=double, wrong_results=wrong,
+        crashes=snap.get("replica.crashes", 0.0),
+        disconnects=snap.get("replica.disconnects", 0.0))

@@ -1,0 +1,89 @@
+"""Property tests over the chaos harness (``tests/chaos.py``): randomized
+kill/crash/drop/delay schedules against replica pools on every transport,
+asserting the cluster-layer contract — no request is ever lost (all reach
+an explicit terminal state) and none is ever double-completed — plus
+correct results for everything that completed.
+
+Fast seeds run in tier-1; the heavier multi-episode sweeps over spawned
+process/socket workers carry the ``slow`` marker (deselected by default
+via ``pytest.ini``; CI runs them in a dedicated job).
+"""
+import pytest
+
+from tests._hyp_compat import given, settings, st
+from tests.chaos import ACTIONS, random_schedule, run_chaos
+
+
+def _episode(transport: str, seed: int, n_faults: int = 3,
+             n_requests: int = 90) -> None:
+    faults = random_schedule(seed, n_faults=n_faults, horizon_s=0.5,
+                             n_replicas=3)
+    report = run_chaos(transport, faults, n_replicas=3,
+                       n_requests=n_requests)
+    report.assert_invariants()
+
+
+# ----------------------------------------------------------------------
+# Tier-1: thread pools are cheap — randomize broadly; remote transports
+# get one deterministic smoke episode each.
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_chaos_thread_never_loses_or_doubles(seed):
+    _episode("thread", seed)
+
+
+def test_chaos_process_smoke():
+    _episode("process", seed=7, n_faults=2, n_requests=60)
+
+
+def test_chaos_socket_smoke():
+    _episode("socket", seed=11, n_faults=2, n_requests=60)
+
+
+def test_schedule_is_deterministic():
+    a = random_schedule(123, n_faults=5, horizon_s=1.0, n_replicas=3)
+    b = random_schedule(123, n_faults=5, horizon_s=1.0, n_replicas=3)
+    assert a == b
+    assert all(f.action in ACTIONS for f in a)
+    assert [f.at_s for f in a] == sorted(f.at_s for f in a)
+
+
+# ----------------------------------------------------------------------
+# Slow: multi-episode randomized sweeps over spawned workers.
+
+@pytest.mark.slow
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_chaos_process_never_loses_or_doubles(seed):
+    _episode("process", seed)
+
+
+@pytest.mark.slow
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_chaos_socket_never_loses_or_doubles(seed):
+    _episode("socket", seed)
+
+
+@pytest.mark.slow
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_chaos_mixed_transport_cluster(seed):
+    """One pool spanning thread + process + socket replicas at once."""
+    _episode("mixed", seed, n_faults=4)
+
+
+@pytest.mark.slow
+def test_chaos_survives_killing_every_replica():
+    """Total loss: every replica killed mid-stream.  Requests may FAIL or
+    be REJECTED — explicitly — but none may hang or double-complete."""
+    from tests.chaos import Fault
+    faults = [Fault(at_s=0.05, action="kill", target=0),
+              Fault(at_s=0.10, action="kill", target=1),
+              Fault(at_s=0.15, action="kill", target=2)]
+    report = run_chaos("socket", faults, n_replicas=3, n_requests=80,
+                       timeout_s=30.0)
+    report.assert_invariants()
+    assert report.failed + report.rejected > 0, \
+        "killing the whole pool must surface explicit failures"

@@ -76,6 +76,48 @@ def test_rendezvous_only_remaps_removed_replicas_keys():
     assert moved, "hash never picked the removed replica (degenerate test)"
 
 
+def test_drain_remaps_only_drained_sessions_and_exports_them():
+    """Draining a replica must (a) leave every session homed on a
+    survivor exactly where it was — the rendezvous property, live through
+    the real Router — and (b) log/export exactly the drained replica's
+    session keys, since those restart cold elsewhere (no cache handoff
+    yet: ROADMAP note made observable instead of silent)."""
+    m = MetricsRegistry()
+    r = Router(policy="session_affinity", metrics=m)
+    for _ in range(3):
+        r.add_replica(echo(0.001), ReplicaConfig(inbox_capacity=256))
+    keys = [f"user-{i}" for i in range(60)]
+    reqs = [r.submit(i, session_key=keys[i]) for i in range(60)]
+    for q in reqs:
+        r.wait(q, 10.0)
+    before = {keys[i]: q.replica_rid for i, q in enumerate(reqs)}
+    assert len(set(before.values())) == 3, "want sessions on all replicas"
+    victim_rid = sorted(set(before.values()))[1]
+    victim_keys = sorted(k for k, rid in before.items() if rid == victim_rid)
+
+    r.remove_replica(victim_rid, drain=True)
+
+    # (b) the remapped sessions are exported, exactly the victim's
+    assert r.last_remapped_sessions[victim_rid] == victim_keys
+    assert m.snapshot()["router.sessions_remapped"] == len(victim_keys)
+    # (a) non-drained replicas keep every one of their sessions
+    reqs2 = [r.submit(100 + i, session_key=keys[i]) for i in range(60)]
+    for q in reqs2:
+        r.wait(q, 10.0)
+    after = {keys[i]: q.replica_rid for i, q in enumerate(reqs2)}
+    for k in keys:
+        if before[k] != victim_rid:
+            assert after[k] == before[k], \
+                f"session {k} on surviving replica {before[k]} remapped"
+        else:
+            assert after[k] != victim_rid
+    # removing a replica with no sessions exports an empty remap
+    spare = r.add_replica(echo(0.001), ReplicaConfig())
+    r.remove_replica(spare.rid, drain=True)
+    assert r.last_remapped_sessions[spare.rid] == []
+    r.stop()
+
+
 def test_least_loaded_routes_around_slow_replica():
     """Join-shortest-queue: a replica whose requests cost more (its queue
     stays deep) receives fewer new requests than a fast peer."""

@@ -310,6 +310,8 @@ def test_router_routes_by_kind_and_sheds_per_kind_queue():
 
 
 def test_merge_snapshots_counters_sum_means_weight_percentiles_max():
+    """Legacy (bucketless) snapshots keep the old conservative behavior:
+    percentiles merge as a max upper bound."""
     base = {"replica.batch_s.count": 10.0, "replica.batch_s.mean": 2.0,
             "replica.batch_s.p95": 5.0, "replica.crashes": 1.0}
     w1 = {"replica.batch_s.count": 30.0, "replica.batch_s.mean": 4.0,
@@ -322,6 +324,71 @@ def test_merge_snapshots_counters_sum_means_weight_percentiles_max():
     assert out["replica.batch_s.p95"] == 9.0
     assert out["replica.crashes"] == 3.0
     assert out["only.in.worker"] == 3.0
+
+
+def test_merge_snapshots_bucketed_percentiles_match_ground_truth():
+    """Snapshots that ship histogram bucket counts merge to true
+    cluster-wide percentiles (up to the 10^(1/4)x bucket resolution) —
+    not the max-across-workers upper bound.  Two workers with disjoint
+    latency regimes make the difference stark: the max-merge answer would
+    be the slow worker's percentile regardless of traffic mix."""
+    from repro.cluster.metrics import HIST_BUCKET_BOUNDS  # noqa: F401
+    rng = np.random.RandomState(0)
+    fast, slow = MetricsRegistry(), MetricsRegistry()
+    x_fast = rng.lognormal(-4.0, 0.6, 6000)    # ~18ms median worker
+    x_slow = rng.lognormal(-1.0, 0.4, 1500)    # ~370ms median worker
+    for v in x_fast:
+        fast.histogram("replica.batch_s").observe(v)
+    for v in x_slow:
+        slow.histogram("replica.batch_s").observe(v)
+    merged = merge_snapshots(fast.snapshot(), [slow.snapshot()])
+    combined = np.concatenate([x_fast, x_slow])
+    resolution = 10 ** 0.25
+    for p in (50, 95, 99):
+        truth = float(np.percentile(combined, p))
+        est = merged[f"replica.batch_s.p{p}"]
+        assert truth / resolution <= est <= truth * resolution, \
+            f"p{p}: merged {est:.4f} vs truth {truth:.4f}"
+    # the old behavior would have reported the slow worker's p50 (~0.37s)
+    # as the cluster p50; the merged estimate must reflect the fast bulk
+    assert merged["replica.batch_s.p50"] < 0.1
+    assert merged["replica.batch_s.count"] == 7500.0
+    # a percentile landing beyond the last bucket bound (e.g. first-batch
+    # compiles) must not clamp down to the bound: the conservative
+    # max-merge of the workers' exact percentiles stands instead
+    base2, over = MetricsRegistry(), MetricsRegistry()
+    for _ in range(100):
+        base2.histogram("x").observe(0.01)
+    for _ in range(200):
+        over.histogram("x").observe(2000.0)     # past the last bound
+    m2 = merge_snapshots(base2.snapshot(), [over.snapshot()])
+    assert m2["x.p99"] == pytest.approx(2000.0)
+    assert m2["x.p50"] == pytest.approx(2000.0)  # true combined median
+
+
+def test_cluster_snapshot_merges_worker_buckets_over_heartbeat():
+    """End to end over a real remote worker: the worker's bucket counts
+    arrive via the heartbeat channel and the router's cluster_snapshot
+    recomputes percentiles from them instead of taking a max."""
+    m = MetricsRegistry()
+    r = Router(metrics=m)
+    r.add_replica(spec=echo_spec(delay_s=0.002), cfg=PROC_CFG,
+                  transport="process")
+    reqs = [r.submit(i) for i in range(12)]
+    assert all(r.wait(q, 30.0) is not None for q in reqs)
+    deadline = time.monotonic() + 5.0
+    snap = {}
+    while time.monotonic() < deadline:
+        snap = r.cluster_snapshot()
+        if snap.get("replica.batch_s.count", 0) > 0:
+            break
+        time.sleep(0.05)
+    assert snap["replica.batch_s.count"] > 0
+    bucket_keys = [k for k in snap if k.startswith("replica.batch_s.le")]
+    assert bucket_keys, "worker heartbeat must ship bucket counts"
+    assert sum(snap[k] for k in bucket_keys) == snap["replica.batch_s.count"]
+    assert snap["replica.batch_s.p95"] > 0
+    r.stop()
 
 
 def test_service_request_done_is_a_real_event_field():
