@@ -31,7 +31,6 @@ Machine-readable results land in ``BENCH_cluster.json`` at the repo root.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -45,11 +44,10 @@ from repro.core.pipeline import PipelineConfig
 from repro.core.stream import StreamConfig, StreamRuntime, make_stream_step
 from repro.data.text import corpus_arrays, margot_models, synthetic_corpus
 
-from benchmarks.common import emit
+from benchmarks.common import bench_json_path, emit, write_bench_json
 
 REPLICAS = (1, 2, 4)
-JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_cluster.json")
+JSON_PATH = bench_json_path("BENCH_cluster.json")
 
 
 def _make_router(n_replicas: int, metrics, max_batch=4,
@@ -233,19 +231,14 @@ def run(quick: bool = False, lm: bool = True, ingest_ms: float = 4.0,
         # merge into any existing file: a partial run (--quick, one
         # --transport) must update only its own columns, not clobber the
         # cross-transport trajectory this file exists to track
-        if os.path.exists(json_path):
-            try:
-                with open(json_path) as f:
-                    prev = json.load(f)
-            except (OSError, ValueError):
-                prev = {}
+        def merge(prev):
             for sec in ("svm_stream", "lm_engine", "meta"):
                 merged = dict(prev.get(sec, {}))
                 merged.update(out[sec])
                 out[sec] = merged
-        with open(json_path, "w") as f:
-            json.dump(out, f, indent=2, sort_keys=True)
-        print(f"# wrote {json_path}")
+            return out
+
+        out = write_bench_json(json_path, merge)
     return out
 
 

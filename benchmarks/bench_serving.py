@@ -1,37 +1,112 @@
-"""LM-serving throughput (continuous batching engine) on a reduced config:
-tokens/sec and per-request latency — the MLaaS end of the paper's pipeline.
+"""Single-replica LM serving hot path: fused on-device decode loop vs. the
+per-token reference engine.
+
+Every replica-count number in ``BENCH_cluster.json`` multiplies this base,
+so the fused/reference ratio here is the PR's whole claim: (1) in-jit
+sampling ships ``(slots,)`` token ids instead of ``(slots, vocab)`` logits,
+(2) donated caches update in place, (3) a ``lax.fori_loop`` runs
+``sync_every`` (K) decode steps per host sync, (4) admits run as bucketed
+batch prefill.  Both engines run the identical workload (greedy, same
+model/config/prompts) and, by the parity tests
+(``tests/test_serving_fused.py``), emit identical tokens — the ratio is
+pure hot-path cost.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--quick]
+
+Machine-readable results land in ``BENCH_serving.json`` at the repo root
+(merged across runs, like ``BENCH_cluster.json``).
 """
 from __future__ import annotations
 
+import argparse
+import os
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.configs.base import reduced
-from repro.models import api
-from repro.serving import Engine, ServeConfig
+from benchmarks.common import bench_json_path, emit, write_bench_json
 
-from benchmarks.common import emit
+JSON_PATH = bench_json_path("BENCH_serving.json")
 
 
-def run(quick: bool = False):
-    cfg = reduced(get_config("internlm2-1.8b"))
-    params, _ = api.init(jax.random.PRNGKey(0), cfg)
-    rng = np.random.RandomState(0)
-    n_req = 4 if quick else 8
-    eng = Engine(params, cfg, ServeConfig(max_len=96, slots=4))
-    reqs = [eng.submit(rng.randint(0, cfg.vocab, size=8).astype(np.int32),
-                       max_new=16) for _ in range(n_req)]
+def _bench_engine(params, cfg, scfg, prompts, max_new: int):
+    """Tokens/s and p50 latency through one engine.
+
+    The identical workload runs twice and the second (warm) pass is timed:
+    a serving engine compiles each shape once per deployment and then
+    serves millions of tokens, so steady-state throughput — not first-call
+    XLA compilation — is the quantity every replica-count number scales."""
+    from repro.serving import Engine
+
+    eng = Engine(params, cfg, scfg)
+    warm = [eng.submit(p, max_new=max_new) for p in prompts]
+    eng.run_until_drained()
+    assert all(r.done for r in warm)
+    eng.finished.clear()
+    reqs = [eng.submit(p, max_new=max_new) for p in prompts]
     t0 = time.perf_counter()
     eng.run_until_drained()
     wall = time.perf_counter() - t0
-    toks = sum(len(r.out_tokens) for r in reqs)
-    lat = [r.done_t - r.submit_t for r in reqs]
-    emit("serving/continuous_batching", wall / max(toks, 1) * 1e6,
-         f"tokens={toks};tok_per_s={toks/wall:.1f};p50_lat_s={np.median(lat):.3f}")
+    assert all(r.done for r in reqs)
+    toks = sum(r.decoded for r in reqs)
+    lat = sorted(r.done_t - r.submit_t for r in reqs)
+    return {"tok_per_s": toks / wall, "decoded_tokens": toks,
+            "wall_s": wall, "p50_lat_s": lat[len(lat) // 2]}
+
+
+def run(quick: bool = False, json_path: str = JSON_PATH,
+        arch: str = "internlm2-1.8b", sync_every: int = 8):
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.models import api
+    from repro.serving import ServeConfig
+
+    cfg = reduced(get_config(arch))
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    n_req = 6 if quick else 12
+    max_new = 24 if quick else 48
+    # mixed prompt lengths: exercises the power-of-two prefill buckets on
+    # the fused path and per-length compiles on the reference path
+    prompts = [rng.randint(0, cfg.vocab,
+                           size=rng.randint(5, 13)).astype(np.int32)
+               for _ in range(n_req)]
+
+    common = dict(max_len=96, slots=4)
+    res = {}
+    for label, scfg in (
+            ("reference", ServeConfig(fused=False, **common)),
+            ("fused", ServeConfig(fused=True, sync_every=sync_every,
+                                  **common))):
+        res[label] = _bench_engine(params, cfg, scfg, prompts, max_new)
+        emit(f"serving/engine/{label}",
+             1e6 * res[label]["wall_s"] / max(res[label]["decoded_tokens"], 1),
+             f"tok_per_s={res[label]['tok_per_s']:.1f};"
+             f"p50_lat_s={res[label]['p50_lat_s']:.3f}")
+    speedup = res["fused"]["tok_per_s"] / res["reference"]["tok_per_s"]
+    emit("serving/engine/fused_speedup", 0.0, f"speedup={speedup:.2f}x")
+
+    out = {"meta": {"arch": arch, "quick": quick, "n_req": n_req,
+                    "max_new": max_new, "sync_every": sync_every,
+                    "slots": common["slots"], "max_len": common["max_len"],
+                    "cpu_count": os.cpu_count(), "unix_time": time.time()},
+           "reference": res["reference"], "fused": res["fused"],
+           "speedup": speedup}
+    if json_path:
+        # keep the full-run numbers when a --quick smoke runs later: merge
+        # under a mode key instead of clobbering the file
+        mode = "quick" if quick else "full"
+        write_bench_json(json_path, lambda prev: {**prev, mode: out})
+    return out
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep (CI smoke)")
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="K: fused decode steps per host sync")
+    args = ap.parse_args()
+    run(quick=args.quick, sync_every=args.sync_every)

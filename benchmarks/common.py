@@ -9,8 +9,10 @@ by the dry-run roofline (EXPERIMENTS.md §Roofline).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +31,34 @@ def timed(fn: Callable[[], object]) -> float:
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+#: repo root — where the BENCH_*.json perf-trajectory files live
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def bench_json_path(name: str) -> str:
+    return os.path.join(REPO_ROOT, name)
+
+
+def write_bench_json(path: str, merge: Callable[[Dict], Dict]) -> Dict:
+    """Merge-write a BENCH_*.json: read whatever is already there (absent or
+    corrupt files degrade to ``{}``), let ``merge(prev)`` fold the new
+    results in — so a partial run updates only its own columns instead of
+    clobbering the trajectory the file exists to track — and write it back
+    deterministically."""
+    prev: Dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+        except (OSError, ValueError):
+            prev = {}
+    out = merge(prev)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}")
+    return out
 
 
 def make_dataset(n_sentences: int, pcfg: PipelineConfig, seed: int = 0):

@@ -28,6 +28,8 @@ def main() -> None:
         ("bench_filter_fraction", bench_filter_fraction),
         ("bench_model_size", bench_model_size),
         ("bench_roofline", bench_roofline),
+        # writes BENCH_serving.json at the repo root: fused vs reference
+        # single-replica engine (the base every cluster number multiplies)
         ("bench_serving", bench_serving),
         # writes BENCH_cluster.json at the repo root (perf trajectory)
         ("bench_cluster", bench_cluster),

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
+import threading
 import time
 from typing import Any, Dict, Optional
 
@@ -48,12 +49,19 @@ class BackendSpec:
 # ----------------------------------------------------------------------
 # Builders (module-level: importable from a spawned worker process).
 
-def build_echo(delay_s: float = 0.0, scale: int = 2):
+def build_echo(delay_s: float = 0.0, scale: int = 2, stall_s: float = 0.0):
     """Deterministic test/bench backend: ``payload * scale`` after an
-    optional per-batch stall (models host-side work)."""
+    optional per-batch stall (models host-side work).
+
+    ``stall_s`` > 0 turns the replica into a *slow loris*: every batch
+    hangs for that long (effectively forever for chaos tests) while the
+    worker's liveness signals — process aliveness, the socket heartbeat
+    thread — stay green.  Detection is the transports' ack timeout."""
     from repro.cluster.replica import FnBackend
 
     def step(payloads):
+        if stall_s:
+            time.sleep(stall_s)
         if delay_s:
             time.sleep(delay_s)
         return [p * scale for p in payloads]
@@ -87,15 +95,39 @@ def build_stream(feat_dim: int = 256, claim_capacity: int = 64,
     return StreamBackend(runtime, fetch=fetch)
 
 
+# One compiled fn bundle per distinct (cfg, scfg) per process: thread pools
+# share XLA compiles across replicas, and a worker process that rebuilds its
+# backend after a reconnect reuses its first compile instead of re-jitting.
+_ENGINE_FNS_CACHE: Dict[Any, Any] = {}
+_ENGINE_FNS_LOCK = threading.Lock()
+
+
+def shared_engine_fns(cfg, scfg):
+    """Process-local shared-jit cache keyed by the full static config."""
+    import dataclasses as _dc
+
+    key = (cfg, tuple(sorted(_dc.asdict(scfg).items())))
+    with _ENGINE_FNS_LOCK:
+        if key not in _ENGINE_FNS_CACHE:
+            from repro.serving import make_engine_fns
+            _ENGINE_FNS_CACHE[key] = make_engine_fns(cfg, scfg)
+        return _ENGINE_FNS_CACHE[key]
+
+
 def build_engine(arch: str = "internlm2-1.8b", max_len: int = 64,
                  slots: int = 2, reduce: bool = True, seed: int = 0,
                  weights_path: Optional[str] = None,
-                 ingest_ms: float = 0.0):
+                 ingest_ms: float = 0.0, fused: bool = True,
+                 sync_every: int = 8, temperature: float = 0.0,
+                 prefill_bucketing: bool = True):
     """One continuous-batching LM engine.  Weights come from
     ``weights_path`` (a ``checkpoint.Checkpointer`` directory) when given,
     else from deterministic init at ``seed`` — either way the worker holds
     its own copy in its own JAX runtime, which is the whole point of the
-    process transport."""
+    process transport.  ``fused``/``sync_every``/``temperature``/
+    ``prefill_bucketing`` select the engine hot path (all plain scalars, so
+    the spec still pickles across process/socket workers); jitted fns are
+    shared per-process via :func:`shared_engine_fns`."""
     import jax
 
     from repro.cluster.replica import EngineBackend
@@ -111,7 +143,11 @@ def build_engine(arch: str = "internlm2-1.8b", max_len: int = 64,
     if weights_path is not None:
         from repro.checkpoint import Checkpointer
         params = Checkpointer(weights_path).restore(params)
-    engine = Engine(params, cfg, ServeConfig(max_len=max_len, slots=slots))
+    scfg = ServeConfig(max_len=max_len, slots=slots, fused=fused,
+                       sync_every=sync_every, temperature=temperature,
+                       prefill_bucketing=prefill_bucketing)
+    engine = Engine(params, cfg, scfg,
+                    shared_fns=shared_engine_fns(cfg, scfg))
     if ingest_ms > 0:
         class _IngestEngineBackend(EngineBackend):
             def process(self, payloads):

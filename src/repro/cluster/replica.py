@@ -152,6 +152,13 @@ class ReplicaConfig:
     max_batch: int = 8
     poll_s: float = 0.002
     heartbeat_timeout_s: float = 5.0
+    # Slow-loris guard (remote transports): a replica whose liveness signal
+    # stays green (process alive / heartbeats flowing) but that has not
+    # acknowledged its oldest dispatched request for this long is declared
+    # dead, so its work reroutes to survivors.  0 disables the guard (the
+    # default: legitimate deep inboxes over slow backends would trip a
+    # short universal bound — size it to the deployment's batch SLO).
+    ack_timeout_s: float = 0.0
     # process transports only: how often the worker ships a heartbeat +
     # metrics snapshot back to the parent, and how long the parent waits
     # for the spawned interpreter to import + build its backend.

@@ -488,6 +488,7 @@ class RemoteTransport(Transport):
         self._lock = threading.Lock()
         self._chan: Optional[Channel] = None
         self._outstanding: Dict[int, ClusterRequest] = {}
+        self._dispatch_t: Dict[int, float] = {}   # rid -> offer() time
         self._outstanding_cost = 0
         self._closing = threading.Event()
         self._ready = threading.Event()
@@ -513,12 +514,14 @@ class RemoteTransport(Transport):
                     len(self._outstanding) >= self.cfg.inbox_capacity:
                 return False
             self._outstanding[req.rid] = req
+            self._dispatch_t[req.rid] = time.monotonic()
             self._outstanding_cost += req.cost
         try:
             chan.send_bytes(frame)
         except ChannelClosed:
             with self._lock:
                 owned = self._outstanding.pop(req.rid, None) is not None
+                self._dispatch_t.pop(req.rid, None)
                 if owned:
                     self._outstanding_cost -= req.cost
             self._channel_broken(chan, "send failed")
@@ -532,6 +535,7 @@ class RemoteTransport(Transport):
             # being requeued); otherwise reclaim it and report failure.
             with self._lock:
                 if self._outstanding.pop(req.rid, None) is not None:
+                    self._dispatch_t.pop(req.rid, None)
                     self._outstanding_cost -= req.cost
                     return False
         return True
@@ -595,6 +599,7 @@ class RemoteTransport(Transport):
             for rid, res in msg[1]:
                 with self._lock:
                     req = self._outstanding.pop(rid, None)
+                    self._dispatch_t.pop(rid, None)
                     if req is not None:
                         self._outstanding_cost -= req.cost
                 if req is not None:
@@ -603,6 +608,11 @@ class RemoteTransport(Transport):
         elif tag == "hb":
             with self._lock:
                 self._worker_snapshot = dict(msg[3])
+            # the stall check cannot live only on recv timeouts: a worker
+            # heartbeating faster than the recv poll would keep the channel
+            # busy enough that _idle_tick never fires — the exact loris
+            # this guard exists to catch
+            return not self._check_ack_stall()
         elif tag == "ready":
             self._ready.set()
         elif tag == "drained":
@@ -620,6 +630,32 @@ class RemoteTransport(Transport):
 
     def _idle_tick(self, chan: Channel) -> bool:
         """Called on every recv timeout; False stops the loop."""
+        return not self._check_ack_stall()
+
+    def _check_ack_stall(self) -> bool:
+        """Slow-loris detector: the replica looks alive (its carrier-level
+        liveness signal is green) but its oldest dispatched request has
+        gone unacknowledged past ``cfg.ack_timeout_s``.  Declares the
+        transport dead — spilling every unacknowledged request for
+        redispatch on survivors — and returns True.  Late acks from the
+        zombie worker pop an empty outstanding table, so nothing is ever
+        double-completed."""
+        if self.cfg.ack_timeout_s <= 0:
+            return False
+        now = time.monotonic()
+        with self._lock:
+            if not self.alive or not self._outstanding:
+                return False
+            oldest = min(self._dispatch_t.get(rid, now)
+                         for rid in self._outstanding)
+        age = now - oldest
+        if age <= self.cfg.ack_timeout_s:
+            return False
+        self.metrics.counter("replica.ack_timeouts").inc()
+        self._die(ReplicaCrash(
+            f"replica {self.rid}: ack timeout — oldest request "
+            f"unacknowledged for {age:.2f}s > {self.cfg.ack_timeout_s}s "
+            f"while the worker still looked alive (slow loris)"))
         return True
 
     def _channel_broken(self, chan: Channel, why: str) -> None:
@@ -629,6 +665,7 @@ class RemoteTransport(Transport):
     def _take_outstanding(self) -> List[ClusterRequest]:
         spilled = sorted(self._outstanding.values(), key=lambda r: r.rid)
         self._outstanding.clear()
+        self._dispatch_t.clear()
         self._outstanding_cost = 0
         return spilled
 
@@ -751,7 +788,7 @@ class ProcessTransport(RemoteTransport):
             # messages, or a clean post-drain exit)
             self._channel_broken(chan, "worker exited")
             return False
-        return True
+        return super()._idle_tick(chan)
 
     def _channel_broken(self, chan: Channel, why: str) -> None:
         if self._closing.is_set() and self._drained.is_set():

@@ -49,6 +49,11 @@ class ServiceRequest:
 class MLaaSService:
     """Deadline-batching front over a local step_fn or a cluster Router."""
 
+    #: longest single block on the inbox queue: bounds both how stale the
+    #: deadline-slack estimate can get while waiting and how long stop()
+    #: can trail behind its wakeup sentinel
+    IDLE_WAIT_CAP_S = 0.25
+
     def __init__(self, step_fn: Optional[Callable[[List[Any]], List[Any]]] = None,
                  capacity: int = 8, cost_model: Optional[CostModel] = None,
                  poll_s: float = 0.002, router=None,
@@ -82,6 +87,7 @@ class MLaaSService:
         (``drain=True``) or fail it fast with ``Rejected("shutdown")``."""
         self._drain_on_stop = drain
         self._stop.set()
+        self.q.put(None)                   # sentinel: wake a blocked q.get
         self._thread.join(timeout=timeout_s)
 
     # ------------------------------------------------------------------
@@ -127,13 +133,41 @@ class MLaaSService:
             self._h_latency.observe(t_done - r.submitted_s)
             r.done.set()
 
+    def _wait_timeout(self, pending: List[ServiceRequest]) -> float:
+        """How long the loop may block on the inbox before it must act.
+
+        Idle (nothing pending): nothing can become urgent except via the
+        queue itself, so block up to the cap instead of spinning at
+        ``poll_s`` — idle CPU burn drops from ~1/poll_s wakeups/s to
+        ~1/IDLE_WAIT_CAP_S.  With pending requests: sleep exactly the
+        oldest request's deadline slack (minus the estimated step time),
+        clamped to [poll_s, cap] — a new arrival interrupts the wait via
+        ``q.get`` either way."""
+        if not pending:
+            return self.IDLE_WAIT_CAP_S
+        slack = deadline_slack(min(r.deadline_s for r in pending),
+                               time.monotonic(),
+                               self._estimate(len(pending)))
+        # wake 2*poll_s ahead of the slack expiry (the dispatch threshold
+        # below): sleeping the full slack would dispatch *at* the deadline
+        # minus the step estimate, turning any get() overshoot into a miss
+        return min(max(slack - 2 * self.poll_s, self.poll_s),
+                   self.IDLE_WAIT_CAP_S)
+
     def _loop(self):
         pending: List[ServiceRequest] = []
         while not self._stop.is_set():
-            # drain the queue
+            # drain the queue: one deadline-aware blocking get, then a
+            # non-blocking sweep (None = the stop() wakeup sentinel)
+            self.metrics.counter("service.loop_wakeups").inc()
             try:
+                got = self.q.get(timeout=self._wait_timeout(pending))
+                if got is not None:
+                    pending.append(got)
                 while len(pending) < self.capacity:
-                    pending.append(self.q.get(timeout=self.poll_s))
+                    got = self.q.get_nowait()
+                    if got is not None:
+                        pending.append(got)
             except queue.Empty:
                 pass
             if not pending:
@@ -150,7 +184,9 @@ class MLaaSService:
             self._closed = True            # later submits fail fast
             try:
                 while True:
-                    pending.append(self.q.get_nowait())
+                    got = self.q.get_nowait()
+                    if got is not None:    # drop wakeup sentinels
+                        pending.append(got)
             except queue.Empty:
                 pass
         if self._drain_on_stop:

@@ -56,6 +56,13 @@ def main(argv=None):
                     help="replica placement: host threads, worker processes "
                          "with RPC inboxes, or socket workers over framed "
                          "TCP (remote-host capable)")
+    ap.add_argument("--no-fused", dest="fused", action="store_false",
+                    help="per-token reference decode loop instead of the "
+                         "fused on-device K-step loop")
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="K: fused decode steps per host sync")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="in-jit sampling temperature (0 = greedy argmax)")
     ap.add_argument("--weights-dir", default=None,
                     help="checkpoint dir for process workers to load "
                          "weights from (default: deterministic init at "
@@ -68,7 +75,9 @@ def main(argv=None):
     need_params = args.replicas <= 1 or \
         args.transport not in ("process", "socket")
     params = api.init(jax.random.PRNGKey(0), cfg)[0] if need_params else None
-    scfg = ServeConfig(max_len=args.max_len, slots=args.slots)
+    scfg = ServeConfig(max_len=args.max_len, slots=args.slots,
+                       fused=args.fused, sync_every=args.sync_every,
+                       temperature=args.temperature)
     rng = np.random.RandomState(args.seed)
     prompts = [rng.randint(0, cfg.vocab,
                            size=rng.randint(4, 16)).astype(np.int32)
@@ -92,7 +101,9 @@ def main(argv=None):
         if args.transport in ("process", "socket"):
             spec = engine_spec(arch=args.arch, max_len=args.max_len,
                                slots=args.slots, reduce=True, seed=0,
-                               weights_path=args.weights_dir)
+                               weights_path=args.weights_dir,
+                               fused=args.fused, sync_every=args.sync_every,
+                               temperature=args.temperature)
             for _ in range(args.replicas):
                 router.add_replica(spec=spec, cfg=rcfg,
                                    transport=args.transport)

@@ -398,7 +398,8 @@ def attn_decode(params, x, cache, pos, cfg, *, kind: str):
     cache["v"] = batched_cache_update(cache["v"], v[:, 0], slot)
     if ring:
         cache["pos"] = batched_cache_update(cache["pos"], pos, slot)
-        valid = (cache["pos"] >= 0) & (cache["pos"] > (pos[:, None] - cfg.window))
+        valid = (cache["pos"] >= 0) & (cache["pos"] > (pos[:, None] - cfg.window)) \
+            & (cache["pos"] <= pos[:, None])
     else:
         valid = jnp.arange(L)[None, :] <= pos[:, None]
     mask = valid[:, None, None, :]                        # (B,1,1,L)

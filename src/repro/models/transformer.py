@@ -280,7 +280,15 @@ def prefill(params, cfg, tokens, caches, embeds=None, last_index=None):
     if last_index is None:
         x = x[:, -1:]
     else:
-        x = jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
+        li = jnp.asarray(last_index)
+        if li.ndim == 0:
+            x = jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
+        else:
+            # per-row last positions: bucketed batch prefill pads prompts to
+            # a shared length, so each row's true final token sits at its
+            # own index
+            x = jnp.take_along_axis(x, li.astype(jnp.int32)[:, None, None],
+                                    axis=1)
     x = apply_norm(params["final_norm"], x, cfg)
     logits = _head(params, x, cfg)
     return logits, caches
@@ -294,6 +302,70 @@ def decode_step(params, cfg, tokens, caches, pos):
     x = apply_norm(params["final_norm"], x, cfg)
     logits = _head(params, x, cfg)
     return logits, caches
+
+
+def sample_tokens(logits, temperature: float = 0.0, rng=None):
+    """In-jit sampling.  logits: (B, V) -> (B,) int32.
+
+    ``temperature`` is a *static* policy: 0.0 compiles to greedy argmax (the
+    parity-tested default), anything else to categorical sampling at that
+    temperature (``rng`` required)."""
+    if temperature and temperature > 0.0:
+        if rng is None:
+            raise ValueError("temperature sampling needs an rng key")
+        return jax.random.categorical(
+            rng, logits.astype(jnp.float32) / temperature, axis=-1
+        ).astype(jnp.int32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def decode_fused(params, cfg, tokens, caches, pos, *, temperature: float = 0.0,
+                 rng=None):
+    """One decode step that never ships logits to the host: embed -> backbone
+    -> head -> sample, returning only the (B,) sampled token ids (instead of
+    the (B, vocab) logits) plus the updated caches."""
+    logits, caches = decode_step(params, cfg, tokens, caches, pos)
+    return sample_tokens(logits[:, 0], temperature, rng), caches
+
+
+def decode_loop(params, cfg, caches, pos, last, active, remaining, rng, *,
+                k: int, max_len: int, temperature: float = 0.0):
+    """K fused decode steps with one host sync at the end.
+
+    All loop state lives on device: ``pos`` (B,) next write position,
+    ``last`` (B,) last sampled token, ``active`` (B,) bool slot liveness,
+    ``remaining`` (B,) decode-token budget.  Per-slot stop is honored
+    *exactly* via masking — an exhausted slot's pos/last/budget freeze and
+    its tokens stop being emitted, while the batch keeps stepping (batch
+    elements never interact inside a step, so frozen slots cannot perturb
+    live ones).  Returns ``(out (B,k) int32, emitted (B,) int32, caches,
+    pos, last, active, remaining, rng)``; ``out[s, :emitted[s]]`` are slot
+    s's real tokens (liveness is monotone within the loop, so they form a
+    prefix).
+    """
+    def body(i, carry):
+        caches, pos, last, active, remaining, rng, out, emitted = carry
+        rng, sub = jax.random.split(rng)
+        nxt, caches = decode_fused(params, cfg, last[:, None], caches, pos,
+                                   temperature=temperature, rng=sub)
+        nxt = jnp.where(active, nxt, last)
+        out = jax.lax.dynamic_update_index_in_dim(out, nxt, i, 1)
+        emitted = emitted + active.astype(jnp.int32)
+        live = active.astype(jnp.int32)
+        pos = pos + live
+        remaining = remaining - live
+        active = active & (remaining > 0) & (pos < max_len - 1)
+        # a slot that just went inactive feeds token 0 from here on, exactly
+        # like the reference loop's zero-fill for empty slots — keeps the
+        # batch composition identical for archs where rows couple (MoE)
+        last = jnp.where(active, nxt, jnp.zeros_like(nxt))
+        return caches, pos, last, active, remaining, rng, out, emitted
+
+    out0 = jnp.zeros((pos.shape[0], k), jnp.int32)
+    em0 = jnp.zeros((pos.shape[0],), jnp.int32)
+    caches, pos, last, active, remaining, rng, out, emitted = jax.lax.fori_loop(
+        0, k, body, (caches, pos, last, active, remaining, rng, out0, em0))
+    return out, emitted, caches, pos, last, active, remaining, rng
 
 
 def _head(params, x, cfg):

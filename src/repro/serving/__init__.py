@@ -1,2 +1,2 @@
-from repro.serving.engine import (Engine, Request, ServeConfig,  # noqa: F401
-                                  make_engine_fns)
+from repro.serving.engine import (Engine, EngineFns, Request,  # noqa: F401
+                                  ServeConfig, make_engine_fns, pad_tolerant)

@@ -9,15 +9,31 @@ step is the parallel post-aggregation map.  Weights are placed once
 amortization.
 
 Static shapes throughout: a fixed number of decode slots; prefill pads to
-power-of-two buckets to bound recompilation.
+power-of-two buckets (pad-tolerant families only) to bound recompilation.
+
+Two hot paths (``ServeConfig.fused``):
+
+* **fused** (default): a decode iteration never leaves the device — the
+  jitted step embeds, runs the backbone, and *samples in-jit* (greedy or
+  temperature), returning only ``(slots,)`` token ids; caches / pos /
+  last-token / liveness / budget are donated device buffers updated in
+  place; a ``lax.fori_loop`` runs ``sync_every`` (K) steps per host sync
+  with per-slot stop honored exactly via masking; admits run as bucketed
+  batch prefill fused with a donated slot insert.
+* **reference**: the original per-token loop (one host round trip and a
+  ``(slots, vocab)`` logits transfer per token, full cache re-materialized
+  per step and per admit).  It is the parity oracle
+  (``tests/test_serving_fused.py``) and the "before" side of
+  ``BENCH_serving.json``.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,23 +47,45 @@ from repro.models import api, transformer as tfm
 class ServeConfig:
     max_len: int = 512              # cache length per slot
     slots: int = 4                  # decode batch size (continuous batching)
-    # Prompts are prefillied at exact length (one compile per distinct
-    # length).  Production engines bucket + mask pad positions; recurrent
-    # archs (SSM/RG-LRU) require pad-free prefill, so exact-length is the
-    # correct default here.
-    greedy: bool = True
+    fused: bool = True              # on-device K-step loop + in-jit sampling
+    sync_every: int = 8             # K: decode steps per host sync (fused)
+    temperature: float = 0.0        # 0.0 -> greedy argmax (in-jit either way)
+    seed: int = 0                   # sampling rng seed (temperature > 0)
+    # Pad prompts up to power-of-two buckets so several queued requests
+    # prefill in one call.  Auto-gated: recurrent archs (SSM/RG-LRU) would
+    # absorb pads into their state, MoE capacity couples batch rows, and
+    # ring (windowed) caches could evict real K/V — those families keep the
+    # exact-length path (same-length prompts still batch there).
+    prefill_bucketing: bool = True
+    min_bucket: int = 8             # smallest prefill bucket (pad-tolerant)
+
+    def __post_init__(self):
+        if self.fused and self.sync_every < 1:
+            raise ValueError(f"sync_every must be >= 1, got "
+                             f"{self.sync_every}: a 0-step fused loop would "
+                             f"spin without ever finishing a request")
+        if not self.fused and self.temperature:
+            raise ValueError("the reference (fused=False) path decodes "
+                             "greedy-only; temperature sampling requires "
+                             "the fused engine")
 
 
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray              # (S,) int32
-    max_new: int
+    max_new: int                    # decoded-token budget (prefill token free)
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: str = ""         # "max_new" | "max_len" once done
     submit_t: float = 0.0
     first_token_t: float = 0.0
     done_t: float = 0.0
+
+    @property
+    def decoded(self) -> int:
+        """Tokens produced by decode steps (excludes the prefill sample)."""
+        return max(len(self.out_tokens) - 1, 0)
 
 
 def _insert_slot(big, small, slot: int):
@@ -57,28 +95,162 @@ def _insert_slot(big, small, slot: int):
         lambda b, s: b.at[:, slot:slot + 1].set(s.astype(b.dtype)), big, small)
 
 
-def make_engine_fns(cfg, scfg: ServeConfig):
-    """Jitted (decode_fn, prefill_cache) shareable by N engine replicas with
-    identical cfg/scfg — one XLA compile for the whole pool instead of one
-    per replica (each Engine otherwise jits its own fresh lambdas)."""
-    decode = jax.jit(lambda p, t, c, pos: tfm.decode_step(p, cfg, t, c, pos))
-    return decode, {}
+def pad_tolerant(cfg, max_len: int) -> bool:
+    """Can this arch prefill right-padded prompts exactly?
+
+    False for SSM ("S") / RG-LRU ("R") — the recurrent state would absorb
+    pad tokens; for MoE ("M") — expert capacity couples batch rows, so pads
+    can displace real tokens; and for windowed attention ("L") with a ring
+    cache — writing pads into the ring can evict real K/V.  Plain causal /
+    global attention is exactly invariant to right-padding (pads sit
+    *after* every real token, decode masks positions beyond ``pos``, and
+    each pad cache entry is overwritten before it ever becomes visible).
+    """
+    for g in cfg.groups:
+        for kind in g.pattern:
+            if kind in ("S", "R", "M"):
+                return False
+            if kind == "L" and cfg.window and cfg.window < max_len:
+                return False
+    return True
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length()
+
+
+class EngineFns:
+    """Jitted engine functions shareable by N engine replicas with identical
+    cfg/scfg — one XLA compile for the whole pool instead of one per replica.
+
+    Fused-path functions donate the engine's device state (caches, pos,
+    last-token, liveness, budget) so XLA updates the KV caches in place
+    instead of copying the full pytree every step/admit; callers must treat
+    the passed-in state as consumed and adopt the returned buffers.
+    """
+
+    def __init__(self, cfg, scfg: ServeConfig):
+        self.cfg, self.scfg = cfg, scfg
+        self.pad_ok = pad_tolerant(cfg, scfg.max_len)
+        # MoE expert capacity couples batch rows: admitting several prompts
+        # (or pad-duplicated rows) in one prefill would let rows displace
+        # each other's expert slots and diverge from the reference path's
+        # batch-1 admits — so MoE admits stay batch-1
+        self.row_coupled = any(k == "M" for g in cfg.groups
+                               for k in g.pattern)
+        self.decode = jax.jit(
+            lambda p, t, c, pos: tfm.decode_step(p, cfg, t, c, pos))
+        # jit-cache builds are locked: the bundle is shared across thread
+        # replicas, and a duplicated build means a duplicated multi-second
+        # XLA compile — the exact cost this class exists to amortize
+        self._build_lock = threading.Lock()
+        # (plen,) -> jitted exact-length batch-1 prefill (reference path)
+        self.prefill_cache: Dict[int, Callable] = {}
+        # (bucket, n) -> jitted fused prefill+sample+insert (fused path)
+        self._admit_cache: Dict[Tuple[int, int], Callable] = {}
+        k, max_len, temp = scfg.sync_every, scfg.max_len, scfg.temperature
+
+        def loop_fn(params, caches, pos, last, active, remaining, rng):
+            return tfm.decode_loop(params, cfg, caches, pos, last, active,
+                                   remaining, rng, k=k, max_len=max_len,
+                                   temperature=temp)
+
+        # donate caches/pos/last/active/remaining/rng: the K-step loop
+        # aliases every state buffer instead of materializing a copy
+        self.decode_loop = jax.jit(loop_fn, donate_argnums=(1, 2, 3, 4, 5, 6))
+
+    def bucket(self, plen: int) -> int:
+        """Prefill compile bucket for a prompt of length ``plen``."""
+        if not (self.scfg.prefill_bucketing and self.pad_ok):
+            return plen                       # exact-length path
+        return min(max(_next_pow2(plen), self.scfg.min_bucket),
+                   self.scfg.max_len)
+
+    def admit_fn(self, bucket: int, n: int) -> Callable:
+        """Jitted bucketed batch prefill: prefill ``n`` prompts padded to
+        ``bucket`` in one call, sample their first tokens in-jit, and insert
+        caches + per-slot state via donated ``dynamic_update_slice``."""
+        key = (bucket, n)
+        with self._build_lock:
+            return self._admit_cache.get(key) or self._build_admit_fn(key)
+
+    def _build_admit_fn(self, key: Tuple[int, int]) -> Callable:
+        bucket, n = key
+        cfg, scfg = self.cfg, self.scfg
+
+        def fn(params, tokens, last_idx, slot_idx, budget,
+               caches, pos, last, active, remaining, rng):
+            """tokens (n,bucket) · last_idx/slot_idx/budget (n,) ·
+            engine state donated; returns (first_tokens (n,), state...)."""
+            small = api.init_caches(cfg, n, scfg.max_len)
+            rng, sub = jax.random.split(rng)
+            logits, small = tfm.prefill(params, cfg, tokens, small,
+                                        last_index=last_idx)
+            toks = tfm.sample_tokens(logits[:, 0], scfg.temperature, sub)
+            for j in range(n):            # static unroll over admits
+                s = slot_idx[j]
+                caches = jax.tree_util.tree_map(
+                    lambda b, sm: jax.lax.dynamic_update_slice_in_dim(
+                        b, sm[:, j:j + 1].astype(b.dtype), s, axis=1),
+                    caches, small)
+                act_j = (budget[j] > 0) & (last_idx[j] + 1 < scfg.max_len - 1)
+                pos = jax.lax.dynamic_update_index_in_dim(
+                    pos, last_idx[j] + 1, s, 0)
+                # an immediately-exhausted admit parks the slot on token 0,
+                # the reference loop's zero-fill for empty slots
+                last = jax.lax.dynamic_update_index_in_dim(
+                    last, jnp.where(act_j, toks[j], 0), s, 0)
+                remaining = jax.lax.dynamic_update_index_in_dim(
+                    remaining, budget[j], s, 0)
+                active = jax.lax.dynamic_update_index_in_dim(
+                    active, act_j, s, 0)
+            return toks, caches, pos, last, active, remaining, rng
+
+        self._admit_cache[key] = jax.jit(
+            fn, donate_argnums=(5, 6, 7, 8, 9, 10))
+        return self._admit_cache[key]
+
+    def prefill_fn(self, plen: int) -> Callable:
+        """Exact-length batch-1 prefill (reference path, pre-PR shape)."""
+        with self._build_lock:
+            if plen not in self.prefill_cache:
+                cfg, scfg = self.cfg, self.scfg
+
+                def fn(params, tokens):
+                    caches = api.init_caches(cfg, 1, scfg.max_len)
+                    return tfm.prefill(params, cfg, tokens, caches)
+
+                self.prefill_cache[plen] = jax.jit(fn)
+            return self.prefill_cache[plen]
+
+
+def make_engine_fns(cfg, scfg: ServeConfig) -> EngineFns:
+    """Shared-jit bundle for an engine pool (see :class:`EngineFns`)."""
+    return EngineFns(cfg, scfg)
 
 
 class Engine:
     def __init__(self, params, cfg, scfg: ServeConfig,
                  metrics: Optional[MetricsRegistry] = None,
-                 shared_fns=None):
+                 shared_fns: Optional[EngineFns] = None):
         self.params, self.cfg, self.scfg = params, cfg, scfg
         if cfg.family == "encdec":
             raise NotImplementedError("Engine serves decoder-LM families")
+        self.fns = shared_fns if shared_fns is not None \
+            else make_engine_fns(cfg, scfg)
         self.caches = api.init_caches(cfg, scfg.slots, scfg.max_len)
-        self.pos = np.zeros((scfg.slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * scfg.slots
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
-        self._decode, self._prefill_cache = shared_fns if shared_fns else \
-            make_engine_fns(cfg, scfg)
+        if scfg.fused:
+            # device-resident loop state (donated through every fused call)
+            self._pos = jnp.zeros((scfg.slots,), jnp.int32)
+            self._last = jnp.zeros((scfg.slots,), jnp.int32)
+            self._active = jnp.zeros((scfg.slots,), bool)
+            self._remaining = jnp.zeros((scfg.slots,), jnp.int32)
+            self._rng = jax.random.PRNGKey(scfg.seed)
+        else:
+            self.pos = np.zeros((scfg.slots,), np.int32)
         # monotonic request ids: never reused, regardless of how many
         # requests are queued/active/finished at submit time
         self._rids = itertools.count(1000)
@@ -92,23 +264,106 @@ class Engine:
         self.queue.append(req)
         return req
 
-    def _prefill_fn(self, plen: int):
-        if plen not in self._prefill_cache:
-            cfg, scfg = self.cfg, self.scfg
+    def _finish(self, slot: int, reason: str):
+        req = self.active[slot]
+        req.done = True
+        req.finish_reason = reason
+        req.done_t = time.perf_counter()
+        self.finished.append(req)
+        self.active[slot] = None
+        self.metrics.counter("engine.requests").inc()
+        self.metrics.counter("engine.tokens").inc(req.decoded)
+        if reason == "max_len":
+            self.metrics.counter("engine.truncated").inc()
+        self.metrics.histogram("engine.ttft_s").observe(
+            req.first_token_t - req.submit_t)
+        self.metrics.histogram("engine.latency_s").observe(
+            req.done_t - req.submit_t)
 
-            def fn(params, tokens):
-                caches = api.init_caches(cfg, 1, scfg.max_len)
-                return tfm.prefill(params, cfg, tokens, caches)
+    # ------------------------------------------------------------------
+    # fused path
+    def _admit_fused(self):
+        free = [s for s in range(self.scfg.slots) if self.active[s] is None]
+        while free and self.queue:
+            # longest same-bucket *prefix* of the queue (strict FIFO), up to
+            # the number of free slots, prefilled as one padded batch
+            bucket = self.fns.bucket(len(self.queue[0].prompt))
+            batch = [self.queue.popleft()]
+            # MoE rows couple through expert capacity: batch/pad admits
+            # would diverge from the reference path's batch-1 prefill
+            max_admit = 1 if self.fns.row_coupled else len(free)
+            while self.queue and len(batch) < max_admit and \
+                    self.fns.bucket(len(self.queue[0].prompt)) == bucket:
+                batch.append(self.queue.popleft())
+            n = len(batch)
+            slots_idx, free = free[:n], free[n:]
+            # pad the batch dimension up to a power of two so admit
+            # compiles are bounded by |buckets| x log2(slots), not by every
+            # batch size the queue happens to produce.  Pad rows duplicate
+            # row 0 *and its slot* and come first, so the real rows' writes
+            # (last in the unrolled insert) always win.
+            n_pad = _next_pow2(n) if n > 1 else 1
+            rows = [batch[0]] * (n_pad - n) + batch
+            row_slots = np.asarray([slots_idx[0]] * (n_pad - n) + slots_idx,
+                                   np.int32)
+            tokens = np.zeros((n_pad, bucket), np.int32)
+            last_idx = np.zeros((n_pad,), np.int32)
+            budget = np.zeros((n_pad,), np.int32)
+            for j, req in enumerate(rows):
+                plen = len(req.prompt)
+                tokens[j, :plen] = req.prompt
+                last_idx[j] = plen - 1
+                budget[j] = max(req.max_new, 0)
+            toks, self.caches, self._pos, self._last, self._active, \
+                self._remaining, self._rng = self.fns.admit_fn(bucket, n_pad)(
+                    self.params, jnp.asarray(tokens), jnp.asarray(last_idx),
+                    jnp.asarray(row_slots), jnp.asarray(budget),
+                    self.caches, self._pos, self._last,
+                    self._active, self._remaining, self._rng)
+            toks_h = np.asarray(toks)[n_pad - n:]
+            now = time.perf_counter()
+            for j, req in enumerate(batch):
+                req.out_tokens.append(int(toks_h[j]))
+                req.first_token_t = now
+                self.active[slots_idx[j]] = req
+                if req.max_new <= 0:
+                    self._finish(slots_idx[j], "max_new")
+                elif len(req.prompt) >= self.scfg.max_len - 1:
+                    self._finish(slots_idx[j], "max_len")
+            self.metrics.counter("engine.prefill_batches").inc()
 
-            self._prefill_cache[plen] = jax.jit(fn)
-        return self._prefill_cache[plen]
+    def _step_fused(self) -> bool:
+        self._admit_fused()
+        if not any(r is not None for r in self.active):
+            return False
+        out, emitted, self.caches, self._pos, self._last, self._active, \
+            self._remaining, self._rng = self.fns.decode_loop(
+                self.params, self.caches, self._pos, self._last,
+                self._active, self._remaining, self._rng)
+        # one host sync per K decode steps
+        out_h = np.asarray(out)
+        em_h = np.asarray(emitted)
+        act_h = np.asarray(self._active)
+        rem_h = np.asarray(self._remaining)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out_tokens.extend(int(t) for t in out_h[s, :em_h[s]])
+            if not act_h[s]:
+                self._finish(s, "max_new" if rem_h[s] <= 0 else "max_len")
+        self.metrics.counter("engine.steps").inc()
+        return True
 
-    def _admit(self):
+    # ------------------------------------------------------------------
+    # reference path: the pre-PR per-token loop (parity oracle / "before"
+    # benchmark side); one host round trip + (slots, vocab) logits transfer
+    # per token, full cache copy per step and per admit.
+    def _admit_reference(self):
         for slot in range(self.scfg.slots):
             if self.active[slot] is None and self.queue:
                 req = self.queue.popleft()
                 plen = len(req.prompt)
-                logits, small = self._prefill_fn(plen)(
+                logits, small = self.fns.prefill_fn(plen)(
                     self.params, jnp.asarray(req.prompt[None]))
                 self.caches = _insert_slot(self.caches, small, slot)
                 tok = int(jnp.argmax(logits[0, -1]))
@@ -116,43 +371,48 @@ class Engine:
                 req.first_token_t = time.perf_counter()
                 self.active[slot] = req
                 self.pos[slot] = plen                 # next write position
+                if req.max_new <= 0:
+                    self._finish(slot, "max_new")
+                elif plen >= self.scfg.max_len - 1:
+                    self._finish(slot, "max_len")
 
-    # ------------------------------------------------------------------
-    def step(self):
-        """One engine iteration: admit + one decode step for all slots."""
-        self._admit()
-        if not any(self.active):
+    def _step_reference(self) -> bool:
+        self._admit_reference()
+        if not any(r is not None for r in self.active):
             return False
         toks = np.zeros((self.scfg.slots, 1), np.int32)
         for s, req in enumerate(self.active):
             if req is not None:
                 toks[s, 0] = req.out_tokens[-1]
-        logits, self.caches = self._decode(self.params, jnp.asarray(toks),
-                                           self.caches,
-                                           jnp.asarray(self.pos))
+        logits, self.caches = self.fns.decode(self.params, jnp.asarray(toks),
+                                              self.caches,
+                                              jnp.asarray(self.pos))
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for s, req in enumerate(self.active):
             if req is None:
                 continue
             self.pos[s] += 1
             req.out_tokens.append(int(nxt[s]))
-            if len(req.out_tokens) >= req.max_new or self.pos[s] >= self.scfg.max_len - 1:
-                req.done = True
-                req.done_t = time.perf_counter()
-                self.finished.append(req)
-                self.active[s] = None
-                self.metrics.counter("engine.requests").inc()
-                self.metrics.counter("engine.tokens").inc(len(req.out_tokens))
-                self.metrics.histogram("engine.ttft_s").observe(
-                    req.first_token_t - req.submit_t)
-                self.metrics.histogram("engine.latency_s").observe(
-                    req.done_t - req.submit_t)
+            if req.decoded >= req.max_new:
+                self._finish(s, "max_new")
+            elif self.pos[s] >= self.scfg.max_len - 1:
+                self._finish(s, "max_len")
         self.metrics.counter("engine.steps").inc()
         return True
 
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine iteration: admit, then decode — a single step on the
+        reference path, ``sync_every`` fused steps (one host sync) on the
+        fused path."""
+        if self.scfg.fused:
+            return self._step_fused()
+        return self._step_reference()
+
     def run_until_drained(self, max_steps: int = 10_000):
         steps = 0
-        while (self.queue or any(self.active)) and steps < max_steps:
+        while (self.queue or any(r is not None for r in self.active)) \
+                and steps < max_steps:
             self.step()
             steps += 1
         return self.finished

@@ -201,3 +201,68 @@ def run_chaos(transport: str, faults: Sequence[Fault], n_replicas: int = 3,
         lost=lost, double_completed=double, wrong_results=wrong,
         crashes=snap.get("replica.crashes", 0.0),
         disconnects=snap.get("replica.disconnects", 0.0))
+
+
+# ----------------------------------------------------------------------
+# Slow loris: a worker whose liveness signals stay green — the process is
+# alive, the socket heartbeat thread keeps beating — but whose backend
+# never returns, so nothing is ever acknowledged.  The schedule-driven
+# harness above cannot express this (its faults *kill* things); the loris
+# fails by succeeding at staying alive.  Detection is the transports' ack
+# timeout (``ReplicaConfig.ack_timeout_s``): the router must eventually
+# declare the loris dead, reroute its unacknowledged work to survivors,
+# and complete everything exactly once.
+
+def run_slow_loris(transport: str = "process", n_replicas: int = 3,
+                   n_requests: int = 40, ack_timeout_s: float = 1.0,
+                   timeout_s: float = 60.0) -> ChaosReport:
+    assert transport in ("process", "socket"), \
+        "slow-loris detection is an ack-timeout property of the remote " \
+        "transports (a thread replica shares our interpreter; a stuck " \
+        "thread cannot be safely disowned)"
+    cfg = ReplicaConfig(inbox_capacity=512, max_batch=4,
+                        heartbeat_timeout_s=30.0,   # hb never the trigger
+                        ack_timeout_s=ack_timeout_s)
+    metrics = MetricsRegistry()
+    router = Router(policy="round_robin", metrics=metrics,
+                    max_retries=4, requeue_timeout_s=5.0)
+    workers = []
+    for i in range(n_replicas):
+        spec = echo_spec(delay_s=0.002) if i else \
+            echo_spec(delay_s=0.002, stall_s=3600.0)   # replica 0: the loris
+        workers.append(router.add_replica(spec=spec, cfg=cfg,
+                                          transport=transport))
+    loris = workers[0]
+    reqs: List[ClusterRequest] = []
+    with _CompletionCounter() as counter:
+        try:
+            for i in range(n_requests):
+                reqs.append(router.submit(i, session_key=f"s{i % 7}",
+                                          timeout_s=timeout_s))
+                time.sleep(0.005)
+            t_end = time.monotonic() + timeout_s
+            for q in reqs:
+                q.done.wait(max(t_end - time.monotonic(), 0.1))
+        finally:
+            router.stop(drain=True)
+        lost = [q.payload for q in reqs if not q.done.is_set()]
+        double = [q.payload for q in reqs
+                  if counter.counts.get(id(q), 0) > 1]
+    wrong = [q.payload for q in reqs
+             if q.status is Status.OK and q.result != 2 * q.payload]
+    snap = metrics.snapshot()
+    assert snap.get("replica.ack_timeouts", 0.0) >= 1.0, \
+        "the loris was never caught by the ack timeout"
+    assert not loris.alive, "the loris must be declared dead"
+    assert all(q.replica_rid != loris.rid for q in reqs
+               if q.status is Status.OK), \
+        "a never-acking replica cannot have completed anything"
+    return ChaosReport(
+        transport=f"{transport}+loris",
+        n_requests=n_requests,
+        ok=sum(q.status is Status.OK for q in reqs),
+        rejected=sum(q.status is Status.REJECTED for q in reqs),
+        failed=sum(q.status is Status.FAILED for q in reqs),
+        lost=lost, double_completed=double, wrong_results=wrong,
+        crashes=snap.get("replica.crashes", 0.0),
+        disconnects=snap.get("replica.disconnects", 0.0))

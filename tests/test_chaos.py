@@ -11,7 +11,7 @@ via ``pytest.ini``; CI runs them in a dedicated job).
 import pytest
 
 from tests._hyp_compat import given, settings, st
-from tests.chaos import ACTIONS, random_schedule, run_chaos
+from tests.chaos import ACTIONS, random_schedule, run_chaos, run_slow_loris
 
 
 def _episode(transport: str, seed: int, n_faults: int = 3,
@@ -39,6 +39,18 @@ def test_chaos_process_smoke():
 
 def test_chaos_socket_smoke():
     _episode("socket", seed=11, n_faults=2, n_requests=60)
+
+
+def test_slow_loris_process_is_rerouted():
+    """ROADMAP scenario: a worker that heartbeats but never acks.  The ack
+    timeout must declare it dead, its queued work must reroute to the
+    survivors, and every request must complete exactly once."""
+    report = run_slow_loris("process", n_replicas=3, n_requests=40,
+                            ack_timeout_s=1.0)
+    report.assert_invariants()
+    assert report.ok == report.n_requests, \
+        f"survivors should absorb everything: {report}"
+    assert report.crashes >= 1
 
 
 def test_schedule_is_deterministic():
@@ -72,6 +84,17 @@ def test_chaos_socket_never_loses_or_doubles(seed):
 def test_chaos_mixed_transport_cluster(seed):
     """One pool spanning thread + process + socket replicas at once."""
     _episode("mixed", seed, n_faults=4)
+
+
+@pytest.mark.slow
+def test_slow_loris_socket_is_rerouted():
+    """Same slow-loris contract over the socket transport: the worker-side
+    heartbeat thread keeps the connection audibly alive the whole time, so
+    only the ack timeout can catch it."""
+    report = run_slow_loris("socket", n_replicas=3, n_requests=40,
+                            ack_timeout_s=1.0)
+    report.assert_invariants()
+    assert report.ok == report.n_requests, str(report)
 
 
 @pytest.mark.slow

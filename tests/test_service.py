@@ -28,6 +28,23 @@ def test_service_batches_and_completes():
     assert max(calls) <= 4
 
 
+def test_idle_service_does_not_busy_poll():
+    """An idle service blocks on its inbox (capped waits) instead of
+    spinning at poll_s: over ~0.3s idle it must wake only a handful of
+    times (the old 2ms poll woke ~150x), yet a late submit still completes
+    promptly and stop() returns without waiting out the cap."""
+    svc = MLaaSService(lambda ps: ps, capacity=4).start()
+    time.sleep(0.3)
+    wakeups_idle = svc.metrics.counter("service.loop_wakeups").value
+    assert wakeups_idle <= 25, \
+        f"idle loop woke {wakeups_idle}x in 0.3s — still busy-polling"
+    r = svc.submit("late", timeout_s=2.0)
+    assert r.done.wait(3.0) and r.result == "late"
+    t0 = time.monotonic()
+    svc.stop()
+    assert time.monotonic() - t0 < MLaaSService.IDLE_WAIT_CAP_S + 1.0
+
+
 def test_service_flushes_on_deadline_slack():
     def slow_step(payloads):
         time.sleep(0.05)

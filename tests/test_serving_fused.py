@@ -1,0 +1,205 @@
+"""Fused K-step engine: token-for-token parity with the per-token reference
+path, bucketed batch prefill, max_new/truncation semantics.
+
+The fused path (donated caches, in-jit sampling, ``lax.fori_loop`` over K
+decode steps, bucketed batch prefill) must be an *observationally invisible*
+optimization: for every decoder family it emits exactly the tokens the
+pre-PR per-token loop emits, including when slots complete mid-K-loop and
+are refilled from the queue.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.models import api
+from repro.serving import Engine, ServeConfig, pad_tolerant
+
+FAMILIES = ["internlm2-1.8b",       # transformer (full attention)
+            "falcon-mamba-7b",      # SSM (Mamba-1)
+            "recurrentgemma-2b"]    # RG-LRU hybrid (Griffin)
+
+
+def _model(arch, seed=0):
+    cfg = reduced(get_config(arch))
+    params, _ = api.init(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+def _drain(params, cfg, scfg, prompts, max_new):
+    eng = Engine(params, cfg, scfg)
+    reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+    eng.run_until_drained()
+    return eng, reqs
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_fused_matches_reference_with_refill(arch):
+    """5 requests through 2 slots: slots complete mid-K-loop and refill from
+    the queue; K does not divide max_new.  Token streams must be identical
+    request-for-request."""
+    cfg, params = _model(arch)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 9, 7, 12, 6)]
+    _, ref = _drain(params, cfg,
+                    ServeConfig(max_len=64, slots=2, fused=False),
+                    prompts, max_new=6)
+    _, fus = _drain(params, cfg,
+                    ServeConfig(max_len=64, slots=2, fused=True,
+                                sync_every=4),
+                    prompts, max_new=6)
+    for i, (a, b) in enumerate(zip(ref, fus)):
+        assert a.out_tokens == b.out_tokens, (arch, i)
+        assert a.finish_reason == b.finish_reason == "max_new"
+
+
+def test_max_new_means_decoded_tokens():
+    """The prefill-sampled token is free: ``max_new`` counts decode-step
+    tokens only, and ``engine.tokens`` counts the same."""
+    cfg, params = _model("internlm2-1.8b")
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(0, cfg.vocab, size=6).astype(np.int32)
+               for _ in range(3)]
+    for fused in (False, True):
+        eng, reqs = _drain(params, cfg,
+                           ServeConfig(max_len=64, slots=2, fused=fused),
+                           prompts, max_new=5)
+        for r in reqs:
+            assert len(r.out_tokens) == 6          # 1 prefill + 5 decoded
+            assert r.decoded == 5
+            assert r.finish_reason == "max_new"
+        assert eng.metrics.counter("engine.tokens").value == 15, fused
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_truncation_records_reason(fused):
+    """A slot that hits ``max_len - 1`` before exhausting its budget stops
+    with an explicit ``max_len`` finish reason (and the truncation
+    counter), not a silent short completion."""
+    cfg, params = _model("internlm2-1.8b")
+    rng = np.random.RandomState(2)
+    prompt = rng.randint(0, cfg.vocab, size=8).astype(np.int32)
+    scfg = ServeConfig(max_len=16, slots=2, fused=fused, sync_every=4)
+    eng, (req,) = _drain(params, cfg, scfg, [prompt], max_new=100)
+    assert req.done and req.finish_reason == "max_len"
+    # prefill wrote positions 0..7; decode writes 8..14 (max_len-2) -> 7
+    # decoded tokens, pos parked at max_len-1
+    assert req.decoded == scfg.max_len - 1 - len(prompt)
+    assert eng.metrics.counter("engine.truncated").value == 1
+
+
+def test_truncation_parity_mid_loop():
+    """Truncation must fire at the same token index on both paths even when
+    it lands mid-K-loop."""
+    cfg, params = _model("falcon-mamba-7b")
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (4, 9)]
+    _, ref = _drain(params, cfg,
+                    ServeConfig(max_len=16, slots=2, fused=False),
+                    prompts, max_new=100)
+    _, fus = _drain(params, cfg,
+                    ServeConfig(max_len=16, slots=2, fused=True,
+                                sync_every=8),
+                    prompts, max_new=100)
+    for a, b in zip(ref, fus):
+        assert a.out_tokens == b.out_tokens
+        assert a.finish_reason == b.finish_reason == "max_len"
+
+
+def test_fused_matches_reference_moe():
+    """MoE rows couple through expert capacity, so admits are batch-1 and
+    inactive slots feed token 0 like the reference loop.  Without a
+    mid-K-loop refill (requests <= slots) the streams must be identical;
+    with refills, sync_every=1 restores step-for-step batch composition
+    and therefore exactness."""
+    cfg, params = _model("qwen3-moe-30b-a3b")
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 8)]
+    _, ref = _drain(params, cfg,
+                    ServeConfig(max_len=64, slots=2, fused=False),
+                    prompts, max_new=6)
+    _, fus = _drain(params, cfg,
+                    ServeConfig(max_len=64, slots=2, fused=True,
+                                sync_every=4),
+                    prompts, max_new=6)
+    for a, b in zip(ref, fus):
+        assert a.out_tokens == b.out_tokens
+    # refill case at K=1: admit timing matches the reference step-for-step
+    more = [rng.randint(0, cfg.vocab, size=n).astype(np.int32)
+            for n in (5, 8, 6, 5)]
+    _, ref2 = _drain(params, cfg,
+                     ServeConfig(max_len=64, slots=2, fused=False),
+                     more, max_new=5)
+    _, fus2 = _drain(params, cfg,
+                     ServeConfig(max_len=64, slots=2, fused=True,
+                                 sync_every=1),
+                     more, max_new=5)
+    for a, b in zip(ref2, fus2):
+        assert a.out_tokens == b.out_tokens
+
+
+def test_pad_tolerance_gate():
+    """Which families may take the padded-bucket prefill path: plain causal
+    attention yes; SSM / RG-LRU (recurrent state), MoE (capacity coupling),
+    and ring-cache windowed attention no."""
+    assert pad_tolerant(reduced(get_config("internlm2-1.8b")), 64)
+    assert not pad_tolerant(reduced(get_config("falcon-mamba-7b")), 64)
+    assert not pad_tolerant(reduced(get_config("recurrentgemma-2b")), 64)
+    assert not pad_tolerant(reduced(get_config("deepseek-v2-lite-16b")), 64)
+    assert not pad_tolerant(reduced(get_config("gemma3-4b")), 64)
+
+
+def test_bucketed_prefill_batches_admits():
+    """Pad-tolerant arch, mixed prompt lengths in one power-of-two bucket:
+    the engine admits them in a single batched prefill call and the padded
+    prefill is exact (tokens match the exact-length reference path)."""
+    cfg, params = _model("internlm2-1.8b")
+    rng = np.random.RandomState(4)
+    # lengths 5..8 share the size-8 bucket
+    prompts = [rng.randint(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 8, 6, 7)]
+    fus_eng, fus = _drain(params, cfg,
+                          ServeConfig(max_len=64, slots=4, fused=True,
+                                      sync_every=4),
+                          prompts, max_new=6)
+    assert fus_eng.metrics.counter("engine.prefill_batches").value == 1
+    _, ref = _drain(params, cfg,
+                    ServeConfig(max_len=64, slots=4, fused=False),
+                    prompts, max_new=6)
+    for a, b in zip(ref, fus):
+        assert a.out_tokens == b.out_tokens
+
+
+def test_exact_length_path_still_batches_same_length():
+    """Pad-intolerant family (SSM): same-length prompts still share one
+    exact-length batched prefill (no pads introduced)."""
+    cfg, params = _model("falcon-mamba-7b")
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(0, cfg.vocab, size=7).astype(np.int32)
+               for _ in range(3)]
+    eng, reqs = _drain(params, cfg,
+                       ServeConfig(max_len=64, slots=4, fused=True),
+                       prompts, max_new=4)
+    assert eng.metrics.counter("engine.prefill_batches").value == 1
+    assert all(r.done for r in reqs)
+
+
+def test_temperature_sampling_in_jit():
+    """temperature > 0 samples on device: tokens are valid ids and two
+    engines with different seeds diverge (smoke, not a parity claim)."""
+    cfg, params = _model("internlm2-1.8b")
+    rng = np.random.RandomState(6)
+    prompts = [rng.randint(0, cfg.vocab, size=6).astype(np.int32)]
+    outs = []
+    for seed in (0, 1):
+        _, (req,) = _drain(params, cfg,
+                           ServeConfig(max_len=64, slots=2, fused=True,
+                                       temperature=1.0, seed=seed),
+                           [p.copy() for p in prompts], max_new=12)
+        assert all(0 <= t < cfg.padded_vocab for t in req.out_tokens)
+        outs.append(req.out_tokens)
+    assert outs[0] != outs[1], "different rng seeds should diverge"
