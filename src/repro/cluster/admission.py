@@ -54,6 +54,14 @@ class AdmissionConfig:
     # global model either over-sheds the cheap backend or under-sheds the
     # expensive one.  Falls back to ``cost_model`` for unknown kinds.
     cost_models: Optional[Mapping[str, CostModel]] = None
+    # KV-pool headroom gate (paged LM engines): shed when the cluster's
+    # free-block fraction (engine.kv_blocks_free / engine.kv_blocks_total,
+    # shipped through replica heartbeats) drops below this.  Queue depth
+    # alone cannot see memory pressure — a paged replica with short queues
+    # can still be out of blocks for *long* sequences, and admitting into
+    # a starved pool turns into in-engine deferral (or mid-decode pool
+    # exhaustion) instead of a cheap front-door rejection.  0 disables.
+    min_kv_headroom_frac: float = 0.0
 
 
 class AdmissionController:
@@ -66,6 +74,7 @@ class AdmissionController:
         self._admitted = self.metrics.counter("admission.admitted")
         self._shed_full = self.metrics.counter("admission.shed_queue_full")
         self._shed_deadline = self.metrics.counter("admission.shed_deadline")
+        self._shed_kv = self.metrics.counter("admission.shed_kv_pressure")
 
     def _model_for(self, kind: Optional[str]) -> Optional[CostModel]:
         if kind is not None and self.cfg.cost_models:
@@ -80,19 +89,29 @@ class AdmissionController:
 
     def decide(self, queued_cost: int, cost: int, deadline_s: float,
                now: Optional[float] = None,
-               kind: Optional[str] = None) -> Optional[Rejected]:
+               kind: Optional[str] = None,
+               kv_free_frac: Optional[float] = None) -> Optional[Rejected]:
         """Returns None to admit, or a :class:`Rejected` describing the shed.
 
         ``queued_cost`` is the outstanding cost ahead of this request (the
         router passes the per-kind queue depth when ``kind`` is given, else
         cluster-wide); ``cost`` the new request's own cost units; ``kind``
-        selects a per-backend cost model for the deadline test.
+        selects a per-backend cost model for the deadline test;
+        ``kv_free_frac`` is the backend pool's free-KV-block fraction when
+        known (paged LM engines export it via ``engine.kv_blocks_*``).
         """
         if queued_cost + cost > self.cfg.max_queue_cost:
             self._shed_full.inc()
             return Rejected("queue_full",
                             f"queued={queued_cost} + {cost} > "
                             f"{self.cfg.max_queue_cost}")
+        if self.cfg.min_kv_headroom_frac > 0 and kv_free_frac is not None \
+                and kv_free_frac < self.cfg.min_kv_headroom_frac:
+            self._shed_kv.inc()
+            return Rejected("kv_pressure",
+                            f"free kv blocks {kv_free_frac:.3f} < "
+                            f"{self.cfg.min_kv_headroom_frac} headroom "
+                            f"(kind={kind or 'global'})")
         now = time.monotonic() if now is None else now
         est = self._estimate(queued_cost + cost, kind)
         slack = deadline_slack(deadline_s, now, est)

@@ -86,6 +86,26 @@ class ArtifactStore:
     def has(self, digest: str) -> bool:
         return os.path.exists(self._path(digest))
 
+    def _install(self, tmp: str, digest: str) -> None:
+        """Atomically publish a fully-written private temp file under its
+        digest, *re-verifying the bytes that actually hit disk* first.
+
+        The re-verify closes the corruption window concurrent fetches used
+        to have: a torn/short write (full disk, a crash mid-write, an I/O
+        error the buffered writer swallowed) would otherwise be renamed
+        into place and then *trusted* by every later worker that finds the
+        file present.  Because the temp file is private (mkstemp) and the
+        publish is a single ``os.replace``, N workers fetching the same
+        hash race benignly: each verifies its own bytes, each rename is
+        atomic, and the store never exposes a half-written artifact."""
+        disk = sha256_file(tmp)
+        if disk != digest:
+            raise IOError(
+                f"artifact write verification failed: wrote bytes hashing "
+                f"to {disk}, expected {digest} — refusing to publish a "
+                f"corrupt artifact")
+        os.replace(tmp, self._path(digest))
+
     def put_bytes(self, data: bytes) -> str:
         digest = sha256_bytes(data)
         path = self._path(digest)
@@ -94,21 +114,41 @@ class ArtifactStore:
         # truncated) is overwritten with the verified bytes
         fresh = not os.path.exists(path) or sha256_file(path) != digest
         if fresh:
-            # write-then-rename: concurrent puts of the same content race
-            # benignly to an identical file
+            # write-to-temp + digest re-verify + atomic rename: concurrent
+            # puts of the same content race benignly to an identical file
             fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
             try:
                 with os.fdopen(fd, "wb") as f:
                     f.write(data)
-                os.replace(tmp, path)
+                self._install(tmp, digest)
             finally:
                 if os.path.exists(tmp):
                     os.unlink(tmp)
         return digest
 
-    def put_file(self, path: str) -> str:
-        with open(path, "rb") as f:
-            return self.put_bytes(f.read())
+    def put_file(self, path: str, chunk: int = 1 << 20) -> str:
+        """Streaming put: hash while copying into a private temp file,
+        then verify + atomic-rename — a multi-GB checkpoint is never
+        materialized in RAM and never observable half-copied."""
+        h = hashlib.sha256()
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with open(path, "rb") as src, os.fdopen(fd, "wb") as dst:
+                while True:
+                    block = src.read(chunk)
+                    if not block:
+                        break
+                    h.update(block)
+                    dst.write(block)
+            digest = h.hexdigest()
+            target = self._path(digest)
+            if os.path.exists(target) and sha256_file(target) == digest:
+                return digest           # already installed and verified
+            self._install(tmp, digest)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return digest
 
     def get_path(self, digest: str) -> str:
         path = self._path(digest)

@@ -119,7 +119,9 @@ def build_engine(arch: str = "internlm2-1.8b", max_len: int = 64,
                  weights_path: Optional[str] = None,
                  ingest_ms: float = 0.0, fused: bool = True,
                  sync_every: int = 8, temperature: float = 0.0,
-                 prefill_bucketing: bool = True):
+                 prefill_bucketing: bool = True, paged: bool = False,
+                 block_size: int = 16, kv_blocks: int = 0,
+                 prefix_cache: bool = True):
     """One continuous-batching LM engine.  Weights come from
     ``weights_path`` (a ``checkpoint.Checkpointer`` directory) when given,
     else from deterministic init at ``seed`` — either way the worker holds
@@ -145,8 +147,14 @@ def build_engine(arch: str = "internlm2-1.8b", max_len: int = 64,
         params = Checkpointer(weights_path).restore(params)
     scfg = ServeConfig(max_len=max_len, slots=slots, fused=fused,
                        sync_every=sync_every, temperature=temperature,
-                       prefill_bucketing=prefill_bucketing)
-    engine = Engine(params, cfg, scfg,
+                       prefill_bucketing=prefill_bucketing, paged=paged,
+                       block_size=block_size, kv_blocks=kv_blocks,
+                       prefix_cache=prefix_cache)
+    # inside a remote worker, report into the registry its heartbeats
+    # ship — that is how engine.* counters and the paged engine's
+    # kv_blocks_* gauges reach the router's admission headroom gate
+    from repro.cluster.metrics import worker_registry
+    engine = Engine(params, cfg, scfg, metrics=worker_registry(),
                     shared_fns=shared_engine_fns(cfg, scfg))
     if ingest_ms > 0:
         class _IngestEngineBackend(EngineBackend):

@@ -266,3 +266,24 @@ def null_registry() -> MetricsRegistry:
     if _NULL is None:
         _NULL = MetricsRegistry()
     return _NULL
+
+
+# ----------------------------------------------------------------------
+# The registry a remote worker ships over its heartbeat channel.  Workers
+# rebuild their backend from a BackendSpec, which cannot carry a live
+# registry — so the worker entry points publish theirs here before
+# ``spec.build()`` and builders adopt it.  Without this, backend-level
+# metrics (``engine.*`` counters, the paged-KV ``engine.kv_blocks_*``
+# gauges the admission headroom gate reads) would sit in a private
+# registry no heartbeat ever sees.
+_WORKER_REGISTRY: Optional[MetricsRegistry] = None
+
+
+def set_worker_registry(registry: Optional[MetricsRegistry]) -> None:
+    global _WORKER_REGISTRY
+    _WORKER_REGISTRY = registry
+
+
+def worker_registry() -> Optional[MetricsRegistry]:
+    """The heartbeat-shipped registry of this worker process, if any."""
+    return _WORKER_REGISTRY

@@ -58,6 +58,40 @@ class ClusterRequest:
     replica_rid: Optional[int] = None     # replica that completed it
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     finished_s: float = 0.0
+    # streaming: partial-result frames forwarded by the replica while the
+    # request is still in flight (e.g. per-K-step token slices from an LM
+    # engine).  ``on_partial(frame)`` fires on the transport's receive
+    # thread; ``partials`` keeps every frame for non-callback consumers.
+    on_partial: Optional[Callable[[Any], None]] = None
+    partials: List[Any] = dataclasses.field(default_factory=list)
+
+    def emit_partial(self, frame: Any) -> None:
+        self.partials.append(frame)
+        if self.on_partial is not None:
+            try:
+                self.on_partial(frame)
+            except Exception:        # noqa: BLE001 - consumer's bug
+                pass                 # streaming must never kill transport IO
+
+    #: sentinel frame sent through ``on_partial`` when a spilled request
+    #: is re-dispatched: the replacement replica re-runs from scratch and
+    #: will re-stream every token, so incremental consumers must discard
+    #: what they rendered for the previous attempt.
+    RETRY_FRAME = ("__retry__",)
+
+    def reset_partials(self) -> None:
+        """At-least-once streaming: called by the router before a spilled
+        request is requeued.  Clears the frame buffer (the authoritative
+        ``partials`` view restarts with the new attempt) and signals
+        ``on_partial`` consumers with :data:`RETRY_FRAME`."""
+        if not self.partials:
+            return
+        self.partials.clear()
+        if self.on_partial is not None:
+            try:
+                self.on_partial(self.RETRY_FRAME)
+            except Exception:        # noqa: BLE001 - consumer's bug
+                pass
 
     def _finish(self, status: Status):
         self.status = status
@@ -133,14 +167,33 @@ class EngineBackend:
 
     Payloads are ``(prompt_tokens, max_new)``; results are the generated
     token lists.  The whole pulled batch shares the engine's decode slots.
+
+    Streaming: when the driver binds an emitter (:meth:`bind_emitter`),
+    each engine host sync forwards a ``(new_tokens, done)`` frame for the
+    payload that produced it — partial tokens reach the submitter at
+    K-step granularity instead of whole-request acks.
     """
 
     def __init__(self, engine):
         self.engine = engine
+        self._emit = None
+
+    def bind_emitter(self, emit) -> None:
+        """``emit(payload_index, frame)`` forwards a partial-result frame
+        for the current batch; rebound by the driver per batch."""
+        self._emit = emit
 
     def process(self, payloads: List[Any]) -> List[Any]:
-        reqs = [self.engine.submit(prompt, max_new=max_new)
-                for prompt, max_new in payloads]
+        emit = self._emit
+
+        def on_tokens(i):
+            if emit is None:
+                return None
+            return lambda req, toks, done: emit(i, (toks, done))
+
+        reqs = [self.engine.submit(prompt, max_new=max_new,
+                                   on_tokens=on_tokens(i))
+                for i, (prompt, max_new) in enumerate(payloads)]
         self.engine.run_until_drained()
         return [r.out_tokens for r in reqs]
 
@@ -176,6 +229,8 @@ class ReplicaConfig:
 #   get(timeout) / get_nowait()   next work item (raise queue.Empty)
 #   payload(item)            the backend payload carried by an item
 #   begin(batch)             batch is now in flight (unacknowledged)
+#   emit(item, frame)        [optional] forward a partial-result frame for
+#                            an in-flight item (streaming backends)
 #   ack(batch, results, busy_s)   acknowledge a completed batch
 #   spill(batch, error)      crash path: `batch` was in flight; the
 #                            transport must also spill everything still
@@ -206,6 +261,15 @@ def run_replica_loop(backend, cfg: ReplicaConfig, io) -> None:
                 break
             continue
         io.begin(batch)
+        # streaming bridge: a backend that accepts an emitter gets partial
+        # frames forwarded through the transport (LocalTransport fires the
+        # request's callback directly; remote workers ship ("partial", ...)
+        # frames the parent dispatches) — tokens stream at the backend's
+        # sync cadence instead of quantizing to whole-request acks
+        emit_fn = getattr(io, "emit", None)
+        if emit_fn is not None and hasattr(backend, "bind_emitter"):
+            backend.bind_emitter(
+                lambda i, frame, _b=batch: emit_fn(_b[i], frame))
         t0 = time.monotonic()
         try:
             results = backend.process([io.payload(r) for r in batch])

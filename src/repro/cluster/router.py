@@ -192,19 +192,47 @@ class Router:
     def submit(self, payload: Any, *, cost: int = 1,
                session_key: Optional[str] = None,
                kind: Optional[str] = None,
-               timeout_s: float = 30.0) -> ClusterRequest:
+               timeout_s: float = 30.0,
+               on_partial: Optional[Callable[[Any], None]] = None,
+               ) -> ClusterRequest:
+        """``on_partial(frame)`` streams partial results (e.g. per-K-step
+        token slices from an LM engine) while the request is in flight;
+        the final result still arrives through :meth:`wait`."""
         now = time.monotonic()
         req = ClusterRequest(payload, cost=cost, session_key=session_key,
                              kind=kind, deadline_s=now + timeout_s,
-                             rid=next(self._rids), submitted_s=now)
+                             rid=next(self._rids), submitted_s=now,
+                             on_partial=on_partial)
         if self.admission is not None:
+            kv_frac = None
+            if self.admission.cfg.min_kv_headroom_frac > 0:
+                kv_frac = self.kv_free_fraction()
             shed = self.admission.decide(self.queue_depth(kind), cost,
-                                         req.deadline_s, now, kind=kind)
+                                         req.deadline_s, now, kind=kind,
+                                         kv_free_frac=kv_frac)
             if shed is not None:
                 req.reject(shed)
                 return req
         self._dispatch(req)
         return req
+
+    def kv_free_fraction(self) -> Optional[float]:
+        """Cluster-wide paged-KV headroom: free / total blocks summed over
+        the router registry (thread replicas write it directly) and every
+        alive worker's last heartbeat snapshot.  Reads just the two
+        ``engine.kv_blocks_*`` gauges — this runs on every admission
+        decision, so it must not pay ``cluster_snapshot``'s full
+        merge-and-recompute-percentiles cost.  None when no replica
+        reports a pool (dense engines, non-LM backends)."""
+        total = self.metrics.gauge("engine.kv_blocks_total").value
+        free = self.metrics.gauge("engine.kv_blocks_free").value
+        for w in self.alive_replicas():
+            snap = w.metrics_snapshot()
+            total += snap.get("engine.kv_blocks_total", 0.0)
+            free += snap.get("engine.kv_blocks_free", 0.0)
+        if total <= 0:
+            return None
+        return free / total
 
     def _note_session_home(self, key: str, rid: int) -> None:
         with self._lock:
@@ -258,6 +286,10 @@ class Router:
         exclude = dead.rid if not dead.alive else None
         for req in spilled:
             req.attempts += 1
+            # the replacement replica re-runs from scratch and re-streams
+            # every token: reset the partial-frame view so incremental
+            # consumers don't render the first attempt's prefix twice
+            req.reset_partials()
             if req.attempts > self.max_retries:
                 req.fail(RuntimeError(
                     f"request {req.rid}: retries exhausted after replica "

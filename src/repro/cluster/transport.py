@@ -230,6 +230,12 @@ class LocalTransport(Transport):
     def begin(self, batch: List[ClusterRequest]) -> None:
         pass            # the driver hands the in-flight batch to spill()
 
+    @staticmethod
+    def emit(req: ClusterRequest, frame: Any) -> None:
+        """Streaming: a partial-result frame for an in-flight request —
+        same process, so it goes straight to the request."""
+        req.emit_partial(frame)
+
     def ack(self, batch: List[ClusterRequest], results: List[Any],
             busy_s: float) -> None:
         self.busy_s += busy_s
@@ -426,6 +432,13 @@ class WorkerIO:
     def begin(self, batch) -> None:
         pass                            # the parent tracks in-flight state
 
+    def emit(self, item, frame) -> None:
+        """Streaming: ship a partial-result frame for in-flight item
+        ``(rid, cost, payload)``; the parent routes it to the request's
+        ``on_partial``.  Best-effort — a lost frame only degrades
+        streaming granularity, the ack still carries the full result."""
+        self._send(("partial", item[0], frame), pickle_only=True)
+
     def ack(self, batch, results, busy_s: float) -> None:
         self.busy_s += busy_s
         self.processed += len(batch)
@@ -454,7 +467,9 @@ class WorkerIO:
 def _worker_entry(conn, spec: BackendSpec, cfg: ReplicaConfig,
                   rid: int) -> None:
     """Entry point of a spawned pipe-replica worker process."""
+    from repro.cluster.metrics import set_worker_registry
     registry = MetricsRegistry()
+    set_worker_registry(registry)   # builders adopt the heartbeat registry
     io = WorkerIO(PipeChannel(conn), cfg, rid, registry)
     try:
         backend = spec.build()
@@ -613,6 +628,14 @@ class RemoteTransport(Transport):
             # busy enough that _idle_tick never fires — the exact loris
             # this guard exists to catch
             return not self._check_ack_stall()
+        elif tag == "partial":
+            # streaming frame for an in-flight request; don't pop — the
+            # ack is still the completion signal (late frames after a
+            # spill hit an empty table and drop harmlessly)
+            with self._lock:
+                req = self._outstanding.get(msg[1])
+            if req is not None:
+                req.emit_partial(msg[2])
         elif tag == "ready":
             self._ready.set()
         elif tag == "drained":

@@ -96,6 +96,8 @@ def run_worker(address: Tuple[str, int], token: str,
     address = (str(address[0]), int(address[1]))
     store = ArtifactStore(artifacts_dir)
     registry = MetricsRegistry()
+    from repro.cluster.metrics import set_worker_registry
+    set_worker_registry(registry)   # builders adopt the heartbeat registry
     backend = None
     announce_kind: Optional[str] = None
     announce_hash: Optional[str] = None

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.decode_attention import decode_attention_bhd
+from repro.kernels.paged_attention import paged_decode_attention_bkgd
 from repro.kernels.pair_score import pair_score_blocked
 from repro.kernels.ssm_scan import ssm_scan_blocked
 
@@ -40,6 +41,24 @@ def decode_attention(q, k, v, lengths, *, n_splits: int = 8,
     vt = v.transpose(0, 2, 1, 3)
     return decode_attention_bhd(q, kt, vt, lengths, n_splits=n_splits,
                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           interpret: bool = False):
+    """q: (B,H,hd); k_pool/v_pool: (num_blocks, bs, KV, hd) shared pools;
+    block_tables: (B, nb); lengths: (B,) -> (B,H,hd).
+
+    The kernel gathers K/V through the block table inside the grid (scalar
+    prefetch resolves physical pool rows), so no dense per-sequence cache
+    is ever materialized."""
+    B, H, hd = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    out = paged_decode_attention_bkgd(q.reshape(B, KV, G, hd),
+                                      k_pool, v_pool, block_tables, lengths,
+                                      interpret=interpret)
+    return out.reshape(B, H, hd)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))

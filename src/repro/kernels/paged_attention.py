@@ -1,0 +1,118 @@
+"""Pallas TPU paged decode attention: single-query attention over a
+block-pooled KV cache, gathered *inside* the kernel through a per-sequence
+block table.
+
+The dense flash-decode kernel (``decode_attention.py``) reads a contiguous
+``(B, L, KV, hd)`` cache; here K/V live in one shared pool
+``(num_blocks, block_size, KV, hd)`` and each sequence names its blocks in
+``block_tables (B, nb)``.  The block table and the valid lengths ride in as
+*scalar prefetch* operands, so the grid's last (sequential) dimension walks
+a sequence's blocks and the BlockSpec ``index_map`` resolves the physical
+pool row **before** the kernel body runs — the DMA engine fetches exactly
+the blocks the sequence owns, never a dense ``max_len`` stripe.  Per-block
+``(m, l, acc)`` partials accumulate across the sequential grid dimension in
+VMEM scratch (the standard online-softmax pattern), and blocks past the
+sequence's length are skipped entirely with ``@pl.when``.
+
+On CPU (tests) this runs with ``interpret=True`` against
+``ref.paged_decode_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, bs: int, scale: float):
+    """Grid (B, KV, nb); the last dimension is sequential per (b, h).
+
+    q_ref: (1, 1, G, hd) queries of this kv head's group
+    k_ref/v_ref: (1, bs, 1, hd) — the pool block named by bt[b, j]
+    o_ref: (1, 1, G, hd); m/l/acc: VMEM scratch carried across j.
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    n_blocks = pl.num_programs(2)
+    length = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[:] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[:] = jnp.zeros_like(l_ref)
+        acc_ref[:] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j * bs < length)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)                   # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)                # (bs, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        s = jnp.where(pos < length, s, NEG_INF)               # (G, bs)
+        m_prev = m_ref[:, :1]                                 # (G, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, :1] = l_ref[:, :1] * corr + \
+            jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, :, 0].astype(jnp.float32)                # (bs, hd)
+        acc_ref[:] = acc_ref[:] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[:, :1] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[:] /
+                       jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_bkgd(q, k_pool, v_pool, block_tables, lengths, *,
+                                interpret: bool = False):
+    """q: (B, KV, G, hd); k_pool/v_pool: (num_blocks, bs, KV, hd);
+    block_tables: (B, nb) int32; lengths: (B,) int32 -> (B, KV, G, hd)."""
+    B, KV, G, hd = q.shape
+    bs = k_pool.shape[1]
+    nb = block_tables.shape[1]
+    kernel = functools.partial(_paged_decode_kernel, bs=bs,
+                               scale=1.0 / math.sqrt(hd))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # block_tables, lengths
+        grid=(B, KV, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),       # running max (col 0)
+            pltpu.VMEM((G, 128), jnp.float32),       # running sum (col 0)
+            pltpu.VMEM((G, hd), jnp.float32),        # output accumulator
+        ],
+    )
+    try:
+        cparams = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except Exception:
+        cparams = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=cparams,
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pool, v_pool)

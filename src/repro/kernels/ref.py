@@ -48,6 +48,27 @@ def decode_attention_ref(q, k, v, lengths):
     return o.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths):
+    """Single-query decode attention through a block table.
+
+    q: (B,H,hd); k_pool/v_pool: (num_blocks, bs, KV, hd) — the shared
+    device pool; block_tables: (B, nb) int32 physical block ids backing
+    each sequence's virtual positions (padded with the null block);
+    lengths: (B,) valid prefix length.  Returns (B,H,hd).
+
+    The gather ``pool[bt]`` materializes each sequence's virtual cache
+    ``(B, nb*bs, KV, hd)`` and then this is exactly
+    :func:`decode_attention_ref` — which is what makes it both the
+    XLA fallback inside the model and the oracle for the Pallas kernel.
+    """
+    B = q.shape[0]
+    bs = k_pool.shape[1]
+    nb = block_tables.shape[1]
+    k = k_pool[block_tables].reshape(B, nb * bs, *k_pool.shape[2:])
+    v = v_pool[block_tables].reshape(B, nb * bs, *v_pool.shape[2:])
+    return decode_attention_ref(q, k, v, lengths)
+
+
 def pair_score_ref(claims, evidence, W, w_c, w_e, bias):
     """The paper's phase-2 Cartesian scoring: (N,d) x (M,d) -> (N,M)."""
     bil = (claims.astype(jnp.float32) @ W.astype(jnp.float32)) @ evidence.astype(jnp.float32).T

@@ -63,6 +63,19 @@ def main(argv=None):
                     help="K: fused decode steps per host sync")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="in-jit sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: per-layer block pool + block "
+                         "tables + content-hashed prefix cache instead of "
+                         "one dense max_len stripe per slot (families with "
+                         "non-pageable state keep the dense path)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="usable pool blocks (paged); 0 = dense-equivalent "
+                         "slots * max_len/block_size")
+    ap.add_argument("--kv-headroom", type=float, default=0.0,
+                    help="admission: shed when the cluster's free KV-block "
+                         "fraction drops below this (0 disables)")
     ap.add_argument("--weights-dir", default=None,
                     help="checkpoint dir for process workers to load "
                          "weights from (default: deterministic init at "
@@ -77,7 +90,8 @@ def main(argv=None):
     params = api.init(jax.random.PRNGKey(0), cfg)[0] if need_params else None
     scfg = ServeConfig(max_len=args.max_len, slots=args.slots,
                        fused=args.fused, sync_every=args.sync_every,
-                       temperature=args.temperature)
+                       temperature=args.temperature, paged=args.paged,
+                       block_size=args.block_size, kv_blocks=args.kv_blocks)
     rng = np.random.RandomState(args.seed)
     prompts = [rng.randint(0, cfg.vocab,
                            size=rng.randint(4, 16)).astype(np.int32)
@@ -95,7 +109,9 @@ def main(argv=None):
         metrics = MetricsRegistry()
         router = Router(policy=args.router_policy, metrics=metrics,
                         admission=AdmissionController(
-                            AdmissionConfig(max_queue_cost=args.max_queue),
+                            AdmissionConfig(
+                                max_queue_cost=args.max_queue,
+                                min_kv_headroom_frac=args.kv_headroom),
                             metrics))
         rcfg = ReplicaConfig(max_batch=args.slots)
         if args.transport in ("process", "socket"):
@@ -103,7 +119,9 @@ def main(argv=None):
                                slots=args.slots, reduce=True, seed=0,
                                weights_path=args.weights_dir,
                                fused=args.fused, sync_every=args.sync_every,
-                               temperature=args.temperature)
+                               temperature=args.temperature,
+                               paged=args.paged, block_size=args.block_size,
+                               kv_blocks=args.kv_blocks)
             for _ in range(args.replicas):
                 router.add_replica(spec=spec, cfg=rcfg,
                                    transport=args.transport)

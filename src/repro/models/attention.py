@@ -431,6 +431,103 @@ def prefill_into_cache(params_unused, k, v, cache, cfg, *, kind: str):
 
 
 # ----------------------------------------------------------------------
+# Paged KV cache: K/V live in one shared block pool per layer instead of a
+# dense (B, max_len) stripe per slot; each sequence names its blocks in a
+# block table (serving/kvpool.py owns the host-side allocator).  Physical
+# block 0 is the reserved null block: table padding points at it and
+# masked/pad writes are redirected into it, so a stale entry can corrupt
+# nothing.  Gather-through-the-table + masked mha is the exact jnp path
+# (and the parity oracle); ``cfg.use_kernels`` routes decode through the
+# Pallas paged kernel, which resolves pool rows via scalar-prefetched
+# block tables and never materializes a dense per-sequence cache.
+
+def init_paged_kv_cache(cfg, num_blocks: int, block_size: int):
+    """Per-layer block pool; ``num_blocks`` usable + 1 reserved null row."""
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "kp": jnp.zeros((num_blocks + 1, block_size, KV, hd), cfg.act_dtype),
+        "vp": jnp.zeros((num_blocks + 1, block_size, KV, hd), cfg.act_dtype),
+    }
+
+
+def is_paged_cache(cache) -> bool:
+    return isinstance(cache, dict) and "kp" in cache
+
+
+def _paged_scatter(cache, k, v, vpos, bt):
+    """Write per-position K/V rows into the pool through the block table.
+
+    k/v: (B, S, KV, hd); vpos: (B, S) virtual positions; bt: (B, nb).
+    Positions beyond the table (prompt pads past ``nb*bs``) redirect to
+    the null block."""
+    bs = cache["kp"].shape[1]
+    nb = bt.shape[1]
+    vblock = vpos // bs
+    phys = jnp.take_along_axis(bt, jnp.minimum(vblock, nb - 1), axis=1)
+    phys = jnp.where(vblock < nb, phys, 0)
+    off = vpos % bs
+    cache = dict(cache)
+    cache["kp"] = cache["kp"].at[phys, off].set(k.astype(cache["kp"].dtype))
+    cache["vp"] = cache["vp"].at[phys, off].set(v.astype(cache["vp"].dtype))
+    return cache
+
+
+def _paged_gather(cache, bt):
+    """(B, nb*bs, KV, hd) virtual caches, materialized via the table."""
+    B, nb = bt.shape
+    bs = cache["kp"].shape[1]
+    k = cache["kp"][bt].reshape(B, nb * bs, *cache["kp"].shape[2:])
+    v = cache["vp"][bt].reshape(B, nb * bs, *cache["vp"].shape[2:])
+    return k, v
+
+
+def paged_attn_decode(params, x, cache, pos, bt, cfg, *, kind: str):
+    """Single decode step over a paged cache.
+
+    x: (B,1,d); pos: (B,) absolute write position; bt: (B, nb) block
+    table.  Same math as :func:`attn_decode` on a dense cache holding the
+    same tokens — validity is ``index <= pos`` either way."""
+    B = x.shape[0]
+    rope_base = cfg.rope_local_base if kind == "local" else cfg.rope_base
+    q, k, v = _project_qkv(params, x, x, cfg, pos[:, None], pos[:, None],
+                           rope_base)
+    cache = _paged_scatter(cache, k, v, pos[:, None], bt)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_attention(q[:, 0], cache["kp"], cache["vp"],
+                                          bt, pos + 1, interpret=True)
+        out = out[:, None]
+    else:
+        kg, vg = _paged_gather(cache, bt)
+        L = kg.shape[1]
+        valid = jnp.arange(L)[None, :] <= pos[:, None]
+        out = mha(q, kg, vg, valid[:, None, None, :], cfg.attn_softcap)
+    out = out.reshape(B, 1, -1) @ params["wo"]
+    return out, cache
+
+
+def paged_attn_extend(params, x, cache, pos0, bt, cfg, *, kind: str):
+    """Prefill a suffix into a paged cache: S tokens starting at absolute
+    position ``pos0`` (per row), attending to the cached prefix blocks
+    *and* causally within the suffix.  This is the paged admit path — a
+    prefix-cache hit makes ``pos0 > 0`` and only the un-cached suffix is
+    computed.  x: (B,S,d); pos0: (B,); bt: (B, nb)."""
+    B, S, _ = x.shape
+    rope_base = cfg.rope_local_base if kind == "local" else cfg.rope_base
+    positions = pos0[:, None] + jnp.arange(S)[None, :]       # (B, S)
+    q, k, v = _project_qkv(params, x, x, cfg, positions, positions,
+                           rope_base)
+    cache = _paged_scatter(cache, k, v, positions, bt)
+    kg, vg = _paged_gather(cache, bt)
+    L = kg.shape[1]
+    # causal over absolute positions: cache index l holds virtual pos l
+    valid = jnp.arange(L)[None, None, :] <= positions[:, :, None]
+    out = mha(q, kg, vg, valid[:, None], cfg.attn_softcap)
+    out = out.reshape(B, S, -1) @ params["wo"]
+    return out, cache
+
+
+# ----------------------------------------------------------------------
 # MLA (DeepSeek-V2): low-rank compressed KV; absorbed decode.
 def init_mla(key, cfg):
     d, H = cfg.d_model, cfg.n_heads

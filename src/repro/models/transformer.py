@@ -83,10 +83,53 @@ def init_layer_cache(cfg, kind: str, batch: int, max_len: int):
     return attn.init_kv_cache(cfg, batch, max_len, ring=bool(ring))
 
 
+def paged_supported(cfg, max_len: int) -> bool:
+    """Can this arch serve from a paged KV block pool?
+
+    Attention layers with a standard (non-ring) KV cache page naturally:
+    the cache is position-addressed, so positions can live in scattered
+    physical blocks.  SSM ("S") / RG-LRU ("R") carry *recurrent state*,
+    not a position-addressed cache — nothing to page; MLA ("M" with
+    ``kv_lora_rank``) uses its own compressed cache format; a ring cache
+    ("L" with ``window < max_len``) aliases positions modulo the window.
+    Those families keep the dense path.
+    """
+    for g in cfg.groups:
+        for kind in g.pattern:
+            if kind in ("S", "R"):
+                return False
+            if kind == "M" and cfg.kv_lora_rank:
+                return False
+            if kind == "L" and cfg.window and cfg.window < max_len:
+                return False
+    return True
+
+
+def init_paged_caches(cfg, num_blocks: int, block_size: int):
+    """Block-pool caches: one shared ``(num_blocks+1, bs, KV, hd)`` K/V
+    pool per layer (row 0 reserved as the null block) instead of a dense
+    per-slot stripe.  Layout mirrors :func:`init_caches` so the scan
+    machinery is unchanged."""
+    if not paged_supported(cfg, max_len=1 << 30):
+        raise ValueError(f"{cfg.name}: family holds non-pageable state "
+                         f"(SSM/RG-LRU/MLA/ring) — use the dense cache")
+    caches = []
+    for g in cfg.groups:
+        pos_caches = []
+        for kind in g.pattern:
+            c = attn.init_paged_kv_cache(cfg, num_blocks, block_size)
+            c = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (g.repeats,) + a.shape), c)
+            pos_caches.append(c)
+        caches.append(pos_caches)
+    return caches
+
+
 # ----------------------------------------------------------------------
 # per-layer apply
-def apply_layer(p, x, cfg, kind: str, mode: str, cache, pos):
-    """Returns (x, aux, new_cache)."""
+def apply_layer(p, x, cfg, kind: str, mode: str, cache, pos, bt=None):
+    """Returns (x, aux, new_cache).  ``bt`` is the (B, nb) block table
+    when ``cache`` is paged (decode/extend modes)."""
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(p["ln1"], x, cfg)
 
@@ -124,7 +167,15 @@ def apply_layer(p, x, cfg, kind: str, mode: str, cache, pos):
         use_seqshard = (ctx is not None and ctx.policy == "seqtp"
                         and mode != "decode" and S >= attn.FLASH_MIN_SEQ
                         and S % ctx.mesh.shape.get("model", 1) == 0)
-        if mode == "decode":
+        if mode == "decode" and attn.is_paged_cache(cache):
+            mix, cache = attn.paged_attn_decode(p["mixer"], h, cache, pos,
+                                                bt, cfg, kind=akind)
+        elif mode == "extend":
+            # paged suffix prefill: S tokens appended at absolute position
+            # `pos` (per row), attending through the block table
+            mix, cache = attn.paged_attn_extend(p["mixer"], h, cache, pos,
+                                                bt, cfg, kind=akind)
+        elif mode == "decode":
             mix, cache = attn.attn_decode(p["mixer"], h, cache, pos, cfg, kind=akind)
         elif use_seqshard:
             mix, k, v = attn.seqshard_attn_forward(
@@ -216,8 +267,9 @@ def _remat_wrap(fn, cfg):
     return jax.checkpoint(fn)
 
 
-def run_backbone(params, x, cfg, mode: str, caches=None, pos=None):
-    """x: (B,S,d) embedded input.  Returns (x, aux, new_caches)."""
+def run_backbone(params, x, cfg, mode: str, caches=None, pos=None, bt=None):
+    """x: (B,S,d) embedded input.  Returns (x, aux, new_caches).
+    ``bt``: (B, nb) block table for paged caches (loop-invariant)."""
     aux0 = jnp.zeros((), jnp.float32)
     new_caches = []
     for gi, g in enumerate(cfg.groups):
@@ -230,7 +282,8 @@ def run_backbone(params, x, cfg, mode: str, caches=None, pos=None):
             ncs = []
             for pi, kind in enumerate(_pattern):
                 cc = layer_cs[pi] if layer_cs is not None else None
-                xx, a, nc = apply_layer(layer_ps[pi], xx, cfg, kind, mode, cc, pos)
+                xx, a, nc = apply_layer(layer_ps[pi], xx, cfg, kind, mode,
+                                        cc, pos, bt)
                 aux = aux + a
                 ncs.append(nc)
             return (xx, aux), (tuple(ncs) if layer_cs is not None else None)
@@ -294,11 +347,31 @@ def prefill(params, cfg, tokens, caches, embeds=None, last_index=None):
     return logits, caches
 
 
-def decode_step(params, cfg, tokens, caches, pos):
-    """tokens: (B,1) int32; pos: (B,) absolute position being written."""
+def decode_step(params, cfg, tokens, caches, pos, bt=None):
+    """tokens: (B,1) int32; pos: (B,) absolute position being written;
+    ``bt``: (B, nb) block table when ``caches`` are paged."""
     x = embed(params["embedding"], tokens, cfg)
     x = shard(x, "batch", "seq", "embed")
-    x, aux, caches = run_backbone(params, x, cfg, "decode", caches, pos=pos)
+    x, aux, caches = run_backbone(params, x, cfg, "decode", caches, pos=pos,
+                                  bt=bt)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _head(params, x, cfg)
+    return logits, caches
+
+
+def extend_paged(params, cfg, tokens, caches, pos0, bt, last_index):
+    """Paged admit pass: append ``tokens (B,S)`` to sequences whose first
+    ``pos0 (B,)`` positions are already cached in the block pool (a
+    prefix-cache hit), writing suffix K/V through the block table ``bt``
+    and returning logits at per-row ``last_index`` (into the suffix) plus
+    the updated pool caches.  With ``pos0 == 0`` this is a full paged
+    prefill."""
+    x = embed(params["embedding"], tokens, cfg)
+    x = shard(x, "batch", "seq", "embed")
+    x, aux, caches = run_backbone(params, x, cfg, "extend", caches,
+                                  pos=pos0, bt=bt)
+    li = jnp.asarray(last_index).astype(jnp.int32)
+    x = jnp.take_along_axis(x, li[:, None, None], axis=1)
     x = apply_norm(params["final_norm"], x, cfg)
     logits = _head(params, x, cfg)
     return logits, caches
@@ -320,16 +393,16 @@ def sample_tokens(logits, temperature: float = 0.0, rng=None):
 
 
 def decode_fused(params, cfg, tokens, caches, pos, *, temperature: float = 0.0,
-                 rng=None):
+                 rng=None, bt=None):
     """One decode step that never ships logits to the host: embed -> backbone
     -> head -> sample, returning only the (B,) sampled token ids (instead of
     the (B, vocab) logits) plus the updated caches."""
-    logits, caches = decode_step(params, cfg, tokens, caches, pos)
+    logits, caches = decode_step(params, cfg, tokens, caches, pos, bt=bt)
     return sample_tokens(logits[:, 0], temperature, rng), caches
 
 
 def decode_loop(params, cfg, caches, pos, last, active, remaining, rng, *,
-                k: int, max_len: int, temperature: float = 0.0):
+                k: int, max_len: int, temperature: float = 0.0, bt=None):
     """K fused decode steps with one host sync at the end.
 
     All loop state lives on device: ``pos`` (B,) next write position,
@@ -347,7 +420,7 @@ def decode_loop(params, cfg, caches, pos, last, active, remaining, rng, *,
         caches, pos, last, active, remaining, rng, out, emitted = carry
         rng, sub = jax.random.split(rng)
         nxt, caches = decode_fused(params, cfg, last[:, None], caches, pos,
-                                   temperature=temperature, rng=sub)
+                                   temperature=temperature, rng=sub, bt=bt)
         nxt = jnp.where(active, nxt, last)
         out = jax.lax.dynamic_update_index_in_dim(out, nxt, i, 1)
         emitted = emitted + active.astype(jnp.int32)

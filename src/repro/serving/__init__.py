@@ -1,2 +1,4 @@
 from repro.serving.engine import (Engine, EngineFns, Request,  # noqa: F401
                                   ServeConfig, make_engine_fns, pad_tolerant)
+from repro.serving.kvpool import (BlockAllocator, PoolExhausted,  # noqa: F401
+                                  hash_token_blocks, padded_table)

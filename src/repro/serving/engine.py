@@ -25,6 +25,15 @@ Two hot paths (``ServeConfig.fused``):
   per step and per admit).  It is the parity oracle
   (``tests/test_serving_fused.py``) and the "before" side of
   ``BENCH_serving.json``.
+
+With ``ServeConfig.paged`` the fused loop additionally runs against a
+**paged KV cache** (``serving/kvpool.py``): K/V live in a shared
+per-layer block pool addressed through per-slot block tables, blocks are
+allocated as decode advances (not reserved at ``max_len``), shared
+system/task prompts are prefilled once via a content-hashed prefix cache,
+and forks share blocks copy-on-write.  Token-exact vs the dense fused
+path (``tests/test_serving_paged.py``); capacity numbers in
+``BENCH_serving.json`` under ``"paged"``.
 """
 from __future__ import annotations
 
@@ -41,6 +50,8 @@ import numpy as np
 
 from repro.cluster.metrics import MetricsRegistry
 from repro.models import api, transformer as tfm
+from repro.serving.kvpool import (NULL_BLOCK, BlockAllocator, PoolExhausted,
+                                  hash_token_blocks, padded_table)
 
 
 @dataclasses.dataclass
@@ -58,6 +69,18 @@ class ServeConfig:
     # exact-length path (same-length prompts still batch there).
     prefill_bucketing: bool = True
     min_bucket: int = 8             # smallest prefill bucket (pad-tolerant)
+    # Paged KV cache (serving/kvpool.py): K/V live in a shared block pool
+    # instead of one dense max_len stripe per slot, so per-replica session
+    # capacity is bounded by *tokens in flight*, not slots x max_len.
+    # Families holding non-pageable state (SSM/RG-LRU/MLA/ring windows)
+    # silently keep the dense path (engine.paged reports the outcome).
+    paged: bool = False
+    block_size: int = 16            # tokens per KV block
+    # usable pool blocks; 0 -> slots * (max_len / block_size), i.e. the
+    # same token capacity the dense layout reserves.  Capacity gains come
+    # from raising `slots` while holding kv_blocks * block_size fixed.
+    kv_blocks: int = 0
+    prefix_cache: bool = True       # content-hashed full-block prompt reuse
 
     def __post_init__(self):
         if self.fused and self.sync_every < 1:
@@ -68,6 +91,16 @@ class ServeConfig:
             raise ValueError("the reference (fused=False) path decodes "
                              "greedy-only; temperature sampling requires "
                              "the fused engine")
+        if self.paged:
+            if not self.fused:
+                raise ValueError("paged=True requires the fused engine; "
+                                 "the per-token reference loop is dense-"
+                                 "only (it is the parity oracle)")
+            if self.block_size < 1 or self.max_len % self.block_size:
+                raise ValueError(
+                    f"block_size ({self.block_size}) must divide max_len "
+                    f"({self.max_len}): equal virtual cache length is what "
+                    f"makes the paged path token-exact vs the dense oracle")
 
 
 @dataclasses.dataclass
@@ -81,6 +114,10 @@ class Request:
     submit_t: float = 0.0
     first_token_t: float = 0.0
     done_t: float = 0.0
+    # streaming: called at every host sync with the tokens that sync
+    # produced — on_tokens(req, new_tokens, done).  One call per K-step
+    # sync on the fused/paged paths, per token on the reference path.
+    on_tokens: Optional[Callable[["Request", List[int], bool], None]] = None
 
     @property
     def decoded(self) -> int:
@@ -119,6 +156,11 @@ def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 1).bit_length()
 
 
+class _PromptTooLong(ValueError):
+    """A prompt no allocation could ever satisfy (needs more blocks than
+    the whole pool): rejected per-request, never raised out of step()."""
+
+
 class EngineFns:
     """Jitted engine functions shareable by N engine replicas with identical
     cfg/scfg — one XLA compile for the whole pool instead of one per replica.
@@ -132,6 +174,7 @@ class EngineFns:
     def __init__(self, cfg, scfg: ServeConfig):
         self.cfg, self.scfg = cfg, scfg
         self.pad_ok = pad_tolerant(cfg, scfg.max_len)
+        self.paged_ok = tfm.paged_supported(cfg, scfg.max_len)
         # MoE expert capacity couples batch rows: admitting several prompts
         # (or pad-duplicated rows) in one prefill would let rows displace
         # each other's expert slots and diverge from the reference path's
@@ -158,6 +201,29 @@ class EngineFns:
         # donate caches/pos/last/active/remaining/rng: the K-step loop
         # aliases every state buffer instead of materializing a copy
         self.decode_loop = jax.jit(loop_fn, donate_argnums=(1, 2, 3, 4, 5, 6))
+
+        def paged_loop_fn(params, bt, caches, pos, last, active, remaining,
+                          rng):
+            return tfm.decode_loop(params, cfg, caches, pos, last, active,
+                                   remaining, rng, k=k, max_len=max_len,
+                                   temperature=temp, bt=bt)
+
+        # block tables are rebuilt host-side each sync (allocation is a
+        # host decision), so bt is a plain input — everything else donates
+        self.paged_decode_loop = jax.jit(paged_loop_fn,
+                                         donate_argnums=(2, 3, 4, 5, 6, 7))
+        # (bucket, n) -> jitted paged suffix-extend + sample + slot insert
+        self._paged_admit_cache: Dict[Tuple[int, int], Callable] = {}
+
+        def cow(caches, src, dst):
+            """Copy-on-write: ``pool[dst[i]] = pool[src[i]]`` for every
+            layer's K/V pool (donated).  Pad pairs are (0, 0) — a
+            null-block self-copy; callers pad pair counts to powers of
+            two so jit's shape specialization stays bounded."""
+            return jax.tree_util.tree_map(
+                lambda c: c.at[:, dst].set(c[:, src]), caches)
+
+        self.cow = jax.jit(cow, donate_argnums=(0,))
 
     def bucket(self, plen: int) -> int:
         """Prefill compile bucket for a prompt of length ``plen``."""
@@ -210,6 +276,46 @@ class EngineFns:
             fn, donate_argnums=(5, 6, 7, 8, 9, 10))
         return self._admit_cache[key]
 
+    def paged_admit_fn(self, bucket: int, n: int) -> Callable:
+        """Jitted paged admit: extend ``n`` sequences by their (padded)
+        suffix tokens through their block tables, sample first tokens
+        in-jit, and update the donated slot state."""
+        key = (bucket, n)
+        with self._build_lock:
+            return self._paged_admit_cache.get(key) or \
+                self._build_paged_admit_fn(key)
+
+    def _build_paged_admit_fn(self, key: Tuple[int, int]) -> Callable:
+        bucket, n = key
+        cfg, scfg = self.cfg, self.scfg
+
+        def fn(params, tokens, pos0, last_idx, slot_idx, budget, bt,
+               caches, pos, last, active, remaining, rng):
+            """tokens (n,bucket) suffix ids · pos0 (n,) cached-prefix
+            length · last_idx (n,) suffix-local last index · bt
+            (n, nb_max) block tables · engine state donated."""
+            rng, sub = jax.random.split(rng)
+            logits, caches = tfm.extend_paged(params, cfg, tokens, caches,
+                                              pos0, bt, last_index=last_idx)
+            toks = tfm.sample_tokens(logits[:, 0], scfg.temperature, sub)
+            for j in range(n):            # static unroll over admits
+                s = slot_idx[j]
+                nxt = pos0[j] + last_idx[j] + 1     # next write position
+                act_j = (budget[j] > 0) & (nxt < scfg.max_len - 1)
+                pos = jax.lax.dynamic_update_index_in_dim(pos, nxt, s, 0)
+                last = jax.lax.dynamic_update_index_in_dim(
+                    last, jnp.where(act_j, toks[j], 0), s, 0)
+                remaining = jax.lax.dynamic_update_index_in_dim(
+                    remaining, budget[j], s, 0)
+                active = jax.lax.dynamic_update_index_in_dim(
+                    active, act_j, s, 0)
+            return toks, caches, pos, last, active, remaining, rng
+
+        self._paged_admit_cache[key] = jax.jit(
+            fn, donate_argnums=(7, 8, 9, 10, 11, 12))
+        return self._paged_admit_cache[key]
+
+
     def prefill_fn(self, plen: int) -> Callable:
         """Exact-length batch-1 prefill (reference path, pre-PR shape)."""
         with self._build_lock:
@@ -238,7 +344,27 @@ class Engine:
             raise NotImplementedError("Engine serves decoder-LM families")
         self.fns = shared_fns if shared_fns is not None \
             else make_engine_fns(cfg, scfg)
-        self.caches = api.init_caches(cfg, scfg.slots, scfg.max_len)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # paged KV: only families whose whole cache is position-addressed
+        # attention K/V can page; the rest (SSM/RG-LRU/MLA/ring) keep the
+        # dense path — observable via `engine.paged` and the counter
+        self.paged = scfg.paged and self.fns.paged_ok
+        if scfg.paged and not self.fns.paged_ok:
+            self.metrics.counter("engine.paged_fallback_dense").inc()
+        if self.paged:
+            bs = scfg.block_size
+            self.nb_max = scfg.max_len // bs
+            n_blocks = scfg.kv_blocks or scfg.slots * self.nb_max
+            self.caches = tfm.init_paged_caches(cfg, n_blocks, bs)
+            self.alloc = BlockAllocator(n_blocks, bs)
+            self._seq_of_slot: List[Optional[int]] = [None] * scfg.slots
+            self._bt = np.zeros((scfg.slots, self.nb_max), np.int32)
+            self._pos_h = np.zeros((scfg.slots,), np.int64)
+            self._rem_h = np.zeros((scfg.slots,), np.int64)
+            self.metrics.gauge("engine.kv_blocks_total").set(n_blocks)
+            self._kv_gauges()
+        else:
+            self.caches = api.init_caches(cfg, scfg.slots, scfg.max_len)
         self.active: List[Optional[Request]] = [None] * scfg.slots
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
@@ -254,15 +380,31 @@ class Engine:
         # monotonic request ids: never reused, regardless of how many
         # requests are queued/active/finished at submit time
         self._rids = itertools.count(1000)
-        self.metrics = metrics if metrics is not None else MetricsRegistry()
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new: int) -> Request:
+    def submit(self, prompt: np.ndarray, max_new: int,
+               on_tokens: Optional[Callable] = None) -> Request:
         req = Request(rid=next(self._rids),
                       prompt=np.asarray(prompt, np.int32), max_new=max_new,
-                      submit_t=time.perf_counter())
+                      submit_t=time.perf_counter(), on_tokens=on_tokens)
         self.queue.append(req)
         return req
+
+    def _emit(self, req: Request, toks: List[int], done: bool):
+        """Per-sync streaming callback; a throwing consumer must not take
+        the engine (and every other slot's request) down with it."""
+        if req.on_tokens is None:
+            return
+        try:
+            req.on_tokens(req, list(toks), done)
+        except Exception:
+            self.metrics.counter("engine.stream_errors").inc()
+
+    def _kv_gauges(self):
+        self.metrics.gauge("engine.kv_blocks_free").set(
+            self.alloc.free_blocks)
+        self.metrics.gauge("engine.kv_blocks_cached").set(
+            self.alloc.cached_blocks)
 
     def _finish(self, slot: int, reason: str):
         req = self.active[slot]
@@ -271,6 +413,16 @@ class Engine:
         req.done_t = time.perf_counter()
         self.finished.append(req)
         self.active[slot] = None
+        if self.paged:
+            # release the sequence's blocks (cached prefix blocks survive
+            # via the prefix cache's own reference) and null the table row
+            # so the still-running device loop can write nothing real
+            sid = self._seq_of_slot[slot]
+            if sid is not None:
+                self.alloc.free_seq(sid)
+                self._seq_of_slot[slot] = None
+                self._bt[slot] = NULL_BLOCK
+            self._kv_gauges()
         self.metrics.counter("engine.requests").inc()
         self.metrics.counter("engine.tokens").inc(req.decoded)
         if reason == "max_len":
@@ -330,6 +482,7 @@ class Engine:
                     self._finish(slots_idx[j], "max_new")
                 elif len(req.prompt) >= self.scfg.max_len - 1:
                     self._finish(slots_idx[j], "max_len")
+                self._emit(req, req.out_tokens[-1:], req.done)
             self.metrics.counter("engine.prefill_batches").inc()
 
     def _step_fused(self) -> bool:
@@ -348,11 +501,268 @@ class Engine:
         for s, req in enumerate(self.active):
             if req is None:
                 continue
-            req.out_tokens.extend(int(t) for t in out_h[s, :em_h[s]])
+            new = [int(t) for t in out_h[s, :em_h[s]]]
+            req.out_tokens.extend(new)
             if not act_h[s]:
                 self._finish(s, "max_new" if rem_h[s] <= 0 else "max_len")
+            self._emit(req, new, req.done)
         self.metrics.counter("engine.steps").inc()
         return True
+
+    # ------------------------------------------------------------------
+    # paged path: same fused K-step loop, but K/V live in a shared block
+    # pool addressed through per-slot block tables (serving/kvpool.py).
+    # Admits prefill only the suffix a prefix-cache hit leaves uncovered;
+    # block allocation / COW / freeing are host decisions executed on
+    # device between syncs.
+    def _prep_paged(self, req: Request):
+        """Plan one admit without side effects: prefix hits, suffix shape,
+        and the block headroom it would need.  None == cannot admit now."""
+        bs = self.scfg.block_size
+        tokens = [int(t) for t in req.prompt]
+        plen = len(tokens)
+        hashes = hash_token_blocks(tokens, bs) if self.scfg.prefix_cache \
+            else []
+        # reuse covers at most plen-1 tokens: the last prompt token must be
+        # recomputed so the admit has logits to sample the first output
+        reusable = hashes[:max(plen - 1, 0) // bs]
+        hits = self.alloc.prefix_lookup(reusable)
+        n_cached_tok = len(hits) * bs
+        need = -(-plen // bs) - len(hits) + 1      # +1 decode-ahead block
+        if need > self.alloc.num_blocks:
+            # would defer forever: the whole pool cannot hold this prompt
+            raise _PromptTooLong(
+                f"prompt of {plen} tokens needs {need} KV blocks but the "
+                f"pool has only {self.alloc.num_blocks}: raise kv_blocks "
+                f"or shorten the prompt")
+        if need > self.alloc.available_excluding(hits):
+            return None
+        return (hashes, hits, n_cached_tok, plen - n_cached_tok)
+
+    def _reject_oversized(self, req: Request, detail: str):
+        """Fail just the unservable request — never the batch it queued
+        with.  It completes empty with an explicit finish reason instead
+        of raising out of ``step()`` (where a replica loop would spill
+        the whole in-flight batch and re-route the poison request into
+        the next replica)."""
+        req.done = True
+        req.finish_reason = "rejected_prompt_too_long"
+        req.done_t = req.first_token_t = time.perf_counter()
+        self.finished.append(req)
+        self.metrics.counter("engine.rejected_too_long").inc()
+        self._emit(req, [], True)
+
+    def _admit_paged(self):
+        scfg = self.scfg
+        free = [s for s in range(scfg.slots) if self.active[s] is None]
+        while free and self.queue:
+            try:
+                prep = self._prep_paged(self.queue[0])
+            except _PromptTooLong as e:
+                self._reject_oversized(self.queue.popleft(), str(e))
+                continue
+            if prep is None:
+                # pool pressure: leave the queue intact — admission
+                # headroom gating upstream keeps this rare
+                self.metrics.counter("engine.admit_deferred_kv").inc()
+                break
+            bucket = self.fns.bucket(prep[3])
+            max_admit = 1 if self.fns.row_coupled else len(free)
+            # pop-and-commit one request at a time so each headroom probe
+            # sees the blocks its batch-mates already claimed
+            rows = []
+            while prep is not None and len(rows) < max_admit and \
+                    self.fns.bucket(prep[3]) == bucket:
+                req = self.queue.popleft()
+                hashes, hits, n_cached_tok, suffix_len = prep
+                plen = len(req.prompt)
+                slot = free[len(rows)]
+                sid = self.alloc.new_seq()
+                self.alloc.append_shared(sid, hits)
+                self.alloc.extend_to(sid, plen)
+                self._seq_of_slot[slot] = sid
+                self._bt[slot] = padded_table(self.alloc.table(sid),
+                                              self.nb_max)
+                self._pos_h[slot] = plen
+                self._rem_h[slot] = max(req.max_new, 0)
+                self.metrics.counter("engine.prefix_hit_blocks").inc(
+                    len(hits))
+                # denominator of the hit rate: count the blocks actually
+                # *looked up* (reuse is capped at plen-1 tokens), not the
+                # prompt's full-block count — else a block-aligned prompt
+                # could never reach hit_rate 1.0
+                self.metrics.counter("engine.prefix_lookup_blocks").inc(
+                    max(plen - 1, 0) // self.scfg.block_size)
+                self.metrics.counter("engine.prefill_tokens_saved").inc(
+                    n_cached_tok)
+                rows.append((req, slot, sid, hashes, n_cached_tok,
+                             suffix_len))
+                try:
+                    prep = self._prep_paged(self.queue[0]) if self.queue \
+                        else None
+                except _PromptTooLong:
+                    # oversized next prompt: stop batching here; the head
+                    # of the next admit loop rejects it individually,
+                    # after this batch's extend has run
+                    prep = None
+            n = len(rows)
+            free = free[n:]
+            # pad the batch dim to a power of two (same compile-bounding
+            # trick as the dense admit); pad rows duplicate row 0 and its
+            # slot/table — identical values to identical addresses
+            n_pad = _next_pow2(n) if n > 1 else 1
+            full = [rows[0]] * (n_pad - n) + rows
+            tokens = np.zeros((n_pad, bucket), np.int32)
+            pos0 = np.zeros((n_pad,), np.int32)
+            last_idx = np.zeros((n_pad,), np.int32)
+            slot_arr = np.zeros((n_pad,), np.int32)
+            budget = np.zeros((n_pad,), np.int32)
+            bt = np.zeros((n_pad, self.nb_max), np.int32)
+            for j, (req, slot, sid, hashes, n_cached_tok, suffix_len) in \
+                    enumerate(full):
+                tokens[j, :suffix_len] = req.prompt[n_cached_tok:]
+                pos0[j] = n_cached_tok
+                last_idx[j] = suffix_len - 1
+                slot_arr[j] = slot
+                budget[j] = max(req.max_new, 0)
+                bt[j] = self._bt[slot]
+            toks, self.caches, self._pos, self._last, self._active, \
+                self._remaining, self._rng = self.fns.paged_admit_fn(
+                    bucket, n_pad)(
+                    self.params, jnp.asarray(tokens), jnp.asarray(pos0),
+                    jnp.asarray(last_idx), jnp.asarray(slot_arr),
+                    jnp.asarray(budget), jnp.asarray(bt),
+                    self.caches, self._pos, self._last,
+                    self._active, self._remaining, self._rng)
+            toks_h = np.asarray(toks)[n_pad - n:]
+            now = time.perf_counter()
+            for j, (req, slot, sid, hashes, n_cached_tok, suffix_len) in \
+                    enumerate(rows):
+                plen = len(req.prompt)
+                if scfg.prefix_cache:
+                    # every *full* prompt block is now written and
+                    # immutable (decode writes start at plen) — publish it
+                    n_full = plen // scfg.block_size
+                    self.alloc.prefix_insert(hashes[:n_full],
+                                             self.alloc.table(sid)[:n_full])
+                req.out_tokens.append(int(toks_h[j]))
+                req.first_token_t = now
+                self.active[slot] = req
+                if req.max_new <= 0:
+                    self._finish(slot, "max_new")
+                elif plen >= scfg.max_len - 1:
+                    self._finish(slot, "max_len")
+                self._emit(req, req.out_tokens[-1:], req.done)
+            self.metrics.counter("engine.prefill_batches").inc()
+            self._kv_gauges()
+
+    def _step_paged(self) -> bool:
+        self._admit_paged()
+        if not any(r is not None for r in self.active):
+            return False
+        scfg = self.scfg
+        # host pre-work: every active slot needs writable private blocks
+        # covering the K positions this loop will write — allocate ahead,
+        # COW any block shared with the prefix cache or a fork
+        cow_src: List[int] = []
+        cow_dst: List[int] = []
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            sid = self._seq_of_slot[s]
+            lo = int(self._pos_h[s])
+            # allocate ahead only for positions this loop can actually
+            # write: K steps, capped by the slot's remaining budget (an
+            # exhausted slot's further writes go to its frozen position
+            # or the null block) and by max_len
+            hi = min(lo + min(scfg.sync_every, int(self._rem_h[s])),
+                     scfg.max_len)
+            for src, dst in self.alloc.cow_targets(sid, lo, hi):
+                cow_src.append(src)
+                cow_dst.append(dst)
+            try:
+                self.alloc.extend_to(sid, hi)
+            except PoolExhausted:
+                raise PoolExhausted(
+                    f"kv pool exhausted mid-decode (slot {s}, pos {lo}): "
+                    f"active sequences outgrew kv_blocks="
+                    f"{self.alloc.num_blocks}; size the pool for the "
+                    f"workload or lower admission headroom") from None
+            self._bt[s] = padded_table(self.alloc.table(sid), self.nb_max)
+        if cow_src:
+            pad = (_next_pow2(len(cow_src)) if len(cow_src) > 1 else 1) \
+                - len(cow_src)
+            src = jnp.asarray([0] * pad + cow_src, jnp.int32)
+            dst = jnp.asarray([0] * pad + cow_dst, jnp.int32)
+            self.caches = self.fns.cow(self.caches, src, dst)
+            self.metrics.counter("engine.kv_cow_copies").inc(len(cow_src))
+        out, emitted, self.caches, self._pos, self._last, self._active, \
+            self._remaining, self._rng = self.fns.paged_decode_loop(
+                self.params, jnp.asarray(self._bt), self.caches, self._pos,
+                self._last, self._active, self._remaining, self._rng)
+        out_h = np.asarray(out)
+        em_h = np.asarray(emitted)
+        act_h = np.asarray(self._active)
+        rem_h = np.asarray(self._remaining)
+        self._pos_h = np.asarray(self._pos).astype(np.int64)
+        self._rem_h = rem_h.astype(np.int64)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            new = [int(t) for t in out_h[s, :em_h[s]]]
+            req.out_tokens.extend(new)
+            if not act_h[s]:
+                self._finish(s, "max_new" if rem_h[s] <= 0 else "max_len")
+            self._emit(req, new, req.done)
+        self.metrics.counter("engine.steps").inc()
+        self._kv_gauges()
+        return True
+
+    def fork(self, parent: Request, max_new: int,
+             on_tokens: Optional[Callable] = None) -> Request:
+        """Branch an *active* request into a new session that shares all
+        of its KV blocks copy-on-write (parallel sampling / n-best).  The
+        child continues from the parent's current position; its blocks
+        stay shared until either side writes (then `cow_targets` splits
+        exactly the written block).  Paged engines only; needs a free
+        slot."""
+        if not self.paged:
+            raise RuntimeError("fork requires a paged engine "
+                               "(ServeConfig.paged=True on a supported "
+                               "family)")
+        try:
+            pslot = next(s for s, r in enumerate(self.active)
+                         if r is parent)
+        except StopIteration:
+            raise ValueError(f"request {parent.rid} is not active "
+                             f"(finished or still queued)") from None
+        try:
+            slot = next(s for s, r in enumerate(self.active) if r is None)
+        except StopIteration:
+            raise RuntimeError("no free slot to fork into") from None
+        child = Request(rid=next(self._rids), prompt=parent.prompt.copy(),
+                        max_new=max_new,
+                        out_tokens=list(parent.out_tokens),
+                        submit_t=time.perf_counter(), on_tokens=on_tokens)
+        child.first_token_t = child.submit_t
+        sid = self.alloc.fork(self._seq_of_slot[pslot])
+        self._seq_of_slot[slot] = sid
+        self._bt[slot] = padded_table(self.alloc.table(sid), self.nb_max)
+        self._pos_h[slot] = self._pos_h[pslot]
+        self._rem_h[slot] = max(max_new, 0)
+        pos = int(self._pos_h[pslot])
+        last_tok = parent.out_tokens[-1] if parent.out_tokens else 0
+        alive = max_new > 0 and pos < self.scfg.max_len - 1
+        self._pos = self._pos.at[slot].set(pos)
+        self._last = self._last.at[slot].set(last_tok if alive else 0)
+        self._remaining = self._remaining.at[slot].set(max(max_new, 0))
+        self._active = self._active.at[slot].set(alive)
+        self.active[slot] = child
+        self.metrics.counter("engine.forks").inc()
+        if not alive:
+            self._finish(slot, "max_new" if max_new <= 0 else "max_len")
+        self._kv_gauges()
+        return child
 
     # ------------------------------------------------------------------
     # reference path: the pre-PR per-token loop (parity oracle / "before"
@@ -375,6 +785,7 @@ class Engine:
                     self._finish(slot, "max_new")
                 elif plen >= self.scfg.max_len - 1:
                     self._finish(slot, "max_len")
+                self._emit(req, req.out_tokens[-1:], req.done)
 
     def _step_reference(self) -> bool:
         self._admit_reference()
@@ -397,6 +808,7 @@ class Engine:
                 self._finish(s, "max_new")
             elif self.pos[s] >= self.scfg.max_len - 1:
                 self._finish(s, "max_len")
+            self._emit(req, req.out_tokens[-1:], req.done)
         self.metrics.counter("engine.steps").inc()
         return True
 
@@ -404,7 +816,9 @@ class Engine:
     def step(self):
         """One engine iteration: admit, then decode — a single step on the
         reference path, ``sync_every`` fused steps (one host sync) on the
-        fused path."""
+        fused and paged paths."""
+        if self.paged:
+            return self._step_paged()
         if self.scfg.fused:
             return self._step_fused()
         return self._step_reference()

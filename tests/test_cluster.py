@@ -172,6 +172,89 @@ def test_admission_sheds_infeasible_deadline():
     r.stop()
 
 
+def test_admission_sheds_on_kv_pressure():
+    """The paged-KV headroom gate: a starved pool (free fraction below the
+    configured headroom) sheds with an explicit kv_pressure result; a
+    healthy pool admits; an unknown pool (no paged replica reporting) is
+    not penalized."""
+    m = MetricsRegistry()
+    ctrl = AdmissionController(
+        AdmissionConfig(max_queue_cost=100, min_kv_headroom_frac=0.25), m)
+    shed = ctrl.decide(0, 1, time.monotonic() + 10.0, kind="lm",
+                       kv_free_frac=0.10)
+    assert shed is not None and shed.reason == "kv_pressure"
+    assert ctrl.decide(0, 1, time.monotonic() + 10.0, kind="lm",
+                       kv_free_frac=0.50) is None
+    assert ctrl.decide(0, 1, time.monotonic() + 10.0, kind="lm",
+                       kv_free_frac=None) is None
+    assert m.snapshot()["admission.shed_kv_pressure"] == 1
+
+
+def test_router_kv_free_fraction_from_engine_gauges():
+    """A thread replica's paged engine reports its pool through the shared
+    registry; the router turns the gauges into the admission signal."""
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.models import api
+    from repro.serving import Engine, ServeConfig
+    from repro.cluster.replica import EngineBackend
+
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    m = MetricsRegistry()
+    eng = Engine(params, cfg,
+                 ServeConfig(max_len=32, slots=2, paged=True, block_size=8,
+                             kv_blocks=8),
+                 metrics=m)
+    r = Router(metrics=m,
+               admission=AdmissionController(
+                   AdmissionConfig(min_kv_headroom_frac=0.1), m))
+    r.add_replica(EngineBackend(eng), ReplicaConfig(max_batch=2), kind="lm")
+    assert r.kv_free_fraction() == 1.0
+    rng = np.random.RandomState(0)
+    q = r.submit((rng.randint(0, cfg.vocab, 6).astype(np.int32), 3),
+                 kind="lm", timeout_s=120.0)
+    assert isinstance(r.wait(q, 120.0), list)
+    assert r.kv_free_fraction() is not None
+    r.stop()
+
+
+def test_process_worker_ships_kv_gauges_in_heartbeats():
+    """A paged engine inside a spawned worker reports into the registry
+    its heartbeats ship, so the parent-side merge (and the admission
+    headroom gate) can see engine.kv_blocks_* from across the process
+    boundary."""
+    from repro.cluster import engine_spec
+
+    m = MetricsRegistry()
+    r = Router(metrics=m)
+    r.add_replica(
+        spec=engine_spec(arch="internlm2-1.8b", max_len=32, slots=2,
+                         reduce=True, paged=True, block_size=8),
+        cfg=ReplicaConfig(max_batch=2, spawn_timeout_s=300.0,
+                          heartbeat_interval_s=0.05),
+        transport="process")
+    rng = np.random.RandomState(3)
+    q = r.submit((rng.randint(0, 256, 6).astype(np.int32), 3),
+                 timeout_s=300.0)
+    assert isinstance(r.wait(q, 300.0), list)
+    # heartbeats are periodic: wait (bounded) for one carrying the
+    # post-batch registry before asserting its contents
+    deadline = time.monotonic() + 10.0
+    snap = {}
+    while time.monotonic() < deadline:
+        snap = r.cluster_snapshot()
+        if snap.get("engine.requests", 0) >= 1:
+            break
+        time.sleep(0.05)
+    assert snap.get("engine.requests", 0) >= 1
+    assert snap.get("engine.kv_blocks_total", 0) == 8   # 2 slots * 32/8
+    frac = r.kv_free_fraction()
+    assert frac is not None and 0.0 < frac <= 1.0
+    r.stop()
+
+
 def test_backpressure_when_every_inbox_is_full():
     gate = threading.Event()
     r = Router()                               # no admission controller

@@ -1,0 +1,161 @@
+"""Per-K-step token streaming: Engine.on_tokens fires at every host sync,
+and run_replica_loop forwards partial-token frames through the transports
+instead of quantizing to whole-request acks.
+"""
+import queue
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import (EngineBackend, ReplicaConfig, Router)
+from repro.cluster.replica import FnBackend
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.models import api
+from repro.serving import Engine, ServeConfig
+
+
+def _model(arch="internlm2-1.8b", seed=0):
+    cfg = reduced(get_config(arch))
+    params, _ = api.init(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+# ----------------------------------------------------------------------
+# engine-level callback
+@pytest.mark.parametrize("paged", [False, True])
+def test_on_tokens_streams_at_sync_cadence(paged):
+    """Every token arrives through on_tokens exactly once, in order, with
+    at most sync_every tokens per callback and done=True on the last."""
+    cfg, params = _model()
+    scfg = ServeConfig(max_len=64, slots=2, fused=True, sync_every=4,
+                       paged=paged, block_size=8)
+    eng = Engine(params, cfg, scfg)
+    rng = np.random.RandomState(0)
+    frames = []
+    req = eng.submit(rng.randint(0, cfg.vocab, 6).astype(np.int32),
+                     max_new=10,
+                     on_tokens=lambda r, toks, done:
+                     frames.append((list(toks), done)))
+    eng.run_until_drained()
+    streamed = [t for toks, _ in frames for t in toks]
+    assert streamed == req.out_tokens
+    assert len(frames) >= 3                    # 1 admit + >=2 K-step syncs
+    assert all(len(toks) <= scfg.sync_every for toks, _ in frames)
+    assert [d for _, d in frames] == [False] * (len(frames) - 1) + [True]
+
+
+def test_on_tokens_reference_path_per_token():
+    cfg, params = _model()
+    eng = Engine(params, cfg, ServeConfig(max_len=64, slots=1, fused=False))
+    frames = []
+    req = eng.submit(np.arange(5, dtype=np.int32), max_new=4,
+                     on_tokens=lambda r, toks, done:
+                     frames.append((list(toks), done)))
+    eng.run_until_drained()
+    assert [t for toks, _ in frames for t in toks] == req.out_tokens
+    assert all(len(toks) == 1 for toks, _ in frames)
+
+
+def test_on_tokens_exception_does_not_kill_engine():
+    cfg, params = _model()
+    eng = Engine(params, cfg, ServeConfig(max_len=64, slots=1))
+
+    def boom(r, toks, done):
+        raise RuntimeError("consumer bug")
+
+    req = eng.submit(np.arange(5, dtype=np.int32), max_new=3,
+                     on_tokens=boom)
+    eng.run_until_drained()
+    assert req.done and len(req.out_tokens) == 4
+    assert eng.metrics.counter("engine.stream_errors").value > 0
+
+
+# ----------------------------------------------------------------------
+# transport forwarding
+def test_thread_replica_streams_partial_frames():
+    """EngineBackend behind a LocalTransport: partial frames reach the
+    ClusterRequest while it is still in flight, and concatenate to the
+    final result."""
+    cfg, params = _model()
+    scfg = ServeConfig(max_len=64, slots=2, fused=True, sync_every=4)
+    router = Router(policy="round_robin")
+    router.add_replica(EngineBackend(Engine(params, cfg, scfg)),
+                       ReplicaConfig(max_batch=2))
+    rng = np.random.RandomState(1)
+    got = queue.Queue()
+    req = router.submit((rng.randint(0, cfg.vocab, 6).astype(np.int32), 9),
+                        on_partial=got.put, timeout_s=120.0)
+    out = router.wait(req, timeout=120.0)
+    router.stop()
+    frames = list(req.partials)
+    assert len(frames) >= 3                    # streamed, not one lump
+    streamed = [t for toks, _ in frames for t in toks]
+    assert streamed == list(out)
+    assert frames[-1][1] is True               # final frame marks done
+
+
+def test_process_replica_streams_partial_frames():
+    """The same frames cross the process transport's pipe as ("partial",
+    rid, frame) messages and fire the parent-side callback before the
+    ack completes the request."""
+    cfg, _ = _model()
+    from repro.cluster import engine_spec
+    router = Router(policy="round_robin")
+    router.add_replica(
+        spec=engine_spec(arch="internlm2-1.8b", max_len=64, slots=2,
+                         reduce=True, sync_every=4),
+        cfg=ReplicaConfig(max_batch=2, spawn_timeout_s=300.0),
+        transport="process")
+    rng = np.random.RandomState(2)
+    seen_at = []
+    req = router.submit((rng.randint(0, cfg.vocab, 6).astype(np.int32), 9),
+                        on_partial=lambda f: seen_at.append(
+                            (time.monotonic(), f)),
+                        timeout_s=300.0)
+    out = router.wait(req, timeout=300.0)
+    router.stop()
+    assert isinstance(out, list) and len(out) == 10
+    assert len(seen_at) >= 3
+    streamed = [t for _, (toks, _) in seen_at for t in toks]
+    assert streamed == out
+    # partials landed strictly before completion
+    assert seen_at[0][0] <= req.finished_s
+
+
+def test_spilled_request_resets_partial_frames():
+    """At-least-once streaming: a replica crash mid-stream re-runs the
+    request elsewhere from token 0.  The router clears the frame buffer
+    and signals consumers with RETRY_FRAME so they discard the first
+    attempt's prefix instead of rendering it twice."""
+    from repro.cluster.replica import ClusterRequest
+
+    frames = []
+    req = ClusterRequest(payload=("p", 4), on_partial=frames.append)
+    req.emit_partial(([1, 2], False))
+    req.emit_partial(([3], False))
+    assert len(req.partials) == 2
+    req.reset_partials()                       # what _on_spill does
+    assert req.partials == []
+    assert frames[-1] == ClusterRequest.RETRY_FRAME
+    # the retry re-streams; the buffer now reflects only attempt 2
+    req.emit_partial(([1, 2], False))
+    assert req.partials == [([1, 2], False)]
+    # a request that never streamed gets no retry signal
+    quiet = ClusterRequest(payload=("q", 1), on_partial=frames.append)
+    n = len(frames)
+    quiet.reset_partials()
+    assert len(frames) == n
+
+
+def test_fn_backend_without_emitter_still_acks():
+    """Backends that never bind an emitter are unaffected by the
+    streaming surface."""
+    router = Router()
+    router.add_replica(FnBackend(lambda ps: [p * 2 for p in ps]))
+    req = router.submit(21, timeout_s=30.0)
+    assert router.wait(req, timeout=30.0) == 42
+    assert req.partials == []
+    router.stop()
