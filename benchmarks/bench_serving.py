@@ -203,6 +203,88 @@ def run_paged(quick: bool = False, json_path: str = JSON_PATH,
     return out
 
 
+def run_trace_overhead(quick: bool = False, json_path: str = JSON_PATH,
+                       arch: str = "internlm2-1.8b", sync_every: int = 8):
+    """Cost of the observability layer on the fused hot path: the identical
+    workload runs under (a) the disabled null tracer — every span call is a
+    no-op — and (b) a full-sampling tracer recording the complete span tree
+    per request.  The two overhead fractions back the acceptance bounds
+    (<=1% disabled, <=5% at sample rate 1.0); they are recorded, not
+    asserted, because single-digit percentages drown in CI timer noise."""
+    import jax
+
+    from repro.cluster.tracing import Tracer, current_tracer, set_tracer
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.models import api
+    from repro.serving import ServeConfig
+
+    cfg = reduced(get_config(arch))
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    n_req = 6 if quick else 12
+    max_new = 24 if quick else 48
+    prompts = [rng.randint(0, cfg.vocab,
+                           size=rng.randint(5, 13)).astype(np.int32)
+               for _ in range(n_req)]
+    scfg = ServeConfig(max_len=96, slots=4, sync_every=sync_every)
+
+    from repro.serving import Engine
+
+    reps = 4 if quick else 8
+    tracers = {"disabled": Tracer(enabled=False),
+               "sampled_1_0": Tracer(enabled=True, sample_rate=1.0,
+                                     capacity=1 << 20)}
+    prev = current_tracer()
+    res = {}
+    try:
+        # ONE engine, interleaved A/B passes: separate engine builds drift
+        # by far more than the span cost (each timed pass is tens of ms),
+        # so the two modes must share compile state, caches, and the same
+        # slice of machine time; min-wall is the noise-robust estimator
+        eng = Engine(params, cfg, scfg)
+        for p in prompts:
+            eng.submit(p, max_new=max_new)
+        eng.run_until_drained()            # warm: compile both shapes
+        walls = {k: [] for k in tracers}
+        toks = {k: 0 for k in tracers}
+        for _ in range(reps):
+            for label, tracer in tracers.items():
+                set_tracer(tracer)
+                eng.finished.clear()
+                reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+                t0 = time.perf_counter()
+                eng.run_until_drained()
+                walls[label].append(time.perf_counter() - t0)
+                assert all(r.done for r in reqs)
+                toks[label] = sum(r.decoded for r in reqs)
+        for label, tracer in tracers.items():
+            wall = min(walls[label])
+            res[label] = {"tok_per_s": toks[label] / wall,
+                          "decoded_tokens": toks[label], "wall_s": wall,
+                          "wall_all_s": walls[label],
+                          "spans_recorded": len(tracer.spans())}
+            emit(f"serving/trace/{label}",
+                 1e6 * wall / max(toks[label], 1),
+                 f"tok_per_s={res[label]['tok_per_s']:.1f}")
+    finally:
+        set_tracer(prev)
+
+    base = res["disabled"]["tok_per_s"]
+    out = {"meta": {"arch": arch, "quick": quick, "n_req": n_req,
+                    "max_new": max_new, "sync_every": sync_every,
+                    "cpu_count": os.cpu_count(), "unix_time": time.time()},
+           "disabled": res["disabled"], "sampled_1_0": res["sampled_1_0"],
+           "overhead_frac_sampled":
+               1.0 - res["sampled_1_0"]["tok_per_s"] / base}
+    emit("serving/trace/overhead", 0.0,
+         f"sampled={out['overhead_frac_sampled'] * 100:.1f}%")
+    if json_path:
+        write_bench_json(json_path,
+                         lambda prev: {**prev, "trace_overhead": out})
+    return out
+
+
 def run(quick: bool = False, json_path: str = JSON_PATH,
         arch: str = "internlm2-1.8b", sync_every: int = 8):
     import jax
@@ -261,8 +343,13 @@ if __name__ == "__main__":
     ap.add_argument("--paged", action="store_true",
                     help="paged-KV scenarios: concurrent-session capacity "
                          "at fixed KV memory + shared-prefix cache workload")
+    ap.add_argument("--trace-overhead", action="store_true",
+                    help="tracing-cost mode: identical fused workload with "
+                         "the null tracer vs full span sampling")
     args = ap.parse_args()
-    if args.paged:
+    if args.trace_overhead:
+        run_trace_overhead(quick=args.quick, sync_every=args.sync_every)
+    elif args.paged:
         run_paged(quick=args.quick, sync_every=args.sync_every)
     else:
         run(quick=args.quick, sync_every=args.sync_every)

@@ -1,0 +1,93 @@
+"""Validate the trace-smoke artifacts (CI `trace-smoke` job).
+
+    PYTHONPATH=src python scripts/check_trace_smoke.py trace.json prom.txt
+
+Asserts the Chrome trace-event JSON from a traced serve run is
+schema-valid and forms *connected* span trees covering every hot-path
+stage — parent-side (admission, router, transport) and worker-side
+(replica batch, engine prefill/decode), the latter proving spans crossed
+the socket boundary over heartbeats — and that the Prometheus text
+exposition parses with internally consistent histogram series.
+"""
+import json
+import re
+import sys
+
+REQUIRED_STAGES = {
+    "request", "admission.decide", "router.dispatch", "transport.inflight",
+    "replica.batch", "engine.request", "engine.admit", "engine.prefill",
+    "engine.decode_sync",
+}
+SAMPLE_RE = re.compile(
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? [0-9eE+.inf-]+$')
+
+
+def check_chrome(path: str) -> None:
+    doc = json.load(open(path))
+    assert isinstance(doc.get("traceEvents"), list), "no traceEvents array"
+    xs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert xs, "no complete ('X') span events"
+    for e in xs:
+        missing = {"name", "ph", "ts", "dur", "pid", "tid", "args"} - set(e)
+        assert not missing, f"event missing {missing}: {e}"
+        assert e["dur"] >= 0, f"negative duration: {e}"
+    names = {e["name"] for e in xs}
+    missing = REQUIRED_STAGES - names
+    assert not missing, f"hot-path stages absent from trace: {missing}"
+    # connectivity: every parent pointer resolves, one root per trace
+    ids = {e["args"]["span_id"] for e in xs}
+    by_trace = {}
+    for e in xs:
+        a = e["args"]
+        by_trace.setdefault(a["trace_id"], []).append(a)
+        assert a["parent_id"] is None or a["parent_id"] in ids, \
+            f"orphan span {a['span_id']} ({e['name']})"
+    for tid, group in by_trace.items():
+        roots = [a for a in group if a["parent_id"] is None]
+        assert len(roots) == 1, f"trace {tid}: {len(roots)} roots"
+    # worker spans run under their own pid track (cross-host timeline)
+    assert len({e["pid"] for e in xs}) >= 2, \
+        "expected parent + worker replica tracks"
+    print(f"[trace-smoke] {path}: {len(xs)} spans, "
+          f"{len(by_trace)} connected trees, "
+          f"{len({e['pid'] for e in xs})} replica tracks")
+
+
+def check_prom(path: str) -> None:
+    text = open(path).read()
+    lines = [ln for ln in text.strip().splitlines() if ln]
+    assert lines, "empty exposition"
+    series = {}
+    for ln in lines:
+        if ln.startswith("#"):
+            assert re.match(r"^# TYPE [a-zA-Z_:][a-zA-Z0-9_:]* "
+                            r"(gauge|counter|histogram)$", ln), \
+                f"bad comment line: {ln}"
+            continue
+        assert SAMPLE_RE.match(ln), f"unparseable sample line: {ln}"
+        name, val = ln.rsplit(" ", 1)
+        series[name] = float(val.replace("+Inf", "inf"))
+    hist_stems = {n[:-len("_count")] for n in series
+                  if n.endswith("_count")
+                  and f'{n[:-len("_count")]}_bucket{{le="+Inf"}}' in series}
+    assert hist_stems, "no histogram series in exposition"
+    for stem in hist_stems:
+        count = series[f"{stem}_count"]
+        pairs = sorted(
+            (float(re.search(r'le="([^"]+)"', n).group(1)
+                   .replace("+Inf", "inf")), v)
+            for n, v in series.items()
+            if n.startswith(f"{stem}_bucket{{"))
+        cums = [v for _, v in pairs]
+        assert cums == sorted(cums), f"{stem}: non-cumulative buckets"
+        assert pairs[-1][0] == float("inf") and pairs[-1][1] == count, \
+            f"{stem}: +Inf bucket != count"
+    print(f"[trace-smoke] {path}: {len(series)} series, "
+          f"{len(hist_stems)} histograms consistent")
+
+
+if __name__ == "__main__":
+    trace_path, prom_path = sys.argv[1], sys.argv[2]
+    check_chrome(trace_path)
+    check_prom(prom_path)
+    print("[trace-smoke] OK")

@@ -29,8 +29,14 @@ from repro.cluster.replica import (ClusterRequest, EngineBackend,  # noqa: F401
                                    FnBackend, ReplicaConfig, ReplicaCrash,
                                    Status, StreamBackend)
 from repro.cluster.router import POLICIES, Router  # noqa: F401
+from repro.cluster.tracing import (FlightRecorder, Span,  # noqa: F401
+                                   TraceContext, Tracer, current_recorder,
+                                   current_tracer, prometheus_text,
+                                   set_recorder, set_tracer,
+                                   to_chrome_trace)
 from repro.cluster.transport import (TRANSPORTS, LocalTransport,  # noqa: F401
                                      ProcessTransport, ReplicaWorker,
                                      SocketTransport, Transport,
-                                     default_listener, make_transport)
+                                     default_listener, make_transport,
+                                     set_flight_store, default_flight_store)
 from repro.cluster.wire import (PROTOCOL_VERSION, WorkerListener)  # noqa: F401

@@ -15,7 +15,7 @@ import re
 import threading
 import time
 from contextlib import contextmanager
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -103,22 +103,45 @@ class Histogram:
         with self._lock:
             return list(self._buckets)
 
+    # count/sum/mean take the lock: `observe` mutates ``_count`` and
+    # ``_sum`` as two separate writes, so lock-free reads could pair a
+    # post-observe count with a pre-observe sum (a torn read that shows
+    # up as a wrong mean under concurrent load).
     @property
     def count(self) -> int:
-        return self._count
+        with self._lock:
+            return self._count
 
     @property
     def sum(self) -> float:
-        return self._sum
+        with self._lock:
+            return self._sum
 
     def mean(self) -> float:
-        return self._sum / self._count if self._count else 0.0
+        with self._lock:
+            return self._sum / self._count if self._count else 0.0
 
     def percentile(self, p: float) -> float:
         with self._lock:
             if not self._samples:
                 return 0.0
             return float(np.percentile(np.asarray(self._samples), p))
+
+    def stats(self) -> Dict[str, Any]:
+        """Every derived figure read under ONE lock acquisition, so a
+        snapshot's count/mean/percentiles/buckets describe the same set of
+        observations (separate property reads interleave with writers)."""
+        with self._lock:
+            count, total = self._count, self._sum
+            if self._samples:
+                pct = np.percentile(np.asarray(self._samples), (50, 95, 99))
+                pct = {50: float(pct[0]), 95: float(pct[1]),
+                       99: float(pct[2])}
+            else:
+                pct = {50: 0.0, 95: 0.0, 99: 0.0}
+            return {"count": count, "sum": total,
+                    "mean": total / count if count else 0.0,
+                    "percentiles": pct, "buckets": list(self._buckets)}
 
 
 class MetricsRegistry:
@@ -169,11 +192,12 @@ class MetricsRegistry:
         for k, g in gauges.items():
             out[k] = g.value
         for k, h in hists.items():
-            out[f"{k}.count"] = h.count
-            out[f"{k}.mean"] = h.mean()
+            st = h.stats()              # one lock: a consistent view
+            out[f"{k}.count"] = st["count"]
+            out[f"{k}.mean"] = st["mean"]
             for p in (50, 95, 99):
-                out[f"{k}.p{p}"] = h.percentile(p)
-            for i, n in enumerate(h.bucket_counts()):
+                out[f"{k}.p{p}"] = st["percentiles"][p]
+            for i, n in enumerate(st["buckets"]):
                 if n:
                     out[f"{k}.le{i}"] = float(n)
         return out
@@ -215,21 +239,39 @@ def merge_snapshots(base: Dict[str, float],
     Remote replicas cannot write into the parent's registry, so they ship
     ``snapshot()`` dicts over the heartbeat channel and the parent merges:
     counters/gauges, histogram ``.count`` s and bucket ``.le<i>`` counts
-    sum; histogram ``.mean`` s combine count-weighted.  Percentiles of any
-    histogram that ships bucket counts are *recomputed from the summed
-    buckets* — a true cluster-wide percentile up to bucket resolution —
-    and only histograms with no bucket data anywhere (legacy snapshots)
-    fall back to the old max-across-workers upper bound.
+    sum; histogram ``.mean`` s combine count-weighted.
+
+    Percentile merging is decided *per stem*, deterministically, from the
+    full contributor set (base + every worker) before anything merges: a
+    stem whose every non-empty contributor ships bucket counts gets its
+    percentiles recomputed from the summed buckets — a true cluster-wide
+    percentile up to bucket resolution — while a stem with even one
+    legacy contributor (observations but no ``.le<i>`` keys) keeps the
+    conservative max-across-contributors upper bound for ALL of its
+    contributors.  Recomputing such a stem from its partial bucket sums
+    would ignore the legacy workers' observations entirely and could
+    report a percentile *below* data the merge has already seen.
     """
     out = dict(base)
-    bucket_stems = set()
+    # classify stems over every contributor first (order-independent):
+    # bucketed = ships .le<i> keys; legacy = has observations but no
+    # buckets.  An empty histogram (count 0) ships no buckets by design
+    # and must not demote its stem to legacy.
+    bucketed_stems: set = set()
+    legacy_stems: set = set()
+    for snap in [base] + list(worker_snaps):
+        with_buckets = {m.group("stem") for k in snap
+                        if (m := _BUCKET_KEY_RE.match(k))}
+        bucketed_stems |= with_buckets
+        for k, v in snap.items():
+            if k.endswith(".count") and v > 0 and \
+                    k[:-len(".count")] not in with_buckets:
+                legacy_stems.add(k[:-len(".count")])
+    recompute_stems = bucketed_stems - legacy_stems
     for snap in worker_snaps:
         # counts *before* this worker is merged, for mean re-weighting
         pre = {k: out.get(k, 0.0) for k in snap if k.endswith(".count")}
         for k, v in snap.items():
-            m = _BUCKET_KEY_RE.match(k)
-            if m:
-                bucket_stems.add(m.group("stem"))
             if k not in out:
                 out[k] = v
             elif k.endswith((".p50", ".p95", ".p99")):
@@ -243,7 +285,7 @@ def merge_snapshots(base: Dict[str, float],
                     else 0.0
             else:
                 out[k] = out[k] + v
-    for stem in bucket_stems:
+    for stem in recompute_stems:
         counts = [out.get(f"{stem}.le{i}", 0.0) for i in range(_N_BUCKETS)]
         if sum(counts) <= 0:
             continue

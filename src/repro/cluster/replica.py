@@ -32,6 +32,7 @@ import time
 from typing import Any, Callable, List, Optional
 
 from repro.cluster.admission import Rejected
+from repro.cluster.tracing import current_recorder, current_tracer
 
 
 class Status(enum.Enum):
@@ -64,6 +65,12 @@ class ClusterRequest:
     # thread; ``partials`` keeps every frame for non-callback consumers.
     on_partial: Optional[Callable[[Any], None]] = None
     partials: List[Any] = dataclasses.field(default_factory=list)
+    # tracing: the router-side root span (ended at the terminal state) and
+    # the context dispatched with every attempt — the router refreshes
+    # ``trace_ctx``'s attempt number on each respill so spans from a dead
+    # attempt stay tagged apart from the retry's.
+    trace_span: Any = None
+    trace_ctx: Any = None
 
     def emit_partial(self, frame: Any) -> None:
         self.partials.append(frame)
@@ -96,6 +103,9 @@ class ClusterRequest:
     def _finish(self, status: Status):
         self.status = status
         self.finished_s = time.monotonic()
+        if self.trace_span is not None:
+            self.trace_span.tag(status=status.value, attempts=self.attempts)
+            self.trace_span.end()
         self.done.set()
 
     def complete(self, result: Any, replica_rid: int):
@@ -177,14 +187,24 @@ class EngineBackend:
     def __init__(self, engine):
         self.engine = engine
         self._emit = None
+        self._trace_ctxs = None
 
     def bind_emitter(self, emit) -> None:
         """``emit(payload_index, frame)`` forwards a partial-result frame
         for the current batch; rebound by the driver per batch."""
         self._emit = emit
 
+    def bind_trace(self, ctxs) -> None:
+        """Per-payload :class:`~repro.cluster.tracing.TraceContext` list
+        for the current batch (rebound by the driver, like the emitter),
+        so engine-side spans parent into the cluster request's trace."""
+        self._trace_ctxs = ctxs
+
     def process(self, payloads: List[Any]) -> List[Any]:
         emit = self._emit
+        ctxs = self._trace_ctxs
+        if ctxs is None or len(ctxs) != len(payloads):
+            ctxs = [None] * len(payloads)
 
         def on_tokens(i):
             if emit is None:
@@ -192,7 +212,8 @@ class EngineBackend:
             return lambda req, toks, done: emit(i, (toks, done))
 
         reqs = [self.engine.submit(prompt, max_new=max_new,
-                                   on_tokens=on_tokens(i))
+                                   on_tokens=on_tokens(i),
+                                   trace_ctx=ctxs[i])
                 for i, (prompt, max_new) in enumerate(payloads)]
         self.engine.run_until_drained()
         return [r.out_tokens for r in reqs]
@@ -270,6 +291,19 @@ def run_replica_loop(backend, cfg: ReplicaConfig, io) -> None:
         if emit_fn is not None and hasattr(backend, "bind_emitter"):
             backend.bind_emitter(
                 lambda i, frame, _b=batch: emit_fn(_b[i], frame))
+        # tracing bridge: rehydrated contexts ride the work items; the
+        # batch span parents on the first traced item (one batch serves
+        # many requests — sibling items are listed in the tags) and a
+        # trace-aware backend gets the per-item contexts for its own spans
+        ctx_fn = getattr(io, "trace_ctx", None)
+        ctxs = [ctx_fn(r) for r in batch] if ctx_fn is not None \
+            else [None] * len(batch)
+        if hasattr(backend, "bind_trace"):
+            backend.bind_trace(ctxs)
+        bsp = current_tracer().span(
+            "replica.batch",
+            parent=next((c for c in ctxs if c is not None), None),
+            replica=io.rid, n=len(batch))
         t0 = time.monotonic()
         try:
             results = backend.process([io.payload(r) for r in batch])
@@ -277,7 +311,12 @@ def run_replica_loop(backend, cfg: ReplicaConfig, io) -> None:
                 # crash before acknowledgement: the whole batch spills
                 raise ReplicaCrash(f"replica {io.rid}: crashed before ack")
         except BaseException as e:
+            bsp.tag(spilled=True, error=repr(e))
+            bsp.end()
+            current_recorder().record("batch_spill", replica=io.rid,
+                                      n=len(batch), error=repr(e))
             io.spill(batch, e)
             return
+        bsp.end()
         io.ack(batch, results, time.monotonic() - t0)
     io.close()

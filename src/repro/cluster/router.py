@@ -42,6 +42,7 @@ from repro.cluster.backends import BackendSpec
 from repro.cluster.metrics import (MetricsRegistry, merge_snapshots,
                                    null_registry)
 from repro.cluster.replica import ClusterRequest, ReplicaConfig, Status
+from repro.cluster.tracing import current_recorder, current_tracer
 from repro.cluster.transport import Transport, make_transport
 
 POLICIES = ("round_robin", "least_loaded", "session_affinity")
@@ -203,17 +204,34 @@ class Router:
                              kind=kind, deadline_s=now + timeout_s,
                              rid=next(self._rids), submitted_s=now,
                              on_partial=on_partial)
+        # trace root: the sampling decision for this request's entire
+        # cross-host span tree is made here, once
+        root = current_tracer().span("request", rid=req.rid, cost=cost,
+                                     kind=kind)
+        if root.recording:
+            req.trace_span = root
+            req.trace_ctx = root.context()
+        current_recorder().record("submit", rid=req.rid, cost=cost,
+                                  backend=kind)
         if self.admission is not None:
-            kv_frac = None
-            if self.admission.cfg.min_kv_headroom_frac > 0:
-                kv_frac = self.kv_free_fraction()
-            shed = self.admission.decide(self.queue_depth(kind), cost,
-                                         req.deadline_s, now, kind=kind,
-                                         kv_free_frac=kv_frac)
+            with current_tracer().span("admission.decide",
+                                       parent=root) as asp:
+                kv_frac = None
+                if self.admission.cfg.min_kv_headroom_frac > 0:
+                    kv_frac = self.kv_free_fraction()
+                shed = self.admission.decide(self.queue_depth(kind), cost,
+                                             req.deadline_s, now, kind=kind,
+                                             kv_free_frac=kv_frac)
+                asp.tag(shed=shed is not None)
             if shed is not None:
+                current_recorder().record("shed", rid=req.rid,
+                                          reason=shed.reason)
                 req.reject(shed)
                 return req
-        self._dispatch(req)
+        with current_tracer().span("router.dispatch", parent=root) as dsp:
+            self._dispatch(req)
+            if req.replica_rid is None and not req.done.is_set():
+                dsp.tag(replica="pending")
         return req
 
     def kv_free_fraction(self) -> Optional[float]:
@@ -290,6 +308,14 @@ class Router:
             # every token: reset the partial-frame view so incremental
             # consumers don't render the first attempt's prefix twice
             req.reset_partials()
+            # refresh the dispatched context's attempt number so spans
+            # from the dead attempt stay tagged apart from the retry's
+            if req.trace_span is not None:
+                req.trace_ctx = req.trace_span.context(
+                    attempt=req.attempts)
+            current_recorder().record("spill", rid=req.rid,
+                                      replica=dead.rid,
+                                      attempt=req.attempts)
             if req.attempts > self.max_retries:
                 req.fail(RuntimeError(
                     f"request {req.rid}: retries exhausted after replica "

@@ -41,13 +41,15 @@ boundary are picklable.
 from __future__ import annotations
 
 import itertools
+import json
 import multiprocessing as mp
 import os
 import queue
 import threading
 import time
 import uuid
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.cluster.artifacts import ArtifactStore, spec_fingerprint
 from repro.cluster.backends import BackendSpec
@@ -56,12 +58,39 @@ from repro.cluster.framing import decode_frame, encode_frame  # noqa: F401
 from repro.cluster.metrics import MetricsRegistry, null_registry
 from repro.cluster.replica import (ClusterRequest, ReplicaConfig,
                                    ReplicaCrash, run_replica_loop)
+from repro.cluster.tracing import (FlightRecorder, TraceContext, Tracer,
+                                   current_recorder, current_tracer,
+                                   set_recorder, set_tracer)
 from repro.cluster.wire import (Channel, ChannelClosed, PipeChannel,
                                 WorkerListener)
 
 TRANSPORTS = ("thread", "process", "socket")
 
 OnSpill = Callable[[List[ClusterRequest], "Transport"], None]
+
+
+# ----------------------------------------------------------------------
+# Flight-recorder dumps land in an artifact store so a chaos postmortem
+# can pull them by digest after the process that crashed is gone.  The
+# default store is process-wide (shared tempdir root); tests and serve
+# wiring may install their own.
+
+_flight_store: Optional[ArtifactStore] = None
+_flight_store_lock = threading.Lock()
+
+
+def set_flight_store(store: Optional[ArtifactStore]) -> None:
+    global _flight_store
+    with _flight_store_lock:
+        _flight_store = store
+
+
+def default_flight_store() -> ArtifactStore:
+    global _flight_store
+    with _flight_store_lock:
+        if _flight_store is None:
+            _flight_store = ArtifactStore()
+        return _flight_store
 
 
 # ----------------------------------------------------------------------
@@ -88,6 +117,11 @@ class Transport:
         self.started_s = 0.0
         self.busy_s = 0.0
         self.processed = 0
+        # tracing: live "transport.inflight" spans keyed by request rid
+        # (offer -> ack/spill), and digests of flight-recorder dumps this
+        # transport wrote to the artifact store on death
+        self._inflight_spans: Dict[int, Any] = {}
+        self.flight_dumps: List[str] = []
 
     # -- control surface -------------------------------------------------
     def start(self) -> "Transport":
@@ -128,6 +162,43 @@ class Transport:
     def _record_crash(self, n_spilled: int) -> None:
         self.metrics.counter("replica.crashes").inc()
         self.metrics.counter("replica.spilled_requests").inc(n_spilled)
+
+    # -- tracing helpers --------------------------------------------------
+    def _span_inflight(self, req: ClusterRequest) -> None:
+        """Open a transport.inflight span (offer -> ack/spill) when the
+        request carries a trace context.  Callers hold ``self._lock`` —
+        the tracer lock is a leaf, so nesting is safe."""
+        if req.trace_ctx is None:
+            return
+        self._inflight_spans[req.rid] = current_tracer().span(
+            "transport.inflight", parent=req.trace_ctx,
+            replica=self.rid, transport=type(self).__name__)
+
+    def _end_inflight(self, rid: int, **tags) -> None:
+        sp = self._inflight_spans.pop(rid, None)
+        if sp is not None:
+            if tags:
+                sp.tag(**tags)
+            sp.end()
+
+    def _dump_flight(self, reason: str,
+                     worker_events: Sequence = ()) -> Optional[str]:
+        """Postmortem: write the merged flight-recorder event log (parent
+        ring + the worker increments mirrored off heartbeats) to the
+        artifact store.  Must never raise — it runs on fault paths."""
+        try:
+            store = getattr(self, "artifacts", None) or default_flight_store()
+            doc = {"rid": self.rid, "kind": self.kind, "reason": reason,
+                   "wall": time.time(),
+                   "parent_events": current_recorder().events(),
+                   "worker_events": list(worker_events)}
+            digest = store.put_bytes(
+                json.dumps(doc, sort_keys=True, default=str).encode())
+            self.flight_dumps.append(digest)
+            self.metrics.counter("replica.flight_dumps").inc()
+            return digest
+        except Exception:               # noqa: BLE001 - telemetry must not
+            return None                 # take down the fault path itself
 
 
 # ----------------------------------------------------------------------
@@ -172,6 +243,7 @@ class LocalTransport(Transport):
             return False
         with self._lock:
             self._outstanding_cost += req.cost
+            self._span_inflight(req)
         if not self.alive:
             # Raced with a concurrent crash: the dying thread may already
             # have drained the inbox, so reclaim whatever is left ourselves
@@ -184,6 +256,8 @@ class LocalTransport(Transport):
                     break
             with self._lock:
                 self._outstanding_cost -= sum(r.cost for r in leftovers)
+                for r in leftovers:
+                    self._end_inflight(r.rid, aborted=True)
             others = [r for r in leftovers if r is not req]
             if others and self.on_spill is not None:
                 self.on_spill(others, self)
@@ -227,6 +301,12 @@ class LocalTransport(Transport):
     def payload(req: ClusterRequest) -> Any:
         return req.payload
 
+    @staticmethod
+    def trace_ctx(req: ClusterRequest) -> Any:
+        """Same process: the driver reads the context straight off the
+        request (remote transports rehydrate it from the wire frame)."""
+        return req.trace_ctx
+
     def begin(self, batch: List[ClusterRequest]) -> None:
         pass            # the driver hands the in-flight batch to spill()
 
@@ -242,6 +322,8 @@ class LocalTransport(Transport):
         self._hist.observe(busy_s)
         done_cost = 0
         for r, res in zip(batch, results):
+            with self._lock:
+                self._end_inflight(r.rid)
             r.complete(res, self.rid)
             done_cost += r.cost
             self.processed += 1
@@ -264,7 +346,15 @@ class LocalTransport(Transport):
             time.sleep(0.005)
         with self._lock:
             self._outstanding_cost = 0
+            for r in spilled:
+                self._end_inflight(r.rid, spilled=True)
         self._record_crash(len(spilled))
+        current_recorder().record("replica_death", replica=self.rid,
+                                  spilled=len(spilled), error=repr(error))
+        if spilled:
+            current_recorder().record("spill", replica=self.rid,
+                                      rids=[r.rid for r in spilled])
+        self._dump_flight(repr(error))
         if self.on_spill is not None:
             self.on_spill(spilled, self)
         else:
@@ -298,6 +388,8 @@ class LocalTransport(Transport):
                         r.fail(e)
         with self._lock:
             self._outstanding_cost = 0
+            for rid in list(self._inflight_spans):
+                self._end_inflight(rid)
 
 
 # ----------------------------------------------------------------------
@@ -305,8 +397,9 @@ class LocalTransport(Transport):
 
 class WorkerIO:
     """Driver inbox IO inside a remote worker: work items are
-    ``(rid, cost, payload)`` triples received over the channel; acks,
-    heartbeats and metrics snapshots are shipped back.
+    ``(rid, cost, payload, trace_ctx)`` tuples received over the channel;
+    acks, heartbeats, metrics snapshots, trace spans and flight-recorder
+    increments are shipped back.
 
     A dedicated reader thread pumps the channel into ``pending``
     continuously, so the parent's sends never back up behind a long
@@ -327,7 +420,8 @@ class WorkerIO:
         self.rid = rid
         self.registry = registry
         self._hist = registry.histogram("replica.batch_s")
-        self.pending: "queue.Queue[Tuple[int, int, Any]]" = queue.Queue()
+        self.pending: "queue.Queue[Tuple[int, int, Any, Any]]" = queue.Queue()
+        self._evt_seq = 0       # last flight-recorder seq shipped on a hb
         self.disconnected = False
         self.crashed = False
         self._crash = False
@@ -371,7 +465,10 @@ class WorkerIO:
     def _ingest(self, msg) -> None:
         tag = msg[0]
         if tag == "req":
-            self.pending.put((msg[1], msg[2], msg[3]))
+            # trailing element is the optional trace context (older
+            # parents send 4-element frames; tolerate both)
+            tctx = TraceContext.from_wire(msg[4]) if len(msg) > 4 else None
+            self.pending.put((msg[1], msg[2], msg[3], tctx))
         elif tag == "drain":
             self._closing = True
         elif tag == "crash":
@@ -389,13 +486,24 @@ class WorkerIO:
                 continue
             self._ingest(msg)
 
+    def _hb_frame(self) -> tuple:
+        """Heartbeat payload: liveness + metrics snapshot + the tracer's
+        finished spans + flight-recorder increments since the last ship.
+        Telemetry on heartbeats is best-effort by design — a frame lost to
+        a dropped connection costs spans, never correctness."""
+        spans = current_tracer().drain()
+        events = current_recorder().since(self._evt_seq)
+        if events:
+            self._evt_seq = events[-1]["seq"]
+        return ("hb", self.processed, self.busy_s,
+                self.registry.snapshot(), spans, events)
+
     def _hb_loop(self) -> None:
         while not self._stop_hb.wait(self.cfg.heartbeat_interval_s):
             if self.disconnected:
                 return
             self._last_hb = time.monotonic()
-            self._send(("hb", self.processed, self.busy_s,
-                        self.registry.snapshot()))
+            self._send(self._hb_frame())
 
     def send_ready(self) -> None:
         self._send(("ready",))
@@ -410,8 +518,7 @@ class WorkerIO:
         now = time.monotonic()
         if now - self._last_hb >= self.cfg.heartbeat_interval_s:
             self._last_hb = now
-            self._send(("hb", self.processed, self.busy_s,
-                        self.registry.snapshot()))
+            self._send(self._hb_frame())
 
     def crash_requested(self) -> bool:
         return self._crash
@@ -429,14 +536,20 @@ class WorkerIO:
     def payload(item) -> Any:
         return item[2]
 
+    @staticmethod
+    def trace_ctx(item) -> Any:
+        """The rehydrated :class:`TraceContext` riding the work item."""
+        return item[3] if len(item) > 3 else None
+
     def begin(self, batch) -> None:
         pass                            # the parent tracks in-flight state
 
     def emit(self, item, frame) -> None:
         """Streaming: ship a partial-result frame for in-flight item
-        ``(rid, cost, payload)``; the parent routes it to the request's
-        ``on_partial``.  Best-effort — a lost frame only degrades
-        streaming granularity, the ack still carries the full result."""
+        ``(rid, cost, payload, tctx)``; the parent routes it to the
+        request's ``on_partial``.  Best-effort — a lost frame only
+        degrades streaming granularity, the ack still carries the full
+        result."""
         self._send(("partial", item[0], frame), pickle_only=True)
 
     def ack(self, batch, results, busy_s: float) -> None:
@@ -449,9 +562,14 @@ class WorkerIO:
 
     def spill(self, batch, error: BaseException) -> None:
         # The parent owns every unacknowledged request; telling it why we
-        # died is all that is needed — it spills from its own table.
+        # died is all that is needed — it spills from its own table.  The
+        # dying breath also carries the final spans + flight events: the
+        # heartbeat that would have shipped them will never fire.
         self.crashed = True
-        self._send(("dead", repr(error)))
+        events = current_recorder().since(self._evt_seq)
+        if events:
+            self._evt_seq = events[-1]["seq"]
+        self._send(("dead", repr(error), current_tracer().drain(), events))
 
     def close(self) -> None:
         if self.disconnected:
@@ -459,8 +577,7 @@ class WorkerIO:
         # FIFO channel order guarantees every request sent before the drain
         # control message has already been pumped into `pending`, and the
         # driver only reaches here once `pending` is empty.
-        self._send(("hb", self.processed, self.busy_s,
-                    self.registry.snapshot()))
+        self._send(self._hb_frame())
         self._send(("drained",))
 
 
@@ -470,6 +587,11 @@ def _worker_entry(conn, spec: BackendSpec, cfg: ReplicaConfig,
     from repro.cluster.metrics import set_worker_registry
     registry = MetricsRegistry()
     set_worker_registry(registry)   # builders adopt the heartbeat registry
+    # follower-mode tracer: sample_rate=0 means the worker never roots a
+    # trace of its own, but spans parented on an incoming (sampled)
+    # TraceContext always record — the parent's sampling decision rules
+    set_tracer(Tracer(enabled=True, sample_rate=0.0, replica=str(rid)))
+    set_recorder(FlightRecorder(replica=str(rid)))
     io = WorkerIO(PipeChannel(conn), cfg, rid, registry)
     try:
         backend = spec.build()
@@ -509,6 +631,13 @@ class RemoteTransport(Transport):
         self._ready = threading.Event()
         self._drained = threading.Event()
         self._worker_snapshot: Dict[str, float] = {}
+        # mirror of the worker's flight-recorder events (shipped as
+        # heartbeat increments) so a postmortem dump has the worker's
+        # side of the story even after the worker process is gone
+        self._flight_mirror: deque = deque(maxlen=1024)
+        # fault injection: inbound "hb" frames are dropped (one-way
+        # partition) until this monotonic deadline
+        self._hb_drop_until = 0.0
 
     # -- control surface -------------------------------------------------
     def offer(self, req: ClusterRequest) -> bool:
@@ -519,8 +648,11 @@ class RemoteTransport(Transport):
             # type-exact (tuples stay tuples), and an unpicklable payload
             # must neither kill the replica nor leak an outstanding entry —
             # refusing here lets the router shed it explicitly
-            frame = encode_frame(("req", req.rid, req.cost, req.payload),
-                                 pickle_only=True)
+            tctx = req.trace_ctx
+            frame = encode_frame(
+                ("req", req.rid, req.cost, req.payload,
+                 tctx.to_wire() if tctx is not None else None),
+                pickle_only=True)
         except Exception:               # noqa: BLE001 - unserializable
             return False
         with self._lock:
@@ -531,6 +663,7 @@ class RemoteTransport(Transport):
             self._outstanding[req.rid] = req
             self._dispatch_t[req.rid] = time.monotonic()
             self._outstanding_cost += req.cost
+            self._span_inflight(req)
         try:
             chan.send_bytes(frame)
         except ChannelClosed:
@@ -539,6 +672,7 @@ class RemoteTransport(Transport):
                 self._dispatch_t.pop(req.rid, None)
                 if owned:
                     self._outstanding_cost -= req.cost
+                    self._end_inflight(req.rid, aborted=True)
             self._channel_broken(chan, "send failed")
             # if the fault path already took the request it is being
             # requeued over there — claim success so the caller does not
@@ -552,6 +686,7 @@ class RemoteTransport(Transport):
                 if self._outstanding.pop(req.rid, None) is not None:
                     self._dispatch_t.pop(req.rid, None)
                     self._outstanding_cost -= req.cost
+                    self._end_inflight(req.rid, aborted=True)
                     return False
         return True
 
@@ -608,6 +743,14 @@ class RemoteTransport(Transport):
 
     def _handle(self, chan: Channel, msg) -> bool:
         tag = msg[0]
+        if tag == "hb" and time.monotonic() < self._hb_drop_until:
+            # injected one-way partition: the worker's heartbeats vanish
+            # on the way in (acks and data frames still flow, so the
+            # zero-lost invariants hold); a worker that sends nothing
+            # else goes heartbeat-stale and dies exactly like a real
+            # asymmetric partition would make it
+            self.metrics.counter("replica.hb_dropped").inc()
+            return True
         self.heartbeat_s = time.monotonic()
         if tag == "ack":
             self.busy_s += msg[2]
@@ -617,12 +760,16 @@ class RemoteTransport(Transport):
                     self._dispatch_t.pop(rid, None)
                     if req is not None:
                         self._outstanding_cost -= req.cost
+                        self._end_inflight(rid)
                 if req is not None:
                     req.complete(res, self.rid)
                     self.processed += 1
         elif tag == "hb":
             with self._lock:
                 self._worker_snapshot = dict(msg[3])
+            self._ingest_telemetry(
+                msg[4] if len(msg) > 4 else None,
+                msg[5] if len(msg) > 5 else None)
             # the stall check cannot live only on recv timeouts: a worker
             # heartbeating faster than the recv poll would keep the channel
             # busy enough that _idle_tick never fires — the exact loris
@@ -641,12 +788,39 @@ class RemoteTransport(Transport):
         elif tag == "drained":
             self._drained.set()
         elif tag == "dead":
+            # the dying breath carries the worker's final spans + flight
+            # events (the next heartbeat would have, but never fires)
+            self._ingest_telemetry(
+                msg[2] if len(msg) > 2 else None,
+                msg[3] if len(msg) > 3 else None)
             self._die(ReplicaCrash(
                 f"replica {self.rid}: worker died: {msg[1]}"))
             return False
         else:
             return self._handle_extra(chan, msg)
         return True
+
+    def _ingest_telemetry(self, spans, events) -> None:
+        """Adopt worker-shipped spans into the parent tracer and mirror
+        worker flight events (for the postmortem dump)."""
+        if spans:
+            current_tracer().ingest(spans, replica=self.rid)
+        if events:
+            with self._lock:
+                self._flight_mirror.extend(
+                    e for e in events if isinstance(e, dict))
+
+    def inject_hb_partition(self, duration_s: float) -> None:
+        """Fault injection: a one-way network partition — inbound
+        heartbeats are dropped for ``duration_s`` while every other frame
+        (acks, partials) still flows.  An idle worker goes
+        heartbeat-stale and dies with a spill; a busy worker survives on
+        its data frames, exactly like a real asymmetric partition."""
+        self._hb_drop_until = time.monotonic() + float(duration_s)
+        self.metrics.counter("replica.hb_partitions").inc()
+        current_recorder().record("partition", replica=self.rid,
+                                  direction="worker->parent",
+                                  duration_s=float(duration_s))
 
     def _handle_extra(self, chan: Channel, msg) -> bool:
         return True
@@ -690,6 +864,8 @@ class RemoteTransport(Transport):
         self._outstanding.clear()
         self._dispatch_t.clear()
         self._outstanding_cost = 0
+        for rid in list(self._inflight_spans):
+            self._end_inflight(rid, spilled=True)
         return spilled
 
     def _die(self, error: BaseException) -> None:
@@ -703,6 +879,16 @@ class RemoteTransport(Transport):
         self._drained.set()
         self._kill_carrier(chan)
         self._record_crash(len(spilled))
+        current_recorder().record("replica_death", replica=self.rid,
+                                  spilled=len(spilled), error=repr(error))
+        if spilled:
+            # the spilled batch must be IN the dump (the router's
+            # per-request respill events fire after it is written)
+            current_recorder().record("spill", replica=self.rid,
+                                      rids=[r.rid for r in spilled])
+        with self._lock:
+            mirror = list(self._flight_mirror)
+        self._dump_flight(repr(error), worker_events=mirror)
         self._spill_out(spilled, error)
 
     def _drain_clean(self) -> None:
@@ -927,6 +1113,8 @@ class SocketTransport(RemoteTransport):
         immediately; the worker notices EOF and re-runs the handshake."""
         chan = self._chan
         if chan is not None:
+            current_recorder().record("partition", replica=self.rid,
+                                      direction="both", cause="sever")
             chan.close()            # recv loops on both sides see EOF
 
     def connected(self) -> bool:
@@ -1031,6 +1219,8 @@ class SocketTransport(RemoteTransport):
         self.heartbeat_s = time.monotonic()
         if reconnect:
             self.metrics.counter("replica.reconnects").inc()
+            current_recorder().record("reconnect", replica=self.rid,
+                                      stale_spilled=len(stale))
         if stale:
             self.metrics.counter("replica.disconnect_spills").inc(len(stale))
             self._spill_out(stale, ReplicaCrash(
@@ -1079,6 +1269,8 @@ class SocketTransport(RemoteTransport):
         # transport stays in the pool for the reconnect window (the
         # monitor declares death if no worker returns in time).
         self.metrics.counter("replica.disconnects").inc()
+        current_recorder().record("disconnect", replica=self.rid,
+                                  why=why, spilled=len(spilled))
         if spilled:
             self.metrics.counter("replica.disconnect_spills") \
                 .inc(len(spilled))

@@ -98,6 +98,15 @@ def run_worker(address: Tuple[str, int], token: str,
     registry = MetricsRegistry()
     from repro.cluster.metrics import set_worker_registry
     set_worker_registry(registry)   # builders adopt the heartbeat registry
+    # follower-mode tracer (sample_rate=0: never roots a trace, always
+    # honors an incoming sampled context) + flight recorder; both are
+    # re-labeled with the real rid once the welcome assigns it
+    from repro.cluster.tracing import (FlightRecorder, Tracer, set_recorder,
+                                       set_tracer)
+    tracer = Tracer(enabled=True, sample_rate=0.0, replica="worker")
+    set_tracer(tracer)
+    recorder = FlightRecorder(replica="worker")
+    set_recorder(recorder)
     backend = None
     announce_kind: Optional[str] = None
     announce_hash: Optional[str] = None
@@ -118,6 +127,8 @@ def run_worker(address: Tuple[str, int], token: str,
             chan.close()
             return                      # rejected (or garbled): stand down
         _tag, rid, spec, cfg = msg[:4]
+        tracer.replica = str(rid)
+        recorder.replica = str(rid)
         backlog: list = []
         if backend is None:
             announce_kind = spec.kind

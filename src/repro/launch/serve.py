@@ -23,6 +23,7 @@ control and unified metrics.  ``--transport`` picks replica placement:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -30,7 +31,10 @@ import numpy as np
 
 from repro.cluster import (AdmissionConfig, AdmissionController,
                            EngineBackend, MetricsRegistry, POLICIES,
-                           ReplicaConfig, Router, TRANSPORTS, engine_spec)
+                           ReplicaConfig, Router, TRANSPORTS, Tracer,
+                           current_tracer, engine_spec, prometheus_text,
+                           set_tracer, to_chrome_trace)
+from repro.cluster.tracing import start_profiling, stop_profiling
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import reduced as reduce_cfg
 from repro.models import api
@@ -81,7 +85,33 @@ def main(argv=None):
                          "weights from (default: deterministic init at "
                          "seed 0 inside each worker, matching the "
                          "thread/single-replica paths)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-request spans through router, "
+                         "transport, replica, and engine stages")
+    ap.add_argument("--trace-sample-rate", type=float, default=1.0,
+                    help="fraction of requests that root a trace "
+                         "(workers always follow a sampled parent)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the collected spans as Chrome trace-event "
+                         "JSON (load in Perfetto / chrome://tracing); "
+                         "implies --trace")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write the final metrics snapshot in Prometheus "
+                         "text exposition format")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace of the run "
+                         "into DIR (TensorBoard/Perfetto loadable); adds "
+                         "TraceAnnotation markers around prefill/decode")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        args.trace = True
+    if args.trace:
+        set_tracer(Tracer(enabled=True,
+                          sample_rate=args.trace_sample_rate,
+                          replica="parent"))
+    if args.profile_dir:
+        start_profiling(args.profile_dir)
 
     cfg = reduce_cfg(get_config(args.arch))
     # remote workers init/load their own weights; don't pay for a parent copy
@@ -97,14 +127,18 @@ def main(argv=None):
                            size=rng.randint(4, 16)).astype(np.int32)
                for _ in range(args.requests)]
 
+    snap = None
     if args.replicas <= 1:
-        eng = Engine(params, cfg, scfg)
+        metrics = MetricsRegistry() if args.prom_out else None
+        eng = Engine(params, cfg, scfg, metrics=metrics)
         reqs = [eng.submit(p, max_new=args.max_new) for p in prompts]
         t0 = time.perf_counter()
         eng.run_until_drained()
         wall = time.perf_counter() - t0
         toks = sum(len(r.out_tokens) for r in reqs)
         lats = [r.done_t - r.submit_t for r in reqs]
+        if metrics is not None:
+            snap = metrics.snapshot()
     else:
         metrics = MetricsRegistry()
         router = Router(policy=args.router_policy, metrics=metrics,
@@ -151,6 +185,19 @@ def main(argv=None):
     print(f"[serve] arch={args.arch} reqs={len(prompts)} tokens={toks} "
           f"tok/s={toks / wall:.1f} p50={np.median(lats):.2f}s "
           f"p99={np.percentile(lats, 99):.2f}s")
+
+    if args.profile_dir:
+        stop_profiling()
+        print(f"[profile] jax trace written under {args.profile_dir}")
+    if args.trace_out:
+        spans = current_tracer().spans()
+        with open(args.trace_out, "w") as f:
+            json.dump(to_chrome_trace(spans), f)
+        print(f"[trace] {len(spans)} spans -> {args.trace_out}")
+    if args.prom_out:
+        with open(args.prom_out, "w") as f:
+            f.write(prometheus_text(snap or {}))
+        print(f"[metrics] prometheus exposition -> {args.prom_out}")
 
 
 if __name__ == "__main__":

@@ -42,13 +42,15 @@ import itertools
 import threading
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster.metrics import MetricsRegistry
+from repro.cluster.tracing import (NULL_SPAN, annotate, current_recorder,
+                                   current_tracer)
 from repro.models import api, transformer as tfm
 from repro.serving.kvpool import (NULL_BLOCK, BlockAllocator, PoolExhausted,
                                   hash_token_blocks, padded_table)
@@ -118,6 +120,11 @@ class Request:
     # produced — on_tokens(req, new_tokens, done).  One call per K-step
     # sync on the fused/paged paths, per token on the reference path.
     on_tokens: Optional[Callable[["Request", List[int], bool], None]] = None
+    # tracing: the engine-side request span (submit -> finish) and the
+    # context engine batch spans parent on; under a cluster the context
+    # arrives with the work item, standalone submits root their own
+    trace_span: Any = None
+    trace_ctx: Any = None
 
     @property
     def decoded(self) -> int:
@@ -357,6 +364,8 @@ class Engine:
             n_blocks = scfg.kv_blocks or scfg.slots * self.nb_max
             self.caches = tfm.init_paged_caches(cfg, n_blocks, bs)
             self.alloc = BlockAllocator(n_blocks, bs)
+            self.alloc.on_evict = lambda bid: current_recorder().record(
+                "kv_evict", block=bid)
             self._seq_of_slot: List[Optional[int]] = [None] * scfg.slots
             self._bt = np.zeros((scfg.slots, self.nb_max), np.int32)
             self._pos_h = np.zeros((scfg.slots,), np.int64)
@@ -383,10 +392,19 @@ class Engine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int,
-               on_tokens: Optional[Callable] = None) -> Request:
+               on_tokens: Optional[Callable] = None,
+               trace_ctx: Any = None) -> Request:
         req = Request(rid=next(self._rids),
                       prompt=np.asarray(prompt, np.int32), max_new=max_new,
                       submit_t=time.perf_counter(), on_tokens=on_tokens)
+        # with a cluster context this parents into the request's trace;
+        # standalone (trace_ctx None) it roots one, subject to sampling
+        sp = current_tracer().span("engine.request", parent=trace_ctx,
+                                   rid=req.rid, prompt_len=len(req.prompt),
+                                   max_new=max_new)
+        if sp.recording:
+            req.trace_span = sp
+            req.trace_ctx = sp.ctx
         self.queue.append(req)
         return req
 
@@ -406,11 +424,19 @@ class Engine:
         self.metrics.gauge("engine.kv_blocks_cached").set(
             self.alloc.cached_blocks)
 
+    def _close_span(self, req: Request):
+        if req.trace_span is not None:
+            req.trace_span.tag(finish=req.finish_reason,
+                               decoded=req.decoded)
+            req.trace_span.end()
+            req.trace_span = None
+
     def _finish(self, slot: int, reason: str):
         req = self.active[slot]
         req.done = True
         req.finish_reason = reason
         req.done_t = time.perf_counter()
+        self._close_span(req)
         self.finished.append(req)
         self.active[slot] = None
         if self.paged:
@@ -466,13 +492,30 @@ class Engine:
                 tokens[j, :plen] = req.prompt
                 last_idx[j] = plen - 1
                 budget[j] = max(req.max_new, 0)
-            toks, self.caches, self._pos, self._last, self._active, \
-                self._remaining, self._rng = self.fns.admit_fn(bucket, n_pad)(
-                    self.params, jnp.asarray(tokens), jnp.asarray(last_idx),
-                    jnp.asarray(row_slots), jnp.asarray(budget),
-                    self.caches, self._pos, self._last,
-                    self._active, self._remaining, self._rng)
-            toks_h = np.asarray(toks)[n_pad - n:]
+            asp = current_tracer().span(
+                "engine.admit",
+                parent=next((r.trace_ctx for r in batch
+                             if r.trace_ctx is not None), None),
+                bucket=bucket, n=n, n_pad=n_pad,
+                rids=[r.rid for r in batch])
+            current_recorder().record("admit", rids=[r.rid for r in batch],
+                                      bucket=bucket, n=n)
+            # the prefill span brackets the jitted call *plus* the host
+            # sync that realizes its tokens — tracing never reaches
+            # inside jit, it measures the host-visible stage
+            psp = current_tracer().span("engine.prefill", parent=asp,
+                                        bucket=bucket, n_pad=n_pad)
+            with annotate("prefill"):
+                toks, self.caches, self._pos, self._last, self._active, \
+                    self._remaining, self._rng = \
+                    self.fns.admit_fn(bucket, n_pad)(
+                        self.params, jnp.asarray(tokens),
+                        jnp.asarray(last_idx),
+                        jnp.asarray(row_slots), jnp.asarray(budget),
+                        self.caches, self._pos, self._last,
+                        self._active, self._remaining, self._rng)
+                toks_h = np.asarray(toks)[n_pad - n:]
+            psp.end()
             now = time.perf_counter()
             for j, req in enumerate(batch):
                 req.out_tokens.append(int(toks_h[j]))
@@ -483,21 +526,38 @@ class Engine:
                 elif len(req.prompt) >= self.scfg.max_len - 1:
                     self._finish(slots_idx[j], "max_len")
                 self._emit(req, req.out_tokens[-1:], req.done)
+            asp.end()
             self.metrics.counter("engine.prefill_batches").inc()
+
+    def _batch_ctx(self):
+        """Trace parent for a decode-sync span: the first traced active
+        request (one span serves the whole shared batch)."""
+        return next((r.trace_ctx for r in self.active
+                     if r is not None and r.trace_ctx is not None), None)
 
     def _step_fused(self) -> bool:
         self._admit_fused()
         if not any(r is not None for r in self.active):
             return False
-        out, emitted, self.caches, self._pos, self._last, self._active, \
-            self._remaining, self._rng = self.fns.decode_loop(
-                self.params, self.caches, self._pos, self._last,
-                self._active, self._remaining, self._rng)
-        # one host sync per K decode steps
-        out_h = np.asarray(out)
-        em_h = np.asarray(emitted)
-        act_h = np.asarray(self._active)
-        rem_h = np.asarray(self._remaining)
+        dsp = current_tracer().span(
+            "engine.decode_sync", parent=self._batch_ctx(),
+            k=self.scfg.sync_every,
+            n_active=sum(r is not None for r in self.active))
+        with annotate("decode_loop"):
+            out, emitted, self.caches, self._pos, self._last, self._active, \
+                self._remaining, self._rng = self.fns.decode_loop(
+                    self.params, self.caches, self._pos, self._last,
+                    self._active, self._remaining, self._rng)
+            # one host sync per K decode steps (sampling happened in-jit)
+            hsp = current_tracer().span("engine.host_sync", parent=dsp)
+            out_h = np.asarray(out)
+            em_h = np.asarray(emitted)
+            act_h = np.asarray(self._active)
+            rem_h = np.asarray(self._remaining)
+            hsp.end()
+        esp = current_tracer().span("engine.stream_emit", parent=dsp) \
+            if any(r is not None and r.on_tokens is not None
+                   for r in self.active) else NULL_SPAN
         for s, req in enumerate(self.active):
             if req is None:
                 continue
@@ -506,6 +566,8 @@ class Engine:
             if not act_h[s]:
                 self._finish(s, "max_new" if rem_h[s] <= 0 else "max_len")
             self._emit(req, new, req.done)
+        esp.end()
+        dsp.end()
         self.metrics.counter("engine.steps").inc()
         return True
 
@@ -548,6 +610,7 @@ class Engine:
         req.done = True
         req.finish_reason = "rejected_prompt_too_long"
         req.done_t = req.first_token_t = time.perf_counter()
+        self._close_span(req)
         self.finished.append(req)
         self.metrics.counter("engine.rejected_too_long").inc()
         self._emit(req, [], True)
@@ -626,15 +689,31 @@ class Engine:
                 slot_arr[j] = slot
                 budget[j] = max(req.max_new, 0)
                 bt[j] = self._bt[slot]
-            toks, self.caches, self._pos, self._last, self._active, \
-                self._remaining, self._rng = self.fns.paged_admit_fn(
-                    bucket, n_pad)(
-                    self.params, jnp.asarray(tokens), jnp.asarray(pos0),
-                    jnp.asarray(last_idx), jnp.asarray(slot_arr),
-                    jnp.asarray(budget), jnp.asarray(bt),
-                    self.caches, self._pos, self._last,
-                    self._active, self._remaining, self._rng)
-            toks_h = np.asarray(toks)[n_pad - n:]
+            hit_toks = sum(r[4] for r in rows)
+            asp = current_tracer().span(
+                "engine.admit",
+                parent=next((r[0].trace_ctx for r in rows
+                             if r[0].trace_ctx is not None), None),
+                bucket=bucket, n=n, n_pad=n_pad,
+                rids=[r[0].rid for r in rows],
+                prefix_hit_tokens=hit_toks,
+                kv_blocks_free=self.alloc.free_blocks)
+            current_recorder().record(
+                "admit", rids=[r[0].rid for r in rows], bucket=bucket,
+                n=n, prefix_hit_tokens=hit_toks)
+            psp = current_tracer().span("engine.prefill", parent=asp,
+                                        bucket=bucket, n_pad=n_pad)
+            with annotate("prefill"):
+                toks, self.caches, self._pos, self._last, self._active, \
+                    self._remaining, self._rng = self.fns.paged_admit_fn(
+                        bucket, n_pad)(
+                        self.params, jnp.asarray(tokens), jnp.asarray(pos0),
+                        jnp.asarray(last_idx), jnp.asarray(slot_arr),
+                        jnp.asarray(budget), jnp.asarray(bt),
+                        self.caches, self._pos, self._last,
+                        self._active, self._remaining, self._rng)
+                toks_h = np.asarray(toks)[n_pad - n:]
+            psp.end()
             now = time.perf_counter()
             for j, (req, slot, sid, hashes, n_cached_tok, suffix_len) in \
                     enumerate(rows):
@@ -653,6 +732,7 @@ class Engine:
                 elif plen >= scfg.max_len - 1:
                     self._finish(slot, "max_len")
                 self._emit(req, req.out_tokens[-1:], req.done)
+            asp.end()
             self.metrics.counter("engine.prefill_batches").inc()
             self._kv_gauges()
 
@@ -661,6 +741,10 @@ class Engine:
         if not any(r is not None for r in self.active):
             return False
         scfg = self.scfg
+        dsp = current_tracer().span(
+            "engine.decode_sync", parent=self._batch_ctx(),
+            k=scfg.sync_every,
+            n_active=sum(r is not None for r in self.active))
         # host pre-work: every active slot needs writable private blocks
         # covering the K positions this loop will write — allocate ahead,
         # COW any block shared with the prefix cache or a fork
@@ -696,16 +780,25 @@ class Engine:
             dst = jnp.asarray([0] * pad + cow_dst, jnp.int32)
             self.caches = self.fns.cow(self.caches, src, dst)
             self.metrics.counter("engine.kv_cow_copies").inc(len(cow_src))
-        out, emitted, self.caches, self._pos, self._last, self._active, \
-            self._remaining, self._rng = self.fns.paged_decode_loop(
-                self.params, jnp.asarray(self._bt), self.caches, self._pos,
-                self._last, self._active, self._remaining, self._rng)
-        out_h = np.asarray(out)
-        em_h = np.asarray(emitted)
-        act_h = np.asarray(self._active)
-        rem_h = np.asarray(self._remaining)
-        self._pos_h = np.asarray(self._pos).astype(np.int64)
-        self._rem_h = rem_h.astype(np.int64)
+            dsp.tag(cow_copies=len(cow_src))
+            current_recorder().record("cow", n=len(cow_src))
+        with annotate("decode_loop"):
+            out, emitted, self.caches, self._pos, self._last, self._active, \
+                self._remaining, self._rng = self.fns.paged_decode_loop(
+                    self.params, jnp.asarray(self._bt), self.caches,
+                    self._pos, self._last, self._active, self._remaining,
+                    self._rng)
+            hsp = current_tracer().span("engine.host_sync", parent=dsp)
+            out_h = np.asarray(out)
+            em_h = np.asarray(emitted)
+            act_h = np.asarray(self._active)
+            rem_h = np.asarray(self._remaining)
+            self._pos_h = np.asarray(self._pos).astype(np.int64)
+            self._rem_h = rem_h.astype(np.int64)
+            hsp.end()
+        esp = current_tracer().span("engine.stream_emit", parent=dsp) \
+            if any(r is not None and r.on_tokens is not None
+                   for r in self.active) else NULL_SPAN
         for s, req in enumerate(self.active):
             if req is None:
                 continue
@@ -714,6 +807,8 @@ class Engine:
             if not act_h[s]:
                 self._finish(s, "max_new" if rem_h[s] <= 0 else "max_len")
             self._emit(req, new, req.done)
+        esp.end()
+        dsp.end()
         self.metrics.counter("engine.steps").inc()
         self._kv_gauges()
         return True

@@ -35,7 +35,8 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple)
 
 NULL_BLOCK = 0
 
@@ -96,6 +97,9 @@ class BlockAllocator:
         self._prefix: "OrderedDict[bytes, int]" = OrderedDict()
         self.evictions = 0
         self.cow_copies = 0
+        # observability: called with the evicted block id on every prefix
+        # cache eviction (the engine points this at the flight recorder)
+        self.on_evict: Optional[Callable[[int], None]] = None
 
     # -- introspection ---------------------------------------------------
     @property
@@ -151,6 +155,11 @@ class BlockAllocator:
         b = self._prefix.pop(victim)
         self._decref(b)
         self.evictions += 1
+        if self.on_evict is not None:
+            try:
+                self.on_evict(b)
+            except Exception:       # noqa: BLE001 - telemetry stays inert
+                pass
         return True
 
     def _decref(self, block: int) -> None:

@@ -57,6 +57,26 @@ def random_schedule(seed: int, n_faults: int, horizon_s: float,
     return sorted(faults, key=lambda f: f.at_s)
 
 
+def partition_schedule(seed: int, n_partitions: int, horizon_s: float,
+                       n_replicas: int,
+                       duration_bounds_s=(0.3, 0.8)) -> List[Fault]:
+    """Deterministic *partial*-partition schedule: each fault drops the
+    worker→parent heartbeat direction on one replica for a window sized
+    like the gap between autoscaler ticks, while acks and partial results
+    keep flowing.  A busy replica must ride it out (acks refresh
+    liveness); an idle one is declared dead by the heartbeat monitor and
+    its queued work spills — either way the zero-lost contract holds.
+    Kept out of :data:`ACTIONS` so existing seeded schedules replay
+    byte-identically."""
+    rng = np.random.RandomState(seed)
+    faults = [Fault(at_s=float(rng.uniform(0.0, horizon_s)),
+                    action="partition",
+                    target=int(rng.randint(n_replicas)),
+                    duration_s=float(rng.uniform(*duration_bounds_s)))
+              for _ in range(n_partitions)]
+    return sorted(faults, key=lambda f: f.at_s)
+
+
 @dataclasses.dataclass
 class ChaosReport:
     transport: str
@@ -116,6 +136,12 @@ def _apply_fault(fault: Fault, workers: List, gate: threading.Event) -> None:
         gate.set()
         return
     w = workers[fault.target % len(workers)]
+    if fault.action == "partition":
+        # one-way heartbeat drop (remote transports only: a thread replica
+        # has no heartbeat channel to partition)
+        if hasattr(w, "inject_hb_partition"):
+            w.inject_hb_partition(fault.duration_s)
+        return
     if fault.action == "drop" and isinstance(w, SocketTransport):
         w.sever_connection()          # partition: worker survives, reconnects
     elif fault.action == "crash":

@@ -11,7 +11,8 @@ via ``pytest.ini``; CI runs them in a dedicated job).
 import pytest
 
 from tests._hyp_compat import given, settings, st
-from tests.chaos import ACTIONS, random_schedule, run_chaos, run_slow_loris
+from tests.chaos import (ACTIONS, partition_schedule, random_schedule,
+                         run_chaos, run_slow_loris)
 
 
 def _episode(transport: str, seed: int, n_faults: int = 3,
@@ -53,12 +54,44 @@ def test_slow_loris_process_is_rerouted():
     assert report.crashes >= 1
 
 
+def test_chaos_partial_partition_process():
+    """Partial network partition: drop the worker→parent heartbeat
+    direction for windows shorter than the heartbeat timeout while acks
+    keep flowing.  Replicas must ride it out (no spurious deaths under
+    load), the zero-lost contract must hold, and the flight recorder must
+    capture the partition events for post-mortem."""
+    from repro.cluster import current_recorder, set_recorder
+    from repro.cluster.tracing import FlightRecorder
+
+    prev = current_recorder()
+    set_recorder(FlightRecorder(replica="parent"))
+    try:
+        faults = partition_schedule(31, n_partitions=2, horizon_s=0.4,
+                                    n_replicas=3,
+                                    duration_bounds_s=(0.3, 0.6))
+        report = run_chaos("process", faults, n_replicas=3, n_requests=60)
+        report.assert_invariants()
+        assert report.ok == report.n_requests, str(report)
+        events = [e for e in current_recorder().events()
+                  if e["kind"] == "partition"]
+        assert len(events) == len(faults), \
+            "every injected partition must leave a flight-recorder event"
+        for e in events:
+            assert e["direction"] == "worker->parent" and e["duration_s"] > 0
+    finally:
+        set_recorder(prev)
+
+
 def test_schedule_is_deterministic():
     a = random_schedule(123, n_faults=5, horizon_s=1.0, n_replicas=3)
     b = random_schedule(123, n_faults=5, horizon_s=1.0, n_replicas=3)
     assert a == b
     assert all(f.action in ACTIONS for f in a)
     assert [f.at_s for f in a] == sorted(f.at_s for f in a)
+    p = partition_schedule(123, n_partitions=4, horizon_s=1.0, n_replicas=3)
+    assert p == partition_schedule(123, n_partitions=4, horizon_s=1.0,
+                                   n_replicas=3)
+    assert all(f.action == "partition" for f in p)
 
 
 # ----------------------------------------------------------------------

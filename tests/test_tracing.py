@@ -1,0 +1,359 @@
+"""Distributed tracing + flight recorder: span trees stay *connected*
+across every transport boundary (thread, process pipe, socket — including
+reconnect and at-least-once respill), worker spans arrive over the
+heartbeat channel, the exporters emit loadable Chrome-trace JSON and
+parseable Prometheus text, and a replica death dumps its last flight
+events to the artifact store.
+
+Process/socket tests use the echo BackendSpec (no jax in the worker); the
+engine-level span tests live with the serve smoke (CI trace-smoke job)
+because they pay a compile."""
+import json
+import re
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (AdmissionConfig, AdmissionController, FnBackend,
+                           MetricsRegistry, ReplicaConfig, Router, Status,
+                           TraceContext, Tracer, current_recorder,
+                           current_tracer, echo_spec, prometheus_text,
+                           set_recorder, set_tracer, to_chrome_trace)
+from repro.cluster.tracing import NULL_SPAN, FlightRecorder
+from repro.cluster.transport import default_flight_store
+
+PROC_CFG = ReplicaConfig(inbox_capacity=256, max_batch=4)
+
+
+@pytest.fixture
+def tracer():
+    """Fresh full-sampling tracer + flight recorder installed as the
+    process globals, restored afterwards (both are module-level state)."""
+    prev_t, prev_r = current_tracer(), current_recorder()
+    tr = Tracer(enabled=True, sample_rate=1.0, capacity=8192,
+                replica="parent")
+    set_tracer(tr)
+    set_recorder(FlightRecorder(replica="parent"))
+    yield tr
+    set_tracer(prev_t)
+    set_recorder(prev_r)
+
+
+def _trees(spans):
+    """Group spans by trace id and verify connectivity: every parent
+    pointer resolves inside the same trace and each trace has exactly one
+    root.  Returns {trace_id: [span, ...]}."""
+    by_trace = {}
+    for s in spans:
+        by_trace.setdefault(s["trace"], []).append(s)
+    for tid, group in by_trace.items():
+        ids = {s["span"] for s in group}
+        roots = [s for s in group if not s["parent"]]
+        assert len(roots) == 1, \
+            f"trace {tid}: {len(roots)} roots in {[s['name'] for s in group]}"
+        for s in group:
+            if s["parent"]:
+                assert s["parent"] in ids, \
+                    f"trace {tid}: span {s['name']} orphaned"
+    return by_trace
+
+
+def _poll_spans(tr, pred, timeout_s=10.0):
+    """Heartbeat shipping is asynchronous: poll until the predicate holds
+    over the tracer's buffer (or time out and let the assert show why)."""
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        spans = tr.spans()
+        if pred(spans):
+            return spans
+        time.sleep(0.05)
+    return tr.spans()
+
+
+# ----------------------------------------------------------------------
+def test_span_tree_ids_tags_and_context(tracer):
+    with tracer.span("request", rid=7) as root:
+        ctx = root.context()
+        assert ctx.trace_id == root.trace_id and ctx.sampled
+        with tracer.span("child", parent=ctx, bucket=16) as child:
+            child.tag(n=3)
+        assert child.parent_id == root.span_id
+    spans = tracer.spans()
+    assert [s["name"] for s in spans] == ["child", "request"]  # end order
+    child_s, root_s = spans
+    assert child_s["tags"] == {"bucket": 16, "n": 3}
+    assert root_s["tags"] == {"rid": 7}
+    assert child_s["t1"] >= child_s["t0"] and root_s["t1"] >= root_s["t0"]
+    assert root_s["replica"] == "parent"
+    _trees(spans)
+    # double-end is inert, tags coerce to scalars
+    root.end()
+    assert len(tracer.spans()) == 2
+    with tracer.span("odd", arr=np.arange(3), obj=object()) as sp:
+        pass
+    tags = tracer.spans()[-1]["tags"]
+    assert isinstance(tags["arr"], str) and isinstance(tags["obj"], str)
+
+
+def test_sampling_follower_mode_and_bounded_buffer():
+    # disabled tracer: pure no-op singletons, no allocation per call
+    off = Tracer(enabled=False)
+    assert off.span("x") is NULL_SPAN and off.span("x").ctx is None
+    # rate 0 never roots…
+    follower = Tracer(enabled=True, sample_rate=0.0, replica="w1")
+    assert follower.span("root") is NULL_SPAN
+    # …but always records children of a sampled incoming context — this
+    # is how workers follow the parent's single sampling decision
+    ctx = TraceContext("t1", "s1", sampled=True)
+    sp = follower.span("replica.batch", parent=ctx)
+    assert sp.recording
+    sp.end()
+    assert follower.spans()[0]["parent"] == "s1"
+    # an *unsampled* context records nothing anywhere
+    assert follower.span("x", parent=TraceContext("t", "s", False)) \
+        is NULL_SPAN
+    # bounded buffer: overflow drops oldest and counts drops
+    tiny = Tracer(enabled=True, sample_rate=1.0, capacity=4)
+    for i in range(10):
+        tiny.span(f"s{i}").end()
+    assert len(tiny.spans()) == 4 and tiny.dropped == 6
+    assert tiny.spans()[0]["name"] == "s6"
+    # rate sampling: deterministic bounds over many roots
+    half = Tracer(enabled=True, sample_rate=0.5)
+    kept = sum(half.span("r").recording for _ in range(2000))
+    assert 700 < kept < 1300
+
+
+def test_trace_context_wire_roundtrip():
+    ctx = TraceContext("abc-1", "abc-2", sampled=True, attempt=3)
+    wire = ctx.to_wire()
+    back = TraceContext.from_wire(wire)
+    assert (back.trace_id, back.span_id, back.sampled, back.attempt) == \
+        ("abc-1", "abc-2", True, 3)
+    # wire format survives msgpack-style list/tuple coercion
+    assert TraceContext.from_wire(list(wire)).span_id == "abc-2"
+    # malformed contexts drop to None instead of raising mid-frame
+    for bad in (None, [], ["only-one"], "nope", 7):
+        assert TraceContext.from_wire(bad) is None
+
+
+# ----------------------------------------------------------------------
+def test_thread_transport_single_connected_tree(tracer):
+    m = MetricsRegistry()
+    r = Router(policy="round_robin", metrics=m,
+               admission=AdmissionController(
+                   AdmissionConfig(max_queue_cost=4096), m))
+    for _ in range(2):
+        r.add_replica(FnBackend(lambda ps: [p * 2 for p in ps]),
+                      ReplicaConfig(max_batch=4))
+    reqs = [r.submit(i, cost=1) for i in range(8)]
+    assert [r.wait(q, 15.0) for q in reqs] == [2 * i for i in range(8)]
+    r.stop()
+    spans = tracer.spans()
+    trees = _trees(spans)
+    assert len(trees) == 8                       # one trace per request
+    for group in trees.values():
+        names = {s["name"] for s in group}
+        assert {"request", "admission.decide", "router.dispatch",
+                "transport.inflight"} <= names
+        root = next(s for s in group if not s["parent"])
+        assert root["name"] == "request"
+        inflight = next(s for s in group
+                        if s["name"] == "transport.inflight")
+        assert inflight["t1"] >= inflight["t0"]
+        assert not inflight["tags"].get("spilled")
+    # a batch span parents to its first member's trace — every one must
+    # land inside SOME request tree (connected, checked by _trees above),
+    # and at least one exists
+    assert any(s["name"] == "replica.batch" for s in spans)
+
+
+def test_process_worker_spans_arrive_via_heartbeat(tracer):
+    r = Router(policy="round_robin", metrics=MetricsRegistry())
+    for _ in range(2):
+        r.add_replica(spec=echo_spec(delay_s=0.001), cfg=PROC_CFG,
+                      transport="process")
+    reqs = [r.submit(i) for i in range(12)]
+    assert [r.wait(q, 30.0) for q in reqs] == [2 * i for i in range(12)]
+    # worker-side replica.batch spans ship over the heartbeat channel
+    spans = _poll_spans(
+        tracer, lambda ss: sum(s["name"] == "replica.batch"
+                               for s in ss) >= 1)
+    rids = {str(w.rid) for w in r.alive_replicas()}
+    r.stop()
+    batch = [s for s in spans if s["name"] == "replica.batch"]
+    assert batch, "no worker spans arrived over heartbeats"
+    # shipped spans are re-homed to the worker's replica id, and their
+    # parent pointers land inside the parent-side trees: still connected
+    assert all(s["replica"] in rids for s in batch), \
+        [(s["replica"], rids) for s in batch]
+    trees = _trees(spans)
+    crossed = [t for t, g in trees.items()
+               if {"request", "replica.batch"} <=
+               {s["name"] for s in g}]
+    assert crossed, "no trace crossed the process boundary intact"
+
+
+def test_respill_keeps_attempts_as_tagged_siblings(tracer):
+    """Soft-crash one of two process replicas mid-load: every request
+    completes (at-least-once), the dead attempt's transport span survives
+    tagged ``spilled`` — and the retry dispatch creates NEW spans tagged
+    with the attempt number instead of merging into the dead ones."""
+    r = Router(policy="round_robin", metrics=MetricsRegistry(),
+               max_retries=3)
+    workers = [r.add_replica(spec=echo_spec(delay_s=0.01), cfg=PROC_CFG,
+                             transport="process")
+               for _ in range(2)]
+    reqs = [r.submit(i) for i in range(30)]
+    time.sleep(0.02)
+    workers[0].inject_crash(soft=True)
+    assert [r.wait(q, 30.0) for q in reqs] == [2 * i for i in range(30)]
+    spans = _poll_spans(
+        tracer, lambda ss: any(s["tags"].get("spilled") for s in ss))
+    r.stop()
+    trees = _trees(spans)                        # still connected
+    spilled = [s for s in spans if s["tags"].get("spilled")]
+    assert spilled, "dead attempt left no spilled-tagged span"
+    retried = [s for s in spans if s["name"] == "transport.inflight"
+               and s["tags"].get("attempt")]
+    assert retried, "respill dispatched no attempt-tagged span"
+    # dead attempt and retry are sibling spans, not one mutated record
+    assert {s["span"] for s in retried}.isdisjoint(
+        {s["span"] for s in spilled})
+    assert len(trees) >= 30
+    # the spill leaves an audit trail in the flight recorder too
+    kinds = {e["kind"] for e in current_recorder().events()}
+    assert "spill" in kinds and "replica_death" in kinds
+
+
+def test_socket_sever_reconnect_trace_and_recorder(tracer):
+    r = Router(policy="round_robin", metrics=MetricsRegistry(),
+               max_retries=5)
+    workers = [r.add_replica(spec=echo_spec(delay_s=0.01), cfg=PROC_CFG,
+                             transport="socket")
+               for _ in range(2)]
+    w = workers[0]
+    assert all(x.wait_ready(30.0) for x in workers)
+    pre = [r.submit(i) for i in range(8)]
+    time.sleep(0.03)
+    w.sever_connection()                  # partition: worker redials
+    post = [r.submit(100 + i) for i in range(8)]
+    for q in pre + post:
+        assert q.done.wait(30.0)
+    assert all(q.status is Status.OK for q in pre + post)
+    # spans recorded by the worker *after* the reconnect still connect to
+    # parent-side trees (the context rode the respill/new offer frames)
+    spans = _poll_spans(
+        tracer, lambda ss: sum(s["name"] == "replica.batch"
+                               for s in ss) >= 2)
+    _trees(spans)
+    kinds = {e["kind"] for e in current_recorder().events()}
+    assert "partition" in kinds           # sever_connection audit event
+    assert "disconnect" in kinds or "reconnect" in kinds
+    r.stop()
+
+
+# ----------------------------------------------------------------------
+def test_chrome_trace_export_schema(tracer):
+    with tracer.span("request", rid=1) as root:
+        tracer.span("engine.prefill", parent=root, bucket=16).end()
+    follower = Tracer(enabled=True, sample_rate=0.0, replica="1")
+    follower.span("replica.batch", parent=root.ctx).end()
+    tracer.ingest(follower.drain(), replica="1")
+    root.end()
+    doc = to_chrome_trace(tracer.spans())
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    evs = doc["traceEvents"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert len(xs) == 3
+    for e in xs:
+        assert {"name", "cat", "ph", "ts", "dur", "pid", "tid",
+                "args"} <= set(e)
+        assert e["dur"] >= 0 and e["ts"] > 0
+        assert e["args"]["trace_id"] and e["args"]["span_id"]
+    # one pid per replica, named via metadata events
+    metas = [e for e in evs if e["ph"] == "M"
+             and e["name"] == "process_name"]
+    assert {m["args"]["name"] for m in metas} == \
+        {"replica:parent", "replica:1"}
+    assert len({e["pid"] for e in xs}) == 2
+    json.loads(json.dumps(doc))           # round-trips as plain JSON
+
+
+def test_prometheus_text_exposition_parses():
+    reg = MetricsRegistry()
+    reg.counter("router.completed").inc(5)
+    reg.gauge("engine.kv_blocks_free").set(37)
+    for v in (0.01, 0.02, 0.02, 0.5, 3.0):
+        reg.histogram("replica.batch_s").observe(v)
+    text = prometheus_text(reg.snapshot())
+    lines = text.strip().splitlines()
+    assert any(line.startswith("# TYPE") for line in lines)
+    sample_re = re.compile(
+        r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? [0-9eE+.inf-]+$')
+    for line in lines:
+        if line.startswith("#"):
+            continue
+        assert sample_re.match(line), f"unparseable sample line: {line}"
+    assert "repro_router_completed 5" in text
+    # histogram: cumulative buckets, +Inf equals count, sum consistent
+    buckets = [(float(m.group(1).replace("+Inf", "inf")),
+                float(m.group(2)))
+               for m in re.finditer(
+                   r'repro_replica_batch_s_bucket\{le="([^"]+)"\} (\S+)',
+                   text)]
+    assert buckets and buckets[-1][0] == float("inf")
+    les = [b[0] for b in buckets]
+    cums = [b[1] for b in buckets]
+    assert les == sorted(les) and cums == sorted(cums)
+    assert cums[-1] == 5.0
+    count = float(re.search(
+        r"repro_replica_batch_s_count (\S+)", text).group(1))
+    total = float(re.search(
+        r"repro_replica_batch_s_sum (\S+)", text).group(1))
+    assert count == 5.0 and total == pytest.approx(3.55, rel=1e-6)
+
+
+# ----------------------------------------------------------------------
+def test_replica_kill_dumps_flight_events_to_artifact_store(tracer):
+    """Killing a worker mid-batch must leave a crash dump in the artifact
+    store holding the batch's audit trail: the submit and the spill (with
+    the lost rids), plus whatever the worker shipped before dying."""
+    r = Router(policy="round_robin", metrics=MetricsRegistry(),
+               max_retries=3)
+    workers = [r.add_replica(spec=echo_spec(delay_s=0.01), cfg=PROC_CFG,
+                             transport="process")
+               for _ in range(2)]
+    reqs = [r.submit(i) for i in range(20)]
+    time.sleep(0.03)
+    workers[0].inject_crash()             # SIGKILL mid-batch
+    for q in reqs:
+        assert q.done.wait(30.0)
+    assert all(q.status is Status.OK for q in reqs)
+    assert workers[0].flight_dumps, "replica death produced no dump"
+    doc = json.loads(default_flight_store().read_bytes(
+        workers[0].flight_dumps[-1]))
+    assert doc["rid"] == workers[0].rid
+    kinds = [e["kind"] for e in doc["parent_events"]]
+    assert "submit" in kinds and "replica_death" in kinds
+    spill = next(e for e in doc["parent_events"] if e["kind"] == "spill")
+    assert spill["rids"], "dump must name the spilled batch's requests"
+    spilled_rids = set(spill["rids"])
+    assert spilled_rids <= {q.rid for q in reqs}
+    r.stop()
+
+
+def test_tracing_disabled_leaves_no_spans_and_no_wire_context():
+    """The default (null) tracer end to end: no spans accumulate and the
+    wire frames carry no context — the observability layer must vanish
+    when off."""
+    assert current_tracer().span("request") is NULL_SPAN
+    r = Router(policy="round_robin", metrics=MetricsRegistry())
+    r.add_replica(spec=echo_spec(delay_s=0.001), cfg=PROC_CFG,
+                  transport="process")
+    reqs = [r.submit(i) for i in range(6)]
+    assert [r.wait(q, 30.0) for q in reqs] == [2 * i for i in range(6)]
+    assert all(q.trace_span is None and q.trace_ctx is None for q in reqs)
+    r.stop()
+    assert current_tracer().spans() == []

@@ -366,6 +366,85 @@ def test_merge_snapshots_bucketed_percentiles_match_ground_truth():
     assert m2["x.p50"] == pytest.approx(2000.0)  # true combined median
 
 
+def test_merge_snapshots_mixed_bucketed_and_legacy_is_conservative():
+    """One worker ships bucket counts, another (older build) ships only
+    count/mean/percentiles for the *same* stem: recomputing percentiles
+    from the buckets alone would silently drop the legacy worker's
+    observations from the estimate.  The merge must detect the mix and
+    fall back to the conservative max-merge for that stem — while a stem
+    that is bucketed everywhere still recomputes — and stay deterministic
+    across input order."""
+    bucketed = MetricsRegistry()
+    for _ in range(100):
+        bucketed.histogram("replica.batch_s").observe(0.01)
+    for _ in range(50):
+        bucketed.histogram("clean.stem").observe(0.02)
+    legacy = {"replica.batch_s.count": 900.0,
+              "replica.batch_s.mean": 5.0,
+              "replica.batch_s.p50": 5.0, "replica.batch_s.p95": 8.0,
+              "replica.batch_s.p99": 9.0}
+    out = merge_snapshots(bucketed.snapshot(), [legacy])
+    # counts/means always merge exactly
+    assert out["replica.batch_s.count"] == 1000.0
+    assert out["replica.batch_s.mean"] == pytest.approx(
+        (100 * 0.01 + 900 * 5.0) / 1000.0)
+    # the legacy worker dominates the distribution (900 of 1000 samples at
+    # ~5s); a bucket-only recompute would report ~0.01s.  Conservative
+    # max-merge keeps its percentiles on the board.
+    assert out["replica.batch_s.p50"] == pytest.approx(5.0)
+    assert out["replica.batch_s.p95"] == pytest.approx(8.0)
+    # the all-bucketed stem still gets the true recompute
+    assert out["clean.stem.count"] == 50.0
+    assert 0.02 / (10 ** 0.25) <= out["clean.stem.p50"] <= 0.02 * 10 ** 0.25
+    # deterministic under worker order (dict/set iteration must not leak)
+    out2 = merge_snapshots(bucketed.snapshot(), [dict(legacy)])
+    assert out == out2
+    # an *empty* bucketed snapshot for the stem (count 0, no observations
+    # yet) must not demote an otherwise-bucketed merge to legacy mode
+    empty = MetricsRegistry()
+    empty.histogram("clean.stem")               # registered, never observed
+    out3 = merge_snapshots(bucketed.snapshot(), [empty.snapshot()])
+    assert 0.02 / (10 ** 0.25) <= out3["clean.stem.p50"] <= 0.02 * 10 ** 0.25
+
+
+def test_histogram_stats_are_torn_read_free():
+    """count/sum/mean and snapshot() must come from one consistent view:
+    under concurrent observers, mean*count == sum exactly and the bucket
+    counts total the count — a torn read (count bumped, sum not yet) shows
+    up as a violated identity."""
+    reg = MetricsRegistry()
+    h = reg.histogram("t.x")
+    stop = threading.Event()
+
+    def writer():
+        while not stop.is_set():
+            h.observe(0.125)                   # exact in binary: sum is
+                                               # count * 0.125 precisely
+
+    threads = [threading.Thread(target=writer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        for _ in range(500):
+            st = h.stats()
+            assert st["sum"] == st["count"] * 0.125, \
+                f"torn read: count={st['count']} sum={st['sum']}"
+            if st["count"]:
+                assert st["mean"] == 0.125
+            assert sum(st["buckets"]) == st["count"]
+            snap = reg.snapshot()
+            total = sum(v for k, v in snap.items()
+                        if k.startswith("t.x.le"))
+            assert total == snap["t.x.count"]
+            assert snap["t.x.mean"] * snap["t.x.count"] == \
+                snap["t.x.count"] * 0.125
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert h.sum == h.count * 0.125 and h.mean() == 0.125
+
+
 def test_cluster_snapshot_merges_worker_buckets_over_heartbeat():
     """End to end over a real remote worker: the worker's bucket counts
     arrive via the heartbeat channel and the router's cluster_snapshot
