@@ -29,30 +29,72 @@ from benchmarks.common import bench_json_path, emit, write_bench_json
 JSON_PATH = bench_json_path("BENCH_serving.json")
 
 
-def _bench_engine(params, cfg, scfg, prompts, max_new: int):
+def _bench_engine(params, cfg, scfg, prompts, max_new: int, reps: int = 5):
     """Tokens/s and p50 latency through one engine.
 
-    The identical workload runs twice and the second (warm) pass is timed:
-    a serving engine compiles each shape once per deployment and then
-    serves millions of tokens, so steady-state throughput — not first-call
-    XLA compilation — is the quantity every replica-count number scales."""
+    The identical workload runs once unmeasured (warm), then ``reps``
+    timed passes; the best pass is reported.  A serving engine compiles
+    each shape once per deployment and then serves millions of tokens,
+    so steady-state throughput — not first-call XLA compilation, nor a
+    pass perturbed by allocator growth or OS scheduling on a shared
+    box — is the quantity every replica-count number scales.  Min (not
+    mean) because the noise here is strictly additive."""
     from repro.serving import Engine
 
     eng = Engine(params, cfg, scfg)
     warm = [eng.submit(p, max_new=max_new) for p in prompts]
     eng.run_until_drained()
     assert all(r.done for r in warm)
-    eng.finished.clear()
-    reqs = [eng.submit(p, max_new=max_new) for p in prompts]
-    t0 = time.perf_counter()
-    eng.run_until_drained()
-    wall = time.perf_counter() - t0
-    assert all(r.done for r in reqs)
+    best = None
+    for _ in range(reps):
+        eng.finished.clear()
+        reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+        t0 = time.perf_counter()
+        eng.run_until_drained()
+        wall = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        if best is None or wall < best[0]:
+            best = (wall, reqs)
+    wall, reqs = best
     toks = sum(r.decoded for r in reqs)
     lat = sorted(r.done_t - r.submit_t for r in reqs)
     return {"tok_per_s": toks / wall, "decoded_tokens": toks,
             "wall_s": wall, "p50_lat_s": lat[len(lat) // 2],
             "_tokens": [r.out_tokens for r in reqs]}
+
+
+def _bench_paired(engines, prompts, max_new: int, reps: int = 10):
+    """Interleave timed passes of several live engines rep-by-rep and
+    report each engine's best pass.
+
+    Comparing two configs by timing one engine's reps and then the
+    other's lets minutes-scale load drift on a shared box land entirely
+    on one side — the ratio then measures the box, not the engines.
+    Alternating passes makes every config sample the same noise windows,
+    so per-config minima stay comparable."""
+    best = {}
+    for label, eng in engines:
+        warm = [eng.submit(p.copy(), max_new=max_new) for p in prompts]
+        eng.run_until_drained()
+        assert all(r.done for r in warm)
+    for _ in range(reps):
+        for label, eng in engines:
+            eng.finished.clear()
+            reqs = [eng.submit(p.copy(), max_new=max_new) for p in prompts]
+            t0 = time.perf_counter()
+            eng.run_until_drained()
+            wall = time.perf_counter() - t0
+            assert all(r.done for r in reqs)
+            if label not in best or wall < best[label][0]:
+                best[label] = (wall, reqs)
+    out = {}
+    for label, (wall, reqs) in best.items():
+        toks = sum(r.decoded for r in reqs)
+        lat = sorted(r.done_t - r.submit_t for r in reqs)
+        out[label] = {"tok_per_s": toks / wall, "decoded_tokens": toks,
+                      "wall_s": wall, "p50_lat_s": lat[len(lat) // 2],
+                      "_tokens": [r.out_tokens for r in reqs]}
+    return out
 
 
 def _drain_tracking_concurrency(eng, prompts, max_new: int):
@@ -100,15 +142,20 @@ def run_paged(quick: bool = False, json_path: str = JSON_PATH,
     prompts = [rng.randint(0, cfg.vocab,
                            size=rng.randint(5, 13)).astype(np.int32)
                for _ in range(n_req)]
-    res = {}
+    engines = [
+        ("dense_fused", Engine(params, cfg,
+                               ServeConfig(max_len=max_len,
+                                           slots=base_slots,
+                                           sync_every=sync_every))),
+        ("paged", Engine(params, cfg,
+                         ServeConfig(max_len=max_len, slots=base_slots,
+                                     sync_every=sync_every, paged=True,
+                                     block_size=bs)))]
+    res = _bench_paired(engines, prompts, max_new,
+                        reps=5 if quick else 15)
+    del engines
     toks_by_mode = {}
-    for label, scfg in (
-            ("dense_fused", ServeConfig(max_len=max_len, slots=base_slots,
-                                        sync_every=sync_every)),
-            ("paged", ServeConfig(max_len=max_len, slots=base_slots,
-                                  sync_every=sync_every, paged=True,
-                                  block_size=bs))):
-        res[label] = _bench_engine(params, cfg, scfg, prompts, max_new)
+    for label in ("dense_fused", "paged"):
         toks_by_mode[label] = res[label].pop("_tokens")
         emit(f"serving/paged/{label}",
              1e6 * res[label]["wall_s"] / max(res[label]["decoded_tokens"], 1),
@@ -137,15 +184,17 @@ def run_paged(quick: bool = False, json_path: str = JSON_PATH,
         eng = Engine(params, cfg, scfg)
         sess = [rng.randint(0, cfg.vocab, size=sess_prompt).astype(np.int32)
                 for _ in range(slots)]
-        try:
-            reqs, peak = _drain_tracking_concurrency(eng, sess, sess_new)
-        except Exception as e:          # pool exhausted mid-decode
-            capacity[f"x{mult}"] = {"sustained": False, "error": repr(e)}
-            break
+        # pool exhaustion mid-decode no longer raises: the engine finishes
+        # the victim with finish_reason="kv_pool_exhausted" and keeps the
+        # rest of the batch running, so the sweep reads the counter instead
+        # of catching an exception
+        reqs, peak = _drain_tracking_concurrency(eng, sess, sess_new)
         deferred = eng.metrics.counter("engine.admit_deferred_kv").value
-        sustained = peak == slots and deferred == 0
+        exhausted = eng.metrics.counter("engine.kv_pool_exhausted").value
+        sustained = peak == slots and deferred == 0 and exhausted == 0
         capacity[f"x{mult}"] = {"slots": slots, "peak_concurrent": peak,
                                 "admit_deferred": int(deferred),
+                                "pool_exhausted": int(exhausted),
                                 "sustained": bool(sustained)}
         if sustained:
             best = max(best, peak)
@@ -163,7 +212,7 @@ def run_paged(quick: bool = False, json_path: str = JSON_PATH,
     tails = [rng.randint(0, cfg.vocab, size=8).astype(np.int32)
              for _ in range(n_sess)]
     shared = [np.concatenate([common, t]) for t in tails]   # 80% common
-    prefix_res = {}
+    engines = {}
     for label, use_cache in (("prefix_cache", True), ("no_cache", False)):
         scfg = ServeConfig(max_len=max_len, slots=base_slots,
                            sync_every=sync_every, paged=True, block_size=bs,
@@ -171,31 +220,108 @@ def run_paged(quick: bool = False, json_path: str = JSON_PATH,
         eng = Engine(params, cfg, scfg)
         warm = [eng.submit(p.copy(), max_new=8) for p in shared]
         eng.run_until_drained()
-        # steady state: the cache is populated (and the jits warm) — the
-        # timed pass is what a long-lived service sees per request wave
-        hit0 = eng.metrics.counter("engine.prefix_hit_blocks").value
-        look0 = eng.metrics.counter("engine.prefix_lookup_blocks").value
-        save0 = eng.metrics.counter("engine.prefill_tokens_saved").value
-        t0 = time.perf_counter()
-        reqs = [eng.submit(p.copy(), max_new=8) for p in shared]
-        eng.run_until_drained()
-        wall = time.perf_counter() - t0
-        hit = eng.metrics.counter("engine.prefix_hit_blocks").value - hit0
-        looked = eng.metrics.counter(
-            "engine.prefix_lookup_blocks").value - look0
+        assert all(r.done for r in warm)
+        engines[label] = eng
+    # steady state: the cache is populated (and the jits warm) — the timed
+    # passes are what a long-lived service sees per request wave.  The two
+    # modes interleave inside each rep (same slice of machine time) and
+    # min-wall is the noise-robust estimator.
+    prefix_res = {}
+    reps = 3 if quick else 5
+    walls = {label: [] for label in engines}
+    for _ in range(reps):
+        for label, eng in engines.items():
+            eng.finished.clear()
+            reqs = [eng.submit(p.copy(), max_new=8) for p in shared]
+            t0 = time.perf_counter()
+            eng.run_until_drained()
+            walls[label].append(time.perf_counter() - t0)
+            assert all(r.done for r in reqs)
+    for label, eng in engines.items():
+        hit = eng.metrics.counter("engine.prefix_hit_blocks").value
+        looked = eng.metrics.counter("engine.prefix_lookup_blocks").value
         prefix_res[label] = {
-            "wall_s": wall,
+            "wall_s": min(walls[label]),
+            "wall_all_s": walls[label],
             "prefix_hit_rate": hit / looked if looked else 0.0,
             "prefill_tokens_saved":
-                eng.metrics.counter("engine.prefill_tokens_saved").value -
-                save0,
+                eng.metrics.counter("engine.prefill_tokens_saved").value,
         }
-        del warm, reqs
+    # the cache must never cost throughput: hashing is memoized off the
+    # admit path (kvpool.hash_token_blocks_memo), so a cache-enabled wave
+    # does strictly less prefill work than a cold one (10% timer slack)
+    assert prefix_res["prefix_cache"]["wall_s"] <= \
+        1.10 * prefix_res["no_cache"]["wall_s"], \
+        (f"prefix cache slowed the serving wave: "
+         f"{prefix_res['prefix_cache']['wall_s']:.4f}s vs "
+         f"{prefix_res['no_cache']['wall_s']:.4f}s without the cache")
     emit("serving/paged/shared_prefix", 0.0,
          f"hit_rate={prefix_res['prefix_cache']['prefix_hit_rate']:.2f};"
          f"tokens_saved="
          f"{prefix_res['prefix_cache']['prefill_tokens_saved']:.0f}")
     out["shared_prefix"] = prefix_res
+
+    # -- 4. speculative multi-token decode -------------------------------
+    # n-gram drafting only pays when history predicts the future, and the
+    # uniform-random prompts above have no such structure.  This scenario
+    # serves *continuations*: a probe generation produces one long greedy
+    # stream, and each request is a deep prefix cut of it asked to keep
+    # going — the regime speculation targets (templated / re-submitted
+    # generations), where the bigram draft table is highly predictive.
+    from repro.serving import make_engine_fns
+
+    spec_len = 256
+    n_cont = 4 if quick else 8
+    cont_new = 48 if quick else 96
+    probe_scfg = ServeConfig(max_len=spec_len, slots=1,
+                             sync_every=sync_every, paged=True,
+                             block_size=bs)
+    probe_eng = Engine(params, cfg, probe_scfg)
+    # dedicated probe seed: the greedy stream must settle into its cycle
+    # before the cut region for the draft to have anything to latch onto
+    # (the seed is pinned so the scenario doesn't inherit whatever rng
+    # state the earlier parts left behind)
+    seed = np.random.RandomState(42).randint(
+        0, cfg.vocab, size=8).astype(np.int32)
+    pr = probe_eng.submit(seed, max_new=140)
+    probe_eng.run_until_drained()
+    full = np.concatenate([seed, np.asarray(pr.out_tokens, np.int32)])
+    cuts = [full[:120 + 3 * i].copy() for i in range(n_cont)]
+    del probe_eng
+    spec_engines = []
+    for label, speculative in (("paged", False), ("spec", True)):
+        scfg = ServeConfig(max_len=spec_len, slots=base_slots,
+                           sync_every=sync_every, paged=True, block_size=bs,
+                           speculative=speculative)
+        spec_engines.append((label, Engine(params, cfg, scfg,
+                                           shared_fns=make_engine_fns(
+                                               cfg, scfg))))
+    spec_res = _bench_paired(spec_engines, cuts, cont_new,
+                             reps=3 if quick else 8)
+    spec_toks = {label: spec_res[label].pop("_tokens")
+                 for label, _ in spec_engines}
+    seng = dict(spec_engines)["spec"]
+    acc = seng.metrics.counter("engine.spec_accepted").value
+    prop = seng.metrics.counter("engine.spec_proposed").value
+    spec_res["spec"]["accepted"] = int(acc)
+    spec_res["spec"]["proposed"] = int(prop)
+    spec_res["spec"]["accept_rate"] = acc / prop if prop else 0.0
+    spec_res["spec"]["speculative"] = bool(seng.speculative)
+    del spec_engines, seng
+    for label in ("paged", "spec"):
+        emit(f"serving/spec/{label}",
+             1e6 * spec_res[label]["wall_s"]
+             / max(spec_res[label]["decoded_tokens"], 1),
+             f"tok_per_s={spec_res[label]['tok_per_s']:.1f}")
+    assert spec_toks["spec"] == spec_toks["paged"], \
+        "speculative decode lost token parity with the paged oracle"
+    spec_res["spec_effective_tok_ratio"] = (
+        spec_res["spec"]["tok_per_s"] / spec_res["paged"]["tok_per_s"])
+    emit("serving/spec/effective_ratio", 0.0,
+         f"ratio={spec_res['spec_effective_tok_ratio']:.2f}x;"
+         f"accept={spec_res['spec']['accept_rate']:.2f}")
+    out["speculative"] = spec_res
+    out["spec_effective_tok_ratio"] = spec_res["spec_effective_tok_ratio"]
 
     if json_path:
         mode = "paged_quick" if quick else "paged"
@@ -311,7 +437,8 @@ def run(quick: bool = False, json_path: str = JSON_PATH,
             ("reference", ServeConfig(fused=False, **common)),
             ("fused", ServeConfig(fused=True, sync_every=sync_every,
                                   **common))):
-        res[label] = _bench_engine(params, cfg, scfg, prompts, max_new)
+        res[label] = _bench_engine(params, cfg, scfg, prompts, max_new,
+                                   reps=2)
         res[label].pop("_tokens")
         emit(f"serving/engine/{label}",
              1e6 * res[label]["wall_s"] / max(res[label]["decoded_tokens"], 1),

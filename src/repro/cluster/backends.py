@@ -121,7 +121,8 @@ def build_engine(arch: str = "internlm2-1.8b", max_len: int = 64,
                  sync_every: int = 8, temperature: float = 0.0,
                  prefill_bucketing: bool = True, paged: bool = False,
                  block_size: int = 16, kv_blocks: int = 0,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, speculative: bool = False,
+                 spec_draft: int = 3):
     """One continuous-batching LM engine.  Weights come from
     ``weights_path`` (a ``checkpoint.Checkpointer`` directory) when given,
     else from deterministic init at ``seed`` — either way the worker holds
@@ -149,7 +150,8 @@ def build_engine(arch: str = "internlm2-1.8b", max_len: int = 64,
                        sync_every=sync_every, temperature=temperature,
                        prefill_bucketing=prefill_bucketing, paged=paged,
                        block_size=block_size, kv_blocks=kv_blocks,
-                       prefix_cache=prefix_cache)
+                       prefix_cache=prefix_cache, speculative=speculative,
+                       spec_draft=spec_draft)
     # inside a remote worker, report into the registry its heartbeats
     # ship — that is how engine.* counters and the paged engine's
     # kv_blocks_* gauges reach the router's admission headroom gate

@@ -157,17 +157,33 @@ class MetricsRegistry:
     def _key(self, name: str) -> str:
         return f"{self.prefix}{name}" if self.prefix else name
 
+    # get-or-create without eagerly constructing the default:
+    # ``setdefault(k, Histogram())`` would build (and discard) a fresh
+    # metric on every hot-path lookup — Histogram.__init__ alone seeds a
+    # RandomState, ~0.1ms per call inside the serving engine's finish path
     def counter(self, name: str) -> Counter:
+        k = self._key(name)
         with self._lock:
-            return self._counters.setdefault(self._key(name), Counter())
+            c = self._counters.get(k)
+            if c is None:
+                c = self._counters[k] = Counter()
+            return c
 
     def gauge(self, name: str) -> Gauge:
+        k = self._key(name)
         with self._lock:
-            return self._gauges.setdefault(self._key(name), Gauge())
+            g = self._gauges.get(k)
+            if g is None:
+                g = self._gauges[k] = Gauge()
+            return g
 
     def histogram(self, name: str, cap: int = 4096) -> Histogram:
+        k = self._key(name)
         with self._lock:
-            return self._hists.setdefault(self._key(name), Histogram(cap))
+            h = self._hists.get(k)
+            if h is None:
+                h = self._hists[k] = Histogram(cap)
+            return h
 
     @contextmanager
     def timer(self, name: str):

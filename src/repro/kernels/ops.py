@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.decode_attention import decode_attention_bhd
-from repro.kernels.paged_attention import paged_decode_attention_bkgd
+from repro.kernels.paged_attention import (paged_decode_attention_bkgd,
+                                           paged_extend_attention_bkgd)
 from repro.kernels.pair_score import pair_score_blocked
 from repro.kernels.ssm_scan import ssm_scan_blocked
 
@@ -59,6 +60,27 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
                                       k_pool, v_pool, block_tables, lengths,
                                       interpret=interpret)
     return out.reshape(B, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_extend_attention(q, k_pool, v_pool, block_tables, pos0, *,
+                           interpret: bool = False):
+    """q: (B,S,H,hd) suffix queries at absolute positions ``pos0 + s``;
+    k_pool/v_pool: (num_blocks, bs, KV, hd) shared pools (suffix K/V
+    already scattered in); block_tables: (B, nb); pos0: (B,)
+    -> (B,S,H,hd).
+
+    The paged-prefill/extend sibling of :func:`paged_decode_attention`:
+    online softmax over the prefix blocks + in-flight suffix, block
+    tables scalar-prefetched, masked like the dense oracle
+    (key p visible to query s iff p <= pos0 + s)."""
+    B, S, H, hd = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    out = paged_extend_attention_bkgd(q.reshape(B, S, KV, G, hd),
+                                      k_pool, v_pool, block_tables, pos0,
+                                      interpret=interpret)
+    return out.reshape(B, S, H, hd)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))

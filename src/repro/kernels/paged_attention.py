@@ -116,3 +116,108 @@ def paged_decode_attention_bkgd(q, k_pool, v_pool, block_tables, lengths, *,
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
       q, k_pool, v_pool)
+
+
+def _paged_extend_kernel(bt_ref, pos0_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, bs: int, S: int, G: int,
+                         scale: float):
+    """Grid (B, KV, nb); the last dimension is sequential per (b, h).
+
+    The extend sibling of :func:`_paged_decode_kernel`: ``S`` suffix
+    queries per sequence (absolute positions ``pos0[b] + s``) run online
+    softmax over the prefix blocks *and* the in-flight suffix (already
+    scattered into the pool), masked causally over absolute positions —
+    key position p is visible to query s iff ``p <= pos0[b] + s``, the
+    dense oracle's mask.  Scratch rows are the S*G flattened
+    (query, group-head) pairs carried across j.
+
+    q_ref: (1, S, 1, G, hd); k_ref/v_ref: (1, bs, 1, hd) — pool block
+    bt[b, j]; o_ref: (1, S, 1, G, hd).
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    n_blocks = pl.num_programs(2)
+    p0 = pos0_ref[b]
+    hd = q_ref.shape[-1]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[:] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[:] = jnp.zeros_like(l_ref)
+        acc_ref[:] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j * bs < p0 + S)
+    def _block():
+        q = q_ref[0, :, 0].astype(jnp.float32).reshape(S * G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)                # (bs, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        key_pos = j * bs + jax.lax.broadcasted_iota(
+            jnp.int32, (S * G, bs), 1)
+        q_pos = p0 + jax.lax.broadcasted_iota(
+            jnp.int32, (S * G, bs), 0) // G
+        s = jnp.where(key_pos <= q_pos, s, NEG_INF)           # (S*G, bs)
+        m_prev = m_ref[:, :1]                                 # (S*G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, :1] = l_ref[:, :1] * corr + \
+            jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, :, 0].astype(jnp.float32)                # (bs, hd)
+        acc_ref[:] = acc_ref[:] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[:, :1] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finish():
+        o_ref[0, :, 0] = (acc_ref[:] /
+                          jnp.maximum(l_ref[:, :1], 1e-30)
+                          ).reshape(S, G, hd).astype(o_ref.dtype)
+
+
+def paged_extend_attention_bkgd(q, k_pool, v_pool, block_tables, pos0, *,
+                                interpret: bool = False):
+    """q: (B, S, KV, G, hd) suffix queries; k_pool/v_pool:
+    (num_blocks, bs, KV, hd); block_tables: (B, nb) int32; pos0: (B,)
+    int32 absolute position of each row's first query
+    -> (B, S, KV, G, hd).  Suffix K/V must already be scattered into the
+    pool (the kernel reads them back through the table like any prefix
+    block — one code path, no separate in-flight operand)."""
+    B, S, KV, G, hd = q.shape
+    bs = k_pool.shape[1]
+    nb = block_tables.shape[1]
+    kernel = functools.partial(_paged_extend_kernel, bs=bs, S=S, G=G,
+                               scale=1.0 / math.sqrt(hd))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # block_tables, pos0
+        grid=(B, KV, nb),
+        in_specs=[
+            pl.BlockSpec((1, S, 1, G, hd),
+                         lambda b, h, j, bt, p0: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, bt, p0: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, bt, p0: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, S, 1, G, hd),
+                               lambda b, h, j, bt, p0: (b, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((S * G, 128), jnp.float32),   # running max (col 0)
+            pltpu.VMEM((S * G, 128), jnp.float32),   # running sum (col 0)
+            pltpu.VMEM((S * G, hd), jnp.float32),    # output accumulator
+        ],
+    )
+    try:
+        cparams = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except Exception:
+        cparams = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, KV, G, hd), q.dtype),
+        compiler_params=cparams,
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos0.astype(jnp.int32),
+      q, k_pool, v_pool)

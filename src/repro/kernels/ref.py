@@ -69,6 +69,33 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths):
     return decode_attention_ref(q, k, v, lengths)
 
 
+def paged_extend_attention_ref(q, k_pool, v_pool, block_tables, pos0):
+    """Suffix-extend attention through a block table.
+
+    q: (B,S,H,hd) queries at absolute positions ``pos0 + s``; pools and
+    tables as in :func:`paged_decode_attention_ref`; pos0: (B,) absolute
+    position of each row's first query.  Key at virtual position p is
+    visible to query s iff ``p <= pos0 + s`` — causal over absolute
+    positions, exactly the dense extend mask.  Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    bs = k_pool.shape[1]
+    nb = block_tables.shape[1]
+    KV = k_pool.shape[2]
+    G = H // KV
+    k = k_pool[block_tables].reshape(B, nb * bs, *k_pool.shape[2:])
+    v = v_pool[block_tables].reshape(B, nb * bs, *v_pool.shape[2:])
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    L = nb * bs
+    positions = pos0[:, None] + jnp.arange(S)[None, :]
+    ok = jnp.arange(L)[None, None, :] <= positions[:, :, None]
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, v.shape[-1]).astype(q.dtype)
+
+
 def pair_score_ref(claims, evidence, W, w_c, w_e, bias):
     """The paper's phase-2 Cartesian scoring: (N,d) x (M,d) -> (N,M)."""
     bil = (claims.astype(jnp.float32) @ W.astype(jnp.float32)) @ evidence.astype(jnp.float32).T

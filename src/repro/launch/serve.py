@@ -77,6 +77,13 @@ def main(argv=None):
     ap.add_argument("--kv-blocks", type=int, default=0,
                     help="usable pool blocks (paged); 0 = dense-equivalent "
                          "slots * max_len/block_size")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative multi-token decode on the paged path: "
+                         "an n-gram draft proposes spec-draft tokens per "
+                         "step and one batched paged extend verifies them "
+                         "(greedy only; requires --paged)")
+    ap.add_argument("--spec-draft", type=int, default=3,
+                    help="draft tokens proposed per speculative step")
     ap.add_argument("--kv-headroom", type=float, default=0.0,
                     help="admission: shed when the cluster's free KV-block "
                          "fraction drops below this (0 disables)")
@@ -121,7 +128,9 @@ def main(argv=None):
     scfg = ServeConfig(max_len=args.max_len, slots=args.slots,
                        fused=args.fused, sync_every=args.sync_every,
                        temperature=args.temperature, paged=args.paged,
-                       block_size=args.block_size, kv_blocks=args.kv_blocks)
+                       block_size=args.block_size, kv_blocks=args.kv_blocks,
+                       speculative=args.speculative,
+                       spec_draft=args.spec_draft)
     rng = np.random.RandomState(args.seed)
     prompts = [rng.randint(0, cfg.vocab,
                            size=rng.randint(4, 16)).astype(np.int32)
@@ -155,7 +164,9 @@ def main(argv=None):
                                fused=args.fused, sync_every=args.sync_every,
                                temperature=args.temperature,
                                paged=args.paged, block_size=args.block_size,
-                               kv_blocks=args.kv_blocks)
+                               kv_blocks=args.kv_blocks,
+                               speculative=args.speculative,
+                               spec_draft=args.spec_draft)
             for _ in range(args.replicas):
                 router.add_replica(spec=spec, cfg=rcfg,
                                    transport=args.transport)

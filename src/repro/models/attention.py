@@ -408,6 +408,32 @@ def attn_decode(params, x, cache, pos, cfg, *, kind: str):
     return out, cache
 
 
+def attn_extend(params, x, cache, pos0, cfg, *, kind: str):
+    """Dense-cache analogue of :func:`paged_attn_extend`: append ``S``
+    tokens at absolute positions ``pos0 + j`` (per row) and attend
+    causally over absolute positions.  The speculative verify step runs
+    this over gather-hoisted virtual caches — one batched extend scores a
+    whole draft window.  KV writes use ``mode="drop"`` so a frozen slot's
+    window hanging past the cache edge writes nothing (a clamped write
+    would corrupt the last live row)."""
+    B, S, _ = x.shape
+    rope_base = cfg.rope_local_base if kind == "local" else cfg.rope_base
+    positions = pos0[:, None] + jnp.arange(S)[None, :]       # (B, S)
+    q, k, v = _project_qkv(params, x, x, cfg, positions, positions,
+                           rope_base)
+    L = cache["k"].shape[1]
+    bidx = jnp.arange(B)[:, None]
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[bidx, positions].set(
+        k.astype(cache["k"].dtype), mode="drop")
+    cache["v"] = cache["v"].at[bidx, positions].set(
+        v.astype(cache["v"].dtype), mode="drop")
+    valid = jnp.arange(L)[None, None, :] <= positions[:, :, None]
+    out = mha(q, cache["k"], cache["v"], valid[:, None], cfg.attn_softcap)
+    out = out.reshape(B, S, -1) @ params["wo"]
+    return out, cache
+
+
 def prefill_into_cache(params_unused, k, v, cache, cfg, *, kind: str):
     """Write full-seq K/V (B,S,KV,hd) into a fresh cache."""
     S = k.shape[1]
@@ -518,11 +544,19 @@ def paged_attn_extend(params, x, cache, pos0, bt, cfg, *, kind: str):
     q, k, v = _project_qkv(params, x, x, cfg, positions, positions,
                            rope_base)
     cache = _paged_scatter(cache, k, v, positions, bt)
-    kg, vg = _paged_gather(cache, bt)
-    L = kg.shape[1]
-    # causal over absolute positions: cache index l holds virtual pos l
-    valid = jnp.arange(L)[None, None, :] <= positions[:, :, None]
-    out = mha(q, kg, vg, valid[:, None], cfg.attn_softcap)
+    if cfg.use_kernels:
+        # Pallas sibling of the decode kernel: online softmax over prefix
+        # blocks + the just-scattered suffix, block tables scalar-prefetched
+        # — no dense per-sequence materialization
+        from repro.kernels import ops as kops
+        out = kops.paged_extend_attention(q, cache["kp"], cache["vp"], bt,
+                                          pos0, interpret=True)
+    else:
+        kg, vg = _paged_gather(cache, bt)
+        L = kg.shape[1]
+        # causal over absolute positions: cache index l holds virtual pos l
+        valid = jnp.arange(L)[None, None, :] <= positions[:, :, None]
+        out = mha(q, kg, vg, valid[:, None], cfg.attn_softcap)
     out = out.reshape(B, S, -1) @ params["wo"]
     return out, cache
 

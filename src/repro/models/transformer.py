@@ -170,11 +170,15 @@ def apply_layer(p, x, cfg, kind: str, mode: str, cache, pos, bt=None):
         if mode == "decode" and attn.is_paged_cache(cache):
             mix, cache = attn.paged_attn_decode(p["mixer"], h, cache, pos,
                                                 bt, cfg, kind=akind)
-        elif mode == "extend":
+        elif mode == "extend" and attn.is_paged_cache(cache):
             # paged suffix prefill: S tokens appended at absolute position
             # `pos` (per row), attending through the block table
             mix, cache = attn.paged_attn_extend(p["mixer"], h, cache, pos,
                                                 bt, cfg, kind=akind)
+        elif mode == "extend":
+            # dense-cache extend: the speculative verify window
+            mix, cache = attn.attn_extend(p["mixer"], h, cache, pos, cfg,
+                                          kind=akind)
         elif mode == "decode":
             mix, cache = attn.attn_decode(p["mixer"], h, cache, pos, cfg, kind=akind)
         elif use_seqshard:
@@ -401,6 +405,109 @@ def decode_fused(params, cfg, tokens, caches, pos, *, temperature: float = 0.0,
     return sample_tokens(logits[:, 0], temperature, rng), caches
 
 
+# ----------------------------------------------------------------------
+# Paged virtual caches.  The fused K-step loop over a paged pool used to
+# resolve the block table on EVERY decode step (a scatter + full gather
+# per layer per step, all inside the jit).  Hoisting the indirection out
+# of the loop — materialize each sequence's blocks once as a dense-layout
+# "virtual" cache, run the unchanged dense loop body on it, scatter back
+# only the rows the loop can have written — removes all per-step table
+# resolution at bitwise-identical math: the gather is an exact copy, and
+# rows the two layouts zero-fill differently are masked out of the
+# softmax either way (exp(NEG_INF - m) == 0.0 exactly).  Bonus: the
+# virtual width is the engine's *bucketed live-sequence width* (nb * bs
+# for the widest table in use), not max_len, so attention reads shrink
+# with the actual context — which is how paged decode gets to beat dense.
+
+def gather_paged_virtual(caches, bt):
+    """Materialize per-slot dense caches from the block pools.
+
+    ``bt (B, nb)`` may be narrower than the full table (width-bucketed by
+    the engine); the result leaves are ``{"k","v"} (R, B, nb*bs, KV, hd)``
+    — exactly the layout :func:`init_caches` builds, so every dense
+    decode path runs on them unchanged."""
+    B, nb = bt.shape
+    out = []
+    for gc in caches:
+        row = []
+        for c in gc:
+            bs = c["kp"].shape[2]
+            row.append({
+                "k": c["kp"][:, bt].reshape(c["kp"].shape[0], B, nb * bs,
+                                            *c["kp"].shape[3:]),
+                "v": c["vp"][:, bt].reshape(c["vp"].shape[0], B, nb * bs,
+                                            *c["vp"].shape[3:]),
+            })
+        out.append(row)
+    return out
+
+
+def refresh_paged_virtual(virt, caches, bt_rows, slot_idx):
+    """Surgically re-gather ``len(slot_idx)`` slots of a resident virtual
+    cache from the block pools, leaving every other slot's rows untouched.
+
+    The admit path uses this instead of a full regather: freshly admitted
+    slots' pool rows were just written by the admit prefill, while the
+    *other* slots' resident rows may be ahead of the pool (lazy
+    writeback) and must NOT be re-read from it.  ``bt_rows (n, vw)`` is
+    each admitted slot's table cut to the resident width; duplicate
+    ``slot_idx`` entries (batch padding) write identical values."""
+    n, vw = bt_rows.shape
+    out = []
+    for gv, gc in zip(virt, caches):
+        row = []
+        for cv, c in zip(gv, gc):
+            bs = c["kp"].shape[2]
+            row.append({
+                "k": cv["k"].at[:, slot_idx].set(
+                    c["kp"][:, bt_rows].reshape(
+                        c["kp"].shape[0], n, vw * bs, *c["kp"].shape[3:]
+                    ).astype(cv["k"].dtype)),
+                "v": cv["v"].at[:, slot_idx].set(
+                    c["vp"][:, bt_rows].reshape(
+                        c["vp"].shape[0], n, vw * bs, *c["vp"].shape[3:]
+                    ).astype(cv["v"].dtype)),
+            })
+        out.append(row)
+    return out
+
+
+def scatter_paged_back(caches, virt, bt, start, width: int, stop=None):
+    """Write rows ``[start, start + width)`` of the virtual caches back
+    into the block pools — the only rows a loop starting at ``start`` can
+    have written.  Rows past a sequence's table redirect to the null
+    block (so a frozen slot's junk writes and a finished slot's nulled
+    table persist nothing real); rows past the virtual width clamp on
+    read but are likewise null-redirected.  ``stop (B,)`` additionally
+    null-redirects rows ``>= stop[s]`` — the lazy-writeback flush uses it
+    to clamp each slot to its own written count, so one slot's pending
+    width can't push another slot's junk tail into a still-shared
+    (not-yet-COWed) block."""
+    B, nb = bt.shape
+    bs = caches[0][0]["kp"].shape[2]
+    L = virt[0][0]["k"].shape[2]
+    rows = start[:, None] + jnp.arange(width)[None, :]           # (B, W)
+    take = jnp.minimum(rows, L - 1)[None, :, :, None, None]
+    vblock = rows // bs
+    phys = jnp.take_along_axis(bt, jnp.minimum(vblock, nb - 1), axis=1)
+    phys = jnp.where(vblock < nb, phys, 0)
+    if stop is not None:
+        phys = jnp.where(rows < stop[:, None], phys, 0)
+    off = rows % bs
+    out = []
+    for gc, gv in zip(caches, virt):
+        row_out = []
+        for c, cv in zip(gc, gv):
+            kr = jnp.take_along_axis(cv["k"], take, axis=2)
+            vr = jnp.take_along_axis(cv["v"], take, axis=2)
+            row_out.append({
+                "kp": c["kp"].at[:, phys, off].set(kr.astype(c["kp"].dtype)),
+                "vp": c["vp"].at[:, phys, off].set(vr.astype(c["vp"].dtype)),
+            })
+        out.append(row_out)
+    return out
+
+
 def decode_loop(params, cfg, caches, pos, last, active, remaining, rng, *,
                 k: int, max_len: int, temperature: float = 0.0, bt=None):
     """K fused decode steps with one host sync at the end.
@@ -415,7 +522,22 @@ def decode_loop(params, cfg, caches, pos, last, active, remaining, rng, *,
     pos, last, active, remaining, rng)``; ``out[s, :emitted[s]]`` are slot
     s's real tokens (liveness is monotone within the loop, so they form a
     prefix).
+
+    With ``bt`` (paged caches) the jnp path runs gather-hoisted: virtual
+    dense caches once per K steps, the identical dense body inside, one
+    bounded scatter-back at the end.  ``cfg.use_kernels`` keeps the
+    per-step pool path (the Pallas decode kernel reads the pool directly
+    and would gain nothing from a materialized dense copy).
     """
+    if bt is not None and not cfg.use_kernels:
+        start = pos
+        out, emitted, virt, pos, last, active, remaining, rng = decode_loop(
+            params, cfg, gather_paged_virtual(caches, bt), pos, last,
+            active, remaining, rng, k=k, max_len=max_len,
+            temperature=temperature)
+        caches = scatter_paged_back(caches, virt, bt, start, k)
+        return out, emitted, caches, pos, last, active, remaining, rng
+
     def body(i, carry):
         caches, pos, last, active, remaining, rng, out, emitted = carry
         rng, sub = jax.random.split(rng)
@@ -439,6 +561,135 @@ def decode_loop(params, cfg, caches, pos, last, active, remaining, rng, *,
     caches, pos, last, active, remaining, rng, out, emitted = jax.lax.fori_loop(
         0, k, body, (caches, pos, last, active, remaining, rng, out0, em0))
     return out, emitted, caches, pos, last, active, remaining, rng
+
+
+# ----------------------------------------------------------------------
+# Speculative multi-token decode (paged engines, greedy only).
+def ngram_draft(hist, pos, last, d: int):
+    """Bigram n-gram draft: find the most recent earlier occurrence of
+    the (previous token, last token) bigram in the on-device history and
+    propose the ``d`` tokens that followed it; with no match, repeat the
+    last token.  One masked scan plus one gather over ``hist`` — free
+    next to a backbone pass, and surprisingly effective on repetitive
+    output (which greedy LM decode produces in abundance)."""
+    B, L = hist.shape
+    prev = jnp.take_along_axis(hist, jnp.maximum(pos - 1, 0)[:, None],
+                               axis=1)[:, 0]
+    i = jnp.arange(1, L)
+    ok = (hist[:, :-1] == prev[:, None]) & (hist[:, 1:] == last[:, None]) \
+        & (i[None, :] < pos[:, None])
+    m = jnp.max(jnp.where(ok, i[None, :], -1), axis=1)
+    cont = jnp.where(m >= 0, m + 1, pos)
+    idx = jnp.minimum(cont[:, None] + jnp.arange(d)[None, :], pos[:, None])
+    return jnp.take_along_axis(hist, idx, axis=1)
+
+
+def verify_extend(params, cfg, tokens, caches, pos0):
+    """Speculative verify: one batched dense-cache extend of the (B, d+1)
+    window ``[last] ++ draft`` at absolute positions ``pos0 + j``,
+    returning greedy argmax targets at EVERY window position plus the
+    updated caches.  Position j's logits are computed from exactly the
+    tokens a non-speculative loop would have in cache when sampling the
+    token for position ``pos0 + j + 1`` — provided tokens[0..j] all match
+    what that loop would have emitted, which is precisely the accepted
+    prefix the caller keeps."""
+    x = embed(params["embedding"], tokens, cfg)
+    x = shard(x, "batch", "seq", "embed")
+    x, _, caches = run_backbone(params, x, cfg, "extend", caches,
+                                pos=pos0, bt=None)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _head(params, x, cfg)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+
+def spec_decode_loop(params, cfg, caches, hist, pos, last, active, remaining,
+                     rng, *, k: int, d: int, max_len: int, bt,
+                     draft_fn=None, virt=None):
+    """K speculative verify iterations over a paged cache, one host sync.
+
+    Each iteration drafts ``d`` tokens (``draft_fn(hist, pos, last, d)``,
+    default :func:`ngram_draft`), verifies ``[last] ++ draft`` in ONE
+    batched extend over the gather-hoisted virtual caches, and emits the
+    accepted draft prefix plus the first correction — between 1 and d+1
+    tokens per backbone pass.  Token-exact vs the non-speculative loop:
+    every emitted token is the greedy argmax of a context consisting
+    entirely of previously-emitted tokens (acceptance stops at the first
+    draft/target mismatch, so no unverified token ever conditions an
+    emitted one).  Greedy only — the engine enforces temperature == 0.
+
+    ``hist (B, max_len)`` is the device token history (``hist[p]`` = the
+    token at position p for every p <= pos); paged admits seed it and
+    this loop maintains it.  Returns ``(out (B, k*(d+1)), emitted (B,),
+    stats (2,) int32 [extra tokens accepted, drafts proposed], caches,
+    virt, hist, pos, last, active, remaining, rng)``.
+
+    ``virt`` may carry a still-valid virtual cache from a previous sync
+    (the engine keeps it device-resident and invalidates on admit/fork/
+    width change); ``None`` gathers a fresh one from the pool.  With
+    ``caches=None`` (requires ``virt``) the pool scatter-back is skipped
+    entirely — the engine's lazy-writeback mode, where the pool is made
+    authoritative only when something needs to read it.
+    """
+    if draft_fn is None:
+        draft_fn = ngram_draft
+    start = pos
+    if virt is None:
+        virt = gather_paged_virtual(caches, bt)
+    B = pos.shape[0]
+    W = k * (d + 1)
+
+    def body(i, carry):
+        (virt, hist, pos, last, active, remaining, out, emitted,
+         acc, prop) = carry
+        draft = draft_fn(hist, pos, last, d)                    # (B, d)
+        window = jnp.concatenate([last[:, None], draft], axis=1)
+        targets, virt = verify_extend(params, cfg, window, virt, pos)
+        match = (draft == targets[:, :d]).astype(jnp.int32)
+        a = jnp.sum(jnp.cumprod(match, axis=1), axis=1)         # (B,)
+        cap = jnp.minimum(remaining, jnp.maximum(max_len - 1 - pos, 0))
+        e = jnp.where(active, jnp.minimum(a + 1, cap), 0).astype(jnp.int32)
+        # write the whole d+1 window at column `emitted`: entries past the
+        # accepted count are junk that the next iteration's window (which
+        # starts exactly at the new `emitted`) overwrites; a frozen slot's
+        # writes land in [emitted, emitted+d+1) which never reaches W
+        # because inactivity at iteration j implies emitted <= (d+1)(j+1)
+        out = jax.vmap(
+            lambda o, t, s: jax.lax.dynamic_update_slice_in_dim(o, t, s, 0)
+        )(out, targets, emitted)
+        # history rows pos+1 .. pos+d+1 get the verified targets; rows
+        # beyond the accepted count are junk above the new pos — never
+        # read (the draft clips reads at pos) and overwritten by the next
+        # iteration before pos reaches them.  mode="drop" so a window
+        # hanging past max_len can't clamp-corrupt a live row.
+        hidx = pos[:, None] + 1 + jnp.arange(d + 1)[None, :]
+        hist = hist.at[jnp.arange(B)[:, None], hidx].set(targets,
+                                                         mode="drop")
+        acc = acc + jnp.sum(jnp.where(active, e - 1, 0))
+        prop = prop + jnp.sum(jnp.where(active, d, 0))
+        emitted = emitted + e
+        pos = pos + e
+        remaining = remaining - e
+        active = active & (remaining > 0) & (pos < max_len - 1)
+        last_new = jnp.take_along_axis(
+            targets, jnp.maximum(e - 1, 0)[:, None], axis=1)[:, 0]
+        last = jnp.where(active, last_new, jnp.zeros_like(last))
+        return (virt, hist, pos, last, active, remaining, out, emitted,
+                acc, prop)
+
+    out0 = jnp.zeros((B, W), jnp.int32)
+    em0 = jnp.zeros((B,), jnp.int32)
+    z = jnp.zeros((), jnp.int32)
+    (virt, hist, pos, last, active, remaining, out, emitted, acc, prop) = \
+        jax.lax.fori_loop(0, k, body, (virt, hist, pos, last, active,
+                                       remaining, out0, em0, z, z))
+    # the last verify's speculative rows reach start + emitted + d, so the
+    # scatter-back window is d+1 wider than the emission bound
+    if caches is not None:
+        L = virt[0][0]["k"].shape[2]
+        caches = scatter_paged_back(caches, virt, bt, start,
+                                    min(W + d + 1, L))
+    return (out, emitted, jnp.stack([acc, prop]), caches, virt, hist, pos,
+            last, active, remaining, rng)
 
 
 def _head(params, x, cfg):

@@ -1,4 +1,5 @@
 from repro.serving.engine import (Engine, EngineFns, Request,  # noqa: F401
                                   ServeConfig, make_engine_fns, pad_tolerant)
 from repro.serving.kvpool import (BlockAllocator, PoolExhausted,  # noqa: F401
-                                  hash_token_blocks, padded_table)
+                                  hash_token_blocks, hash_token_blocks_memo,
+                                  padded_table)

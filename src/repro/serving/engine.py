@@ -53,7 +53,7 @@ from repro.cluster.tracing import (NULL_SPAN, annotate, current_recorder,
                                    current_tracer)
 from repro.models import api, transformer as tfm
 from repro.serving.kvpool import (NULL_BLOCK, BlockAllocator, PoolExhausted,
-                                  hash_token_blocks, padded_table)
+                                  hash_token_blocks_memo, padded_table)
 
 
 @dataclasses.dataclass
@@ -83,6 +83,15 @@ class ServeConfig:
     # from raising `slots` while holding kv_blocks * block_size fixed.
     kv_blocks: int = 0
     prefix_cache: bool = True       # content-hashed full-block prompt reuse
+    # Speculative multi-token decode (paged + greedy only): an in-loop
+    # n-gram draft proposes `spec_draft` tokens per fused step, verify is
+    # one batched paged extend over the whole decode batch, and the
+    # accepted prefix plus one corrected token is emitted — 1..spec_draft+1
+    # tokens per backbone pass, token-exact vs the non-speculative loop.
+    # MoE families silently fall back to non-speculative paged decode
+    # (expert capacity couples the verify window's batch rows).
+    speculative: bool = False
+    spec_draft: int = 3             # drafted tokens per verify window
 
     def __post_init__(self):
         if self.fused and self.sync_every < 1:
@@ -103,6 +112,18 @@ class ServeConfig:
                     f"block_size ({self.block_size}) must divide max_len "
                     f"({self.max_len}): equal virtual cache length is what "
                     f"makes the paged path token-exact vs the dense oracle")
+        if self.speculative:
+            if not self.paged:
+                raise ValueError("speculative=True requires paged=True: "
+                                 "the draft/verify loop runs as a batched "
+                                 "extend over the paged block pool")
+            if self.temperature:
+                raise ValueError("speculative decode is greedy-only: the "
+                                 "accepted-prefix emission is token-exact "
+                                 "only under argmax (temperature == 0)")
+            if self.spec_draft < 1:
+                raise ValueError(f"spec_draft must be >= 1, got "
+                                 f"{self.spec_draft}")
 
 
 @dataclasses.dataclass
@@ -125,6 +146,10 @@ class Request:
     # arrives with the work item, standalone submits root their own
     trace_span: Any = None
     trace_ctx: Any = None
+    # paged engines compute the chained prefix-cache block hashes at
+    # submit() time (memoized across identical prompts) so the sha256
+    # chain never runs on the admit critical path
+    block_hashes: Optional[List[bytes]] = None
 
     @property
     def decoded(self) -> int:
@@ -211,14 +236,76 @@ class EngineFns:
 
         def paged_loop_fn(params, bt, caches, pos, last, active, remaining,
                           rng):
-            return tfm.decode_loop(params, cfg, caches, pos, last, active,
-                                   remaining, rng, k=k, max_len=max_len,
-                                   temperature=temp, bt=bt)
+            # per-step pool path: the Pallas decode kernel reads the block
+            # pool directly, so there is no virtual cache to keep resident
+            out, em, caches, pos, last, active, remaining, rng = \
+                tfm.decode_loop(params, cfg, caches, pos, last, active,
+                                remaining, rng, k=k, max_len=max_len,
+                                temperature=temp, bt=bt)
+            # pack tokens + emitted counts into one array so the host sync
+            # is a single device fetch (liveness/positions/budget are
+            # host-derivable from the emitted counts)
+            packed = jnp.concatenate([out, em[:, None]], axis=1)
+            return packed, bt, caches, pos, last, active, remaining, rng
 
-        # block tables are rebuilt host-side each sync (allocation is a
-        # host decision), so bt is a plain input — everything else donates
-        self.paged_decode_loop = jax.jit(paged_loop_fn,
-                                         donate_argnums=(2, 3, 4, 5, 6, 7))
+        def paged_virt_loop_fn(params, virt, pos, last, active, remaining,
+                               rng):
+            # resident-virtual path with lazy writeback: the engine
+            # gathered `virt` from the pool once (gather_virt) and keeps
+            # it device-resident; a steady-state sync is EXACTLY the
+            # dense loop on it — no pool, no block table, no scatter —
+            # and the pool is brought current only when something needs
+            # to read it (flush_fn at admit/fork/victim boundaries)
+            out, em, virt, pos, last, active, remaining, rng = \
+                tfm.decode_loop(params, cfg, virt, pos, last, active,
+                                remaining, rng, k=k, max_len=max_len,
+                                temperature=temp)
+            packed = jnp.concatenate([out, em[:, None]], axis=1)
+            return packed, virt, pos, last, active, remaining, rng
+
+        # the virtual caches are donated AND passed through as an output:
+        # they stay device-resident across syncs and jit re-specializes
+        # per bucketed *width*, so decode attention spans the widest live
+        # sequence's whole-wave budget instead of nb_max blocks.  On the
+        # kernel path the block table rides the same donate-and-return
+        # contract instead (the Pallas kernel reads the pool directly).
+        if cfg.use_kernels:
+            self.paged_decode_loop = jax.jit(
+                paged_loop_fn, donate_argnums=(1, 2, 3, 4, 5, 6, 7))
+        else:
+            self.paged_decode_loop = jax.jit(
+                paged_virt_loop_fn, donate_argnums=(1, 2, 3, 4, 5, 6))
+        self.gather_virt = jax.jit(tfm.gather_paged_virtual)
+        # (width,) -> jitted lazy-writeback flush: scatter rows
+        # [start, stop) of the virtual caches into the pool, per-slot
+        # clamped; width-bucketed so compiles stay bounded
+        self._flush_cache: Dict[int, Callable] = {}
+
+        # speculative decode rides the paged path only: greedy-only
+        # (ServeConfig enforces temperature == 0) and never on row-coupled
+        # (MoE) families, whose verify windows would cross-talk through
+        # expert capacity
+        self.spec = scfg.speculative and self.paged_ok \
+            and not self.row_coupled
+
+        def spec_loop_fn(params, virt, hist, pos, last, active, remaining,
+                         rng):
+            # lazy writeback: caches=None skips the in-loop pool scatter;
+            # the engine flushes the resident virtual caches on demand
+            (out, em, stats, _, virt, hist, pos, last, active, remaining,
+             rng) = tfm.spec_decode_loop(
+                 params, cfg, None, hist, pos, last, active, remaining,
+                 rng, k=k, d=scfg.spec_draft, max_len=max_len, bt=None,
+                 virt=virt)
+            # stats ride as two extra broadcast columns so the host sync
+            # stays a single device fetch even under speculation
+            st = jnp.broadcast_to(stats[None, :], (out.shape[0], 2))
+            packed = jnp.concatenate([out, em[:, None], st], axis=1)
+            return (packed, virt, hist, pos, last, active, remaining, rng)
+
+        if self.spec:
+            self.spec_decode_loop = jax.jit(
+                spec_loop_fn, donate_argnums=(1, 2, 3, 4, 5, 6, 7))
         # (bucket, n) -> jitted paged suffix-extend + sample + slot insert
         self._paged_admit_cache: Dict[Tuple[int, int], Callable] = {}
 
@@ -231,6 +318,21 @@ class EngineFns:
                 lambda c: c.at[:, dst].set(c[:, src]), caches)
 
         self.cow = jax.jit(cow, donate_argnums=(0,))
+
+    def flush_fn(self, width: int) -> Callable:
+        """Jitted lazy-writeback flush: write rows ``[start[s], stop[s])``
+        of the resident virtual caches into the block pool (donated),
+        null-redirecting each slot's junk tail past ``stop[s]``.  One
+        compile per power-of-two pending width."""
+        with self._build_lock:
+            fn = self._flush_cache.get(width)
+            if fn is None:
+                def flush(caches, virt, bt, start, stop):
+                    return tfm.scatter_paged_back(caches, virt, bt, start,
+                                                  width, stop=stop)
+                fn = jax.jit(flush, donate_argnums=(0,))
+                self._flush_cache[width] = fn
+        return fn
 
     def bucket(self, plen: int) -> int:
         """Prefill compile bucket for a prompt of length ``plen``."""
@@ -295,16 +397,38 @@ class EngineFns:
     def _build_paged_admit_fn(self, key: Tuple[int, int]) -> Callable:
         bucket, n = key
         cfg, scfg = self.cfg, self.scfg
+        spec = self.spec
 
-        def fn(params, tokens, pos0, last_idx, slot_idx, budget, bt,
-               caches, pos, last, active, remaining, rng):
-            """tokens (n,bucket) suffix ids · pos0 (n,) cached-prefix
-            length · last_idx (n,) suffix-local last index · bt
-            (n, nb_max) block tables · engine state donated."""
+        def fn(params, tokens, meta, bt, virt,
+               caches, hist, pos, last, active, remaining, rng):
+            """tokens (n,bucket) suffix ids · meta (4,n) = [pos0
+            cached-prefix length; last_idx suffix-local last index;
+            slot_idx; budget] packed into one upload · bt (n, nb_max)
+            block tables · engine state donated.  ``hist`` is the
+            speculative draft's (slots, max_len) token history and
+            ``virt`` the resident virtual caches — either may be None.
+            The admitted slots' virtual rows are re-gathered in here
+            (one dispatch, no extra uploads) so a steady-state admit
+            never flushes or fully regathers the resident view."""
+            pos0, last_idx, slot_idx, budget = (meta[j] for j in range(4))
             rng, sub = jax.random.split(rng)
             logits, caches = tfm.extend_paged(params, cfg, tokens, caches,
                                               pos0, bt, last_index=last_idx)
             toks = tfm.sample_tokens(logits[:, 0], scfg.temperature, sub)
+            if virt is not None:
+                vw = virt[0][0]["k"].shape[2] // scfg.block_size
+                virt = tfm.refresh_paged_virtual(virt, caches,
+                                                 bt[:, :vw], slot_idx)
+            if spec:
+                # seed the draft history with the suffix tokens at their
+                # absolute positions.  Bucket pads land above the row's
+                # position and are overwritten before any draft can read
+                # them; positions below pos0 (a prefix-cache hit) keep the
+                # slot's stale contents, which can only cost draft
+                # acceptance, never correctness.
+                idxs = pos0[:, None] + jnp.arange(bucket)[None, :]
+                hist = hist.at[slot_idx[:, None], idxs].set(tokens,
+                                                            mode="drop")
             for j in range(n):            # static unroll over admits
                 s = slot_idx[j]
                 nxt = pos0[j] + last_idx[j] + 1     # next write position
@@ -316,10 +440,16 @@ class EngineFns:
                     remaining, budget[j], s, 0)
                 active = jax.lax.dynamic_update_index_in_dim(
                     active, act_j, s, 0)
-            return toks, caches, pos, last, active, remaining, rng
+                if spec:
+                    hist = hist.at[s, nxt].set(toks[j], mode="drop")
+            return toks, virt, caches, hist, pos, last, active, remaining, \
+                rng
 
-        self._paged_admit_cache[key] = jax.jit(
-            fn, donate_argnums=(7, 8, 9, 10, 11, 12))
+        # hist/virt may arrive as None (non-speculative engines; no
+        # resident view yet) — an empty pytree, so donating it is a no-op
+        # and jit re-traces once per presence combination
+        jitted = jax.jit(fn, donate_argnums=(4, 5, 6, 7, 8, 9, 10, 11))
+        self._paged_admit_cache[key] = jitted
         return self._paged_admit_cache[key]
 
 
@@ -370,10 +500,36 @@ class Engine:
             self._bt = np.zeros((scfg.slots, self.nb_max), np.int32)
             self._pos_h = np.zeros((scfg.slots,), np.int64)
             self._rem_h = np.zeros((scfg.slots,), np.int64)
+            self._act_h = np.zeros((scfg.slots,), bool)
+            # device-resident block table (donated through the decode loop
+            # and passed back): host mutations set the dirty flag and the
+            # next sync re-uploads, sliced to the bucketed width that
+            # covers the longest live sequence
+            self._bt_dev = None
+            self._bt_width = 0
+            self._bt_dirty = True
+            # device-resident virtual caches (gather-hoisted dense view of
+            # the live slots' blocks): reused across syncs; None forces a
+            # regather — set on admit/fork/victim and on width change.
+            # Writeback to the pool is LAZY: _wb_h[s] is the first
+            # position not yet flushed; _flush_virt() makes the pool
+            # authoritative before anything reads it
+            self._virt = None
+            self._virt_width = 0
+            self._wb_h = np.zeros((scfg.slots,), np.int64)
             self.metrics.gauge("engine.kv_blocks_total").set(n_blocks)
             self._kv_gauges()
         else:
             self.caches = api.init_caches(cfg, scfg.slots, scfg.max_len)
+        # speculative decode: paged + greedy + row-decoupled only (the
+        # fns bundle holds the gate); fall back silently but observably
+        self.speculative = self.paged and self.fns.spec
+        if scfg.speculative and not self.speculative:
+            self.metrics.counter("engine.spec_fallback").inc()
+        if self.speculative:
+            # device token history feeding the n-gram draft: row s holds
+            # the tokens of slot s's sequence at their absolute positions
+            self._hist = jnp.zeros((scfg.slots, scfg.max_len), jnp.int32)
         self.active: List[Optional[Request]] = [None] * scfg.slots
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
@@ -397,6 +553,11 @@ class Engine:
         req = Request(rid=next(self._rids),
                       prompt=np.asarray(prompt, np.int32), max_new=max_new,
                       submit_t=time.perf_counter(), on_tokens=on_tokens)
+        if self.paged and self.scfg.prefix_cache:
+            # sha256 prefix-chain hashing runs here — off the admit/step
+            # critical path, and memoized across identical prompts
+            req.block_hashes = hash_token_blocks_memo(
+                req.prompt, self.scfg.block_size)
         # with a cluster context this parents into the request's trace;
         # standalone (trace_ctx None) it roots one, subject to sampling
         sp = current_tracer().span("engine.request", parent=trace_ctx,
@@ -448,6 +609,16 @@ class Engine:
                 self.alloc.free_seq(sid)
                 self._seq_of_slot[slot] = None
                 self._bt[slot] = NULL_BLOCK
+                # the freed blocks can be re-allocated to another slot in
+                # this very sync — a stale device copy of this row would
+                # let the frozen slot's masked writes land in the new
+                # owner's blocks
+                self._bt_dirty = True
+                # drop the dead slot's pending writeback: its blocks are
+                # freed, and a later flush must not inflate its width for
+                # rows nobody can read (the nulled table row would drop
+                # them anyway)
+                self._wb_h[slot] = self._pos_h[slot]
             self._kv_gauges()
         self.metrics.counter("engine.requests").inc()
         self.metrics.counter("engine.tokens").inc(req.decoded)
@@ -581,10 +752,13 @@ class Engine:
         """Plan one admit without side effects: prefix hits, suffix shape,
         and the block headroom it would need.  None == cannot admit now."""
         bs = self.scfg.block_size
-        tokens = [int(t) for t in req.prompt]
-        plen = len(tokens)
-        hashes = hash_token_blocks(tokens, bs) if self.scfg.prefix_cache \
-            else []
+        plen = len(req.prompt)
+        if not self.scfg.prefix_cache:
+            hashes: List[bytes] = []
+        elif req.block_hashes is not None:      # hashed at submit()
+            hashes = req.block_hashes
+        else:                                   # forked/hand-built request
+            hashes = hash_token_blocks_memo(req.prompt, bs)
         # reuse covers at most plen-1 tokens: the last prompt token must be
         # recomputed so the admit has logits to sample the first output
         reusable = hashes[:max(plen - 1, 0) // bs]
@@ -619,6 +793,13 @@ class Engine:
         scfg = self.scfg
         free = [s for s in range(scfg.slots) if self.active[s] is None]
         while free and self.queue:
+            # NO flush here, by construction: admission only reads
+            # *published* prefix blocks (immutable once published — decode
+            # writes COW first) and only binds *free* blocks, while every
+            # lazily-pending virtual row targets a live slot's private
+            # block (fork/victim flush before sharing or freeing, and
+            # _finish resets a dead slot's watermark) — so the pool is
+            # authoritative for everything an admit can touch
             try:
                 prep = self._prep_paged(self.queue[0])
             except _PromptTooLong as e:
@@ -646,8 +827,12 @@ class Engine:
                 self._seq_of_slot[slot] = sid
                 self._bt[slot] = padded_table(self.alloc.table(sid),
                                               self.nb_max)
+                self._bt_dirty = True
                 self._pos_h[slot] = plen
+                self._wb_h[slot] = plen   # nothing pending: admit writes pool
                 self._rem_h[slot] = max(req.max_new, 0)
+                self._act_h[slot] = req.max_new > 0 and \
+                    plen < scfg.max_len - 1
                 self.metrics.counter("engine.prefix_hit_blocks").inc(
                     len(hits))
                 # denominator of the hit rate: count the blocks actually
@@ -704,20 +889,40 @@ class Engine:
             psp = current_tracer().span("engine.prefill", parent=asp,
                                         bucket=bucket, n_pad=n_pad)
             with annotate("prefill"):
-                toks, self.caches, self._pos, self._last, self._active, \
-                    self._remaining, self._rng = self.fns.paged_admit_fn(
-                        bucket, n_pad)(
-                        self.params, jnp.asarray(tokens), jnp.asarray(pos0),
-                        jnp.asarray(last_idx), jnp.asarray(slot_arr),
-                        jnp.asarray(budget), jnp.asarray(bt),
-                        self.caches, self._pos, self._last,
-                        self._active, self._remaining, self._rng)
+                # one packed (4, n_pad) upload for the per-row int vectors
+                # — host->device dispatches dominate the admit wall here.
+                # The jit also re-gathers the admitted slots' rows of the
+                # resident view in the same call (other slots' lazily-
+                # pending rows must NOT be re-read from the pool); a
+                # prompt wider than the resident view is fine — decode's
+                # width check (need > width) forces a flush + full
+                # regather before any truncated row could be read.
+                meta = np.stack([pos0, last_idx, slot_arr, budget])
+                toks, self._virt, self.caches, hist, self._pos, \
+                    self._last, self._active, self._remaining, self._rng = \
+                    self.fns.paged_admit_fn(bucket, n_pad)(
+                        self.params, jnp.asarray(tokens),
+                        jnp.asarray(meta), jnp.asarray(bt), self._virt,
+                        self.caches,
+                        self._hist if self.speculative else None,
+                        self._pos, self._last, self._active,
+                        self._remaining, self._rng)
+                if self.speculative:
+                    self._hist = hist
                 toks_h = np.asarray(toks)[n_pad - n:]
             psp.end()
             now = time.perf_counter()
             for j, (req, slot, sid, hashes, n_cached_tok, suffix_len) in \
                     enumerate(rows):
                 plen = len(req.prompt)
+                if self.speculative and n_cached_tok:
+                    # a prefix-cache hit skips the admit extend for the
+                    # cached tokens, so the in-jit history seeding never
+                    # sees them — backfill host-side (admits are rare;
+                    # this keeps the n-gram draft sighted over the whole
+                    # context instead of just the uncached suffix)
+                    self._hist = self._hist.at[slot, :n_cached_tok].set(
+                        jnp.asarray(req.prompt[:n_cached_tok], jnp.int32))
                 if scfg.prefix_cache:
                     # every *full* prompt block is now written and
                     # immutable (decode writes start at plen) — publish it
@@ -736,43 +941,111 @@ class Engine:
             self.metrics.counter("engine.prefill_batches").inc()
             self._kv_gauges()
 
+    def _flush_virt(self):
+        """Lazy-writeback flush: scatter every virtual-cache row decoded
+        since the last flush into the block pool, making the pool
+        authoritative again.  Steady-state syncs skip the per-sync
+        scatter entirely; this runs only when something needs to read the
+        pool — an admit's regather, a fork, a pool-exhausted victim, or
+        an explicit :meth:`flush_kv`.  Each slot is clamped to its own
+        written range (``stop``), and finished slots' rows null-redirect
+        through their nulled table rows."""
+        if self._virt is None:
+            self._wb_h[:] = self._pos_h
+            return
+        pend = int(np.max(self._pos_h - self._wb_h))
+        if pend <= 0:
+            return
+        # the device table must be current for the flushed rows: _finish
+        # nulls dead rows and appends bind fresh blocks, both set dirty
+        if self._bt_dirty or self._bt_width != self._virt_width:
+            self._bt_dev = jnp.asarray(self._bt[:, :self._virt_width])
+            self._bt_width = self._virt_width
+            self._bt_dirty = False
+        width = _next_pow2(pend) if pend > 1 else 1
+        self.caches = self.fns.flush_fn(width)(
+            self.caches, self._virt, self._bt_dev,
+            jnp.asarray(self._wb_h.astype(np.int32)),
+            jnp.asarray(self._pos_h.astype(np.int32)))
+        self._wb_h[:] = self._pos_h
+
+    def flush_kv(self):
+        """Make the block pool authoritative for every live sequence (the
+        resident virtual caches are flushed; a no-op on dense or kernel
+        paths).  Anything that reads KV content from ``engine.caches``
+        directly — tests, future block swap/migration — must call this
+        first."""
+        if self.paged:
+            self._flush_virt()
+
+    def _exhaust_victim(self, slot: int):
+        """PoolExhausted mid-decode: complete this slot's request with
+        ``finish_reason="kv_pool_exhausted"`` and free its blocks (the
+        single-victim contract, like ``rejected_prompt_too_long``) instead
+        of raising out of ``step()`` and poisoning its batch-mates — the
+        freed blocks can satisfy later slots in this very sync."""
+        req = self.active[slot]
+        self.metrics.counter("engine.kv_pool_exhausted").inc()
+        current_recorder().record("kv_pool_exhausted", rid=req.rid,
+                                  slot=slot, pos=int(self._pos_h[slot]))
+        self._active = self._active.at[slot].set(False)
+        self._last = self._last.at[slot].set(0)
+        self._act_h[slot] = False
+        # flush BEFORE the free: the other slots' pending rows must reach
+        # the pool while every table row still maps to its true owner
+        self._flush_virt()
+        self._virt = None
+        self._finish(slot, "kv_pool_exhausted")
+        self._emit(req, [], True)
+
     def _step_paged(self) -> bool:
         self._admit_paged()
         if not any(r is not None for r in self.active):
             return False
         scfg = self.scfg
+        d = scfg.spec_draft if self.speculative else 0
+        adv = scfg.sync_every * (d + 1)   # max emissions in one sync
         dsp = current_tracer().span(
             "engine.decode_sync", parent=self._batch_ctx(),
             k=scfg.sync_every,
             n_active=sum(r is not None for r in self.active))
         # host pre-work: every active slot needs writable private blocks
-        # covering the K positions this loop will write — allocate ahead,
-        # COW any block shared with the prefix cache or a fork
+        # covering every position this loop can write — allocate ahead,
+        # COW any block shared with the prefix cache or a fork.  Under
+        # speculation the last verify window scatters up to d+1 rows past
+        # the final emitted position, so cover (but never allocate past
+        # max_len) those too.
         cow_src: List[int] = []
         cow_dst: List[int] = []
+        max_hi = 1
         for s, req in enumerate(self.active):
             if req is None:
                 continue
             sid = self._seq_of_slot[s]
             lo = int(self._pos_h[s])
-            # allocate ahead only for positions this loop can actually
-            # write: K steps, capped by the slot's remaining budget (an
-            # exhausted slot's further writes go to its frozen position
-            # or the null block) and by max_len
-            hi = min(lo + min(scfg.sync_every, int(self._rem_h[s])),
-                     scfg.max_len)
-            for src, dst in self.alloc.cow_targets(sid, lo, hi):
-                cow_src.append(src)
-                cow_dst.append(dst)
+            hi = min(lo + min(adv, int(self._rem_h[s])), scfg.max_len)
+            if d:
+                hi = min(min(lo + min(adv, int(self._rem_h[s])),
+                             scfg.max_len - 1) + d + 1, scfg.max_len)
+            pairs = self.alloc.cow_targets(sid, lo, hi)
             try:
-                self.alloc.extend_to(sid, hi)
+                fresh = self.alloc.extend_to(sid, hi)
             except PoolExhausted:
-                raise PoolExhausted(
-                    f"kv pool exhausted mid-decode (slot {s}, pos {lo}): "
-                    f"active sequences outgrew kv_blocks="
-                    f"{self.alloc.num_blocks}; size the pool for the "
-                    f"workload or lower admission headroom") from None
-            self._bt[s] = padded_table(self.alloc.table(sid), self.nb_max)
+                # the victim's COW pairs are dropped: its sequence is
+                # freed, so mirroring them on device could race the very
+                # allocations its freed blocks now satisfy
+                self._exhaust_victim(s)
+                continue
+            cow_src += [p[0] for p in pairs]
+            cow_dst += [p[1] for p in pairs]
+            if pairs or fresh:
+                self._bt[s] = padded_table(self.alloc.table(sid),
+                                           self.nb_max)
+                self._bt_dirty = True
+            max_hi = max(max_hi, hi)
+        if not any(r is not None for r in self.active):
+            dsp.end()
+            return True
         if cow_src:
             pad = (_next_pow2(len(cow_src)) if len(cow_src) > 1 else 1) \
                 - len(cow_src)
@@ -782,19 +1055,95 @@ class Engine:
             self.metrics.counter("engine.kv_cow_copies").inc(len(cow_src))
             dsp.tag(cow_copies=len(cow_src))
             current_recorder().record("cow", n=len(cow_src))
+        # resident virtual caches with lazy writeback: a steady-state sync
+        # is ONE jit call (the dense loop on the resident view) — no pool
+        # scatter, no block-table upload, no gather.  The width bucket
+        # covers every position this WAVE can ever write (pos + remaining
+        # budget), so the view stays width-stable across block-boundary
+        # crossings — and across admits too, since the admit jit
+        # refreshes its own slots' rows in place; a regather
+        # (invalidation or width growth) flushes pending rows first so
+        # the pool it reads is authoritative.  The kernel path instead re-cuts the device
+        # table to the tighter per-sync bound (the Pallas kernel re-reads
+        # the pool every step; width only sets how many blocks the grid
+        # walks).
+        use_virt = self.speculative or not self.cfg.use_kernels
+        if use_virt:
+            need = 1
+            for s, req in enumerate(self.active):
+                if req is None:
+                    continue
+                fin = min(int(self._pos_h[s]) + int(self._rem_h[s]) + d + 1,
+                          scfg.max_len)
+                need = max(need, -(-fin // scfg.block_size))
+            nbw = 1
+            while nbw < need:
+                nbw *= 2
+            nbw = min(nbw, self.nb_max)
+            if self._virt is not None and self._virt_width > nbw:
+                # a wider resident cache is still valid (extra columns are
+                # all >= pos, junk-tolerant) — keep it rather than regather
+                nbw = self._virt_width
+            if self._virt is None or self._virt_width != nbw:
+                self._flush_virt()
+                if self._bt_dirty or nbw != self._bt_width:
+                    self._bt_dev = jnp.asarray(self._bt[:, :nbw])
+                    self._bt_width = nbw
+                    self._bt_dirty = False
+                self._virt = self.fns.gather_virt(self.caches,
+                                                  self._bt_dev)
+                self._virt_width = nbw
+                self._wb_h[:] = self._pos_h
+        else:
+            need = -(-max_hi // scfg.block_size)
+            nbw = 1
+            while nbw < need:
+                nbw *= 2
+            nbw = min(nbw, self.nb_max)
+            if self._bt_dirty or nbw != self._bt_width:
+                self._bt_dev = jnp.asarray(self._bt[:, :nbw])
+                self._bt_width = nbw
+                self._bt_dirty = False
         with annotate("decode_loop"):
-            out, emitted, self.caches, self._pos, self._last, self._active, \
-                self._remaining, self._rng = self.fns.paged_decode_loop(
-                    self.params, jnp.asarray(self._bt), self.caches,
-                    self._pos, self._last, self._active, self._remaining,
-                    self._rng)
+            if self.speculative:
+                ssp = current_tracer().span("engine.spec_decode",
+                                            parent=dsp, draft_len=d)
+                packed, self._virt, self._hist, self._pos, self._last, \
+                    self._active, self._remaining, self._rng = \
+                    self.fns.spec_decode_loop(
+                        self.params, self._virt, self._hist, self._pos,
+                        self._last, self._active, self._remaining,
+                        self._rng)
+            elif use_virt:
+                packed, self._virt, self._pos, self._last, self._active, \
+                    self._remaining, self._rng = self.fns.paged_decode_loop(
+                        self.params, self._virt, self._pos, self._last,
+                        self._active, self._remaining, self._rng)
+            else:
+                packed, self._bt_dev, self.caches, self._pos, self._last, \
+                    self._active, self._remaining, self._rng = \
+                    self.fns.paged_decode_loop(
+                        self.params, self._bt_dev, self.caches, self._pos,
+                        self._last, self._active, self._remaining,
+                        self._rng)
             hsp = current_tracer().span("engine.host_sync", parent=dsp)
-            out_h = np.asarray(out)
-            em_h = np.asarray(emitted)
-            act_h = np.asarray(self._active)
-            rem_h = np.asarray(self._remaining)
-            self._pos_h = np.asarray(self._pos).astype(np.int64)
-            self._rem_h = rem_h.astype(np.int64)
+            # ONE device fetch: [tokens | emitted]; liveness, positions and
+            # budgets advance host-side by exactly the emitted counts
+            packed_h = np.asarray(packed)
+            if self.speculative:
+                out_h, em_h = packed_h[:, :-3], packed_h[:, -3]
+            else:
+                out_h, em_h = packed_h[:, :-1], packed_h[:, -1]
+            self._pos_h += em_h.astype(np.int64)
+            self._rem_h -= em_h.astype(np.int64)
+            self._act_h &= (self._rem_h > 0) & \
+                (self._pos_h < scfg.max_len - 1)
+            if self.speculative:
+                acc, prop = int(packed_h[0, -2]), int(packed_h[0, -1])
+                self.metrics.counter("engine.spec_proposed").inc(prop)
+                self.metrics.counter("engine.spec_accepted").inc(acc)
+                ssp.tag(proposed=prop, accepted=acc)
+                ssp.end()
             hsp.end()
         esp = current_tracer().span("engine.stream_emit", parent=dsp) \
             if any(r is not None and r.on_tokens is not None
@@ -804,13 +1153,13 @@ class Engine:
                 continue
             new = [int(t) for t in out_h[s, :em_h[s]]]
             req.out_tokens.extend(new)
-            if not act_h[s]:
-                self._finish(s, "max_new" if rem_h[s] <= 0 else "max_len")
+            if not self._act_h[s]:
+                self._finish(s, "max_new" if self._rem_h[s] <= 0
+                             else "max_len")
             self._emit(req, new, req.done)
         esp.end()
         dsp.end()
         self.metrics.counter("engine.steps").inc()
-        self._kv_gauges()
         return True
 
     def fork(self, parent: Request, max_new: int,
@@ -840,18 +1189,28 @@ class Engine:
                         out_tokens=list(parent.out_tokens),
                         submit_t=time.perf_counter(), on_tokens=on_tokens)
         child.first_token_t = child.submit_t
+        # the child's first regather reads the parent's rows from the
+        # pool — flush the parent's pending writeback before sharing
+        self._flush_virt()
         sid = self.alloc.fork(self._seq_of_slot[pslot])
         self._seq_of_slot[slot] = sid
         self._bt[slot] = padded_table(self.alloc.table(sid), self.nb_max)
+        self._bt_dirty = True
+        # the child slot's resident virtual row is whatever its previous
+        # occupant left behind — regather before the next sync
+        self._virt = None
         self._pos_h[slot] = self._pos_h[pslot]
         self._rem_h[slot] = max(max_new, 0)
         pos = int(self._pos_h[pslot])
         last_tok = parent.out_tokens[-1] if parent.out_tokens else 0
         alive = max_new > 0 and pos < self.scfg.max_len - 1
+        self._act_h[slot] = alive
         self._pos = self._pos.at[slot].set(pos)
         self._last = self._last.at[slot].set(last_tok if alive else 0)
         self._remaining = self._remaining.at[slot].set(max(max_new, 0))
         self._active = self._active.at[slot].set(alive)
+        if self.speculative:
+            self._hist = self._hist.at[slot].set(self._hist[pslot])
         self.active[slot] = child
         self.metrics.counter("engine.forks").inc()
         if not alive:

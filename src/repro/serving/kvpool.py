@@ -33,6 +33,7 @@ redirected into it — so a stale table entry can corrupt nothing.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 from collections import OrderedDict
 from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
@@ -59,6 +60,24 @@ def hash_token_blocks(tokens: Sequence[int], block_size: int) -> List[bytes]:
         prev = h.digest()
         out.append(prev)
     return out
+
+
+@functools.lru_cache(maxsize=4096)
+def _hash_blocks_memo(tok_bytes: bytes, block_size: int) -> Tuple[bytes, ...]:
+    import numpy as np
+    tokens = np.frombuffer(tok_bytes, dtype=np.int32)
+    return tuple(hash_token_blocks([int(t) for t in tokens], block_size))
+
+
+def hash_token_blocks_memo(prompt, block_size: int) -> List[bytes]:
+    """:func:`hash_token_blocks` over an int32 numpy prompt, memoized on
+    the token bytes.  Serving workloads re-submit identical prompts (and
+    identical shared prefixes hash block-by-block anyway), so the sha256
+    chain — which used to run on the admit critical path every time —
+    amortizes to a dict lookup.  The engine calls this at ``submit()``
+    time, off the step loop entirely."""
+    return list(_hash_blocks_memo(prompt.astype("int32").tobytes(),
+                                  block_size))
 
 
 class PoolExhausted(RuntimeError):

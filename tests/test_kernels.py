@@ -108,6 +108,59 @@ def test_paged_decode_matches_dense_decode():
     np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.parametrize("B,S,nb_seq,bs,H,KV,hd", [
+    (2, 4, 4, 16, 8, 2, 64),    # GQA 4:1 (internlm2-style heads)
+    (1, 8, 3, 32, 4, 4, 128),   # MHA (gemma-style KV=H)
+    (3, 3, 5, 8, 4, 1, 64),     # MQA, small blocks, odd suffix
+    (2, 16, 2, 16, 8, 2, 64),   # suffix spanning whole blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_extend_attention(B, S, nb_seq, bs, H, KV, hd, dtype):
+    """Extend kernel: S suffix queries at absolute positions pos0+s attend
+    through a shuffled block table; must match the gather-then-attend
+    reference (dense-extend mask over absolute positions)."""
+    k0 = jax.random.PRNGKey(17)
+    num_blocks = B * nb_seq + 1
+    q = rand(jax.random.fold_in(k0, 0), (B, S, H, hd), dtype)
+    kp = rand(jax.random.fold_in(k0, 1), (num_blocks, bs, KV, hd), dtype)
+    vp = rand(jax.random.fold_in(k0, 2), (num_blocks, bs, KV, hd), dtype)
+    perm = np.asarray(jax.random.permutation(jax.random.fold_in(k0, 3),
+                                             num_blocks - 1)) + 1
+    bt = jnp.asarray(perm.reshape(B, nb_seq), jnp.int32)
+    # pos0 anywhere the suffix still fits in the table's span — including
+    # 0 (pure prefill) when it does
+    pos0 = jax.random.randint(jax.random.fold_in(k0, 4), (B,), 0,
+                              nb_seq * bs - S + 1)
+    out = ops.paged_extend_attention(q, kp, vp, bt, pos0, interpret=True)
+    want = ref.paged_extend_attention_ref(q, kp, vp, bt, pos0)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), **TOL[dtype])
+
+
+def test_paged_extend_matches_dense_flash_prefill():
+    """With pos0=0 and the suffix covering the whole sequence, the paged
+    extend kernel is causal prefill: it must match the dense flash oracle
+    on the same tokens scattered into a pool."""
+    k0 = jax.random.PRNGKey(23)
+    B, S, H, KV, hd, bs = 2, 64, 4, 2, 32, 16
+    nb = S // bs
+    q = rand(jax.random.fold_in(k0, 0), (B, S, H, hd), jnp.float32)
+    k = rand(jax.random.fold_in(k0, 1), (B, S, KV, hd), jnp.float32)
+    v = rand(jax.random.fold_in(k0, 2), (B, S, KV, hd), jnp.float32)
+    kp = jnp.concatenate([jnp.zeros((1, bs, KV, hd))] +
+                         [k[b, j * bs:(j + 1) * bs][None]
+                          for j in range(nb) for b in range(B)])
+    vp = jnp.concatenate([jnp.zeros((1, bs, KV, hd))] +
+                         [v[b, j * bs:(j + 1) * bs][None]
+                          for j in range(nb) for b in range(B)])
+    bt = jnp.asarray([[1 + j * B + b for j in range(nb)]
+                      for b in range(B)], jnp.int32)
+    pos0 = jnp.zeros((B,), jnp.int32)
+    out = ops.paged_extend_attention(q, kp, vp, bt, pos0, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
 @pytest.mark.parametrize("N,M,d", [(64, 128, 256), (100, 60, 128),
                                    (128, 128, 512)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -331,6 +331,40 @@ def test_oversized_prompt_rejected_individually():
     assert eng.metrics.counter("engine.rejected_too_long").value == 1
 
 
+def test_pool_exhausted_mid_decode_completes_victim():
+    """When decode growth exhausts the pool with nothing evictable, the
+    engine sacrifices the slot it could not extend: the victim completes
+    with finish_reason="kv_pool_exhausted" (its emitted prefix intact and
+    token-exact), its blocks return to the pool, and the surviving slot
+    decodes on to a token-exact finish — nothing raises out of step()."""
+    cfg, params = _model("internlm2-1.8b")
+    rng = np.random.RandomState(12)
+    prompts = [rng.randint(0, cfg.vocab, size=8).astype(np.int32)
+               for _ in range(2)]
+    # each sequence wants 32 positions = 4 blocks; 2 x 4 > 5 available,
+    # so one slot must be sacrificed mid-decode
+    scfg = ServeConfig(max_len=32, slots=2, fused=True, sync_every=4,
+                       paged=True, block_size=8, kv_blocks=5,
+                       prefix_cache=False)
+    eng, reqs = _drain(params, cfg, scfg, prompts, max_new=24)
+    assert all(r.done for r in reqs)
+    reasons = [r.finish_reason for r in reqs]
+    assert reasons.count("kv_pool_exhausted") == 1
+    assert eng.metrics.counter("engine.kv_pool_exhausted").value == 1
+    # every block returned to the pool when the requests finished
+    assert eng.alloc.free_blocks == 5
+    # both streams are exact prefixes of the dense oracle's: the victim
+    # up to its eviction, the survivor to completion
+    _, dense = _drain(params, cfg,
+                      ServeConfig(max_len=32, slots=2, fused=True,
+                                  sync_every=4), prompts, max_new=24)
+    for a, b in zip(dense, reqs):
+        assert b.out_tokens == a.out_tokens[:len(b.out_tokens)]
+        if b.finish_reason != "kv_pool_exhausted":
+            assert b.out_tokens == a.out_tokens
+            assert b.finish_reason == a.finish_reason
+
+
 def test_available_excluding_pinned_hits():
     """The admit headroom probe must not double-count its own prefix hits
     as evictable: taking the hits pins them, shrinking the eviction

@@ -1,0 +1,230 @@
+"""Speculative multi-token decode: token-exact parity with the
+non-speculative paged engine (itself parity-tested against the dense
+fused oracle), draft acceptance semantics, and fallback gating.
+
+The invariant under test is the acceptance rule: every emitted token is
+the greedy argmax of a context consisting entirely of previously-emitted
+tokens, so the output stream is bit-identical to non-speculative decode
+no matter what the draft proposes — a perfect draft only changes *speed*
+(all d tokens accepted per verify), a hostile draft only costs compute
+(nothing accepted, one corrected token per verify).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.models import api, transformer as tfm
+from repro.serving import Engine, ServeConfig
+from repro.serving.kvpool import padded_table
+
+# row-decoupled pageable families: speculation's verify windows are
+# per-row independent (MoE expert capacity couples rows, so it falls back)
+SPEC_FAMILIES = ["internlm2-1.8b",      # GQA 2:1 (reduced)
+                 "gemma-7b"]            # MHA, tied embeddings
+
+
+def _model(arch, seed=0):
+    cfg = reduced(get_config(arch))
+    params, _ = api.init(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+def _drain(params, cfg, scfg, prompts, max_new):
+    eng = Engine(params, cfg, scfg)
+    reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+    eng.run_until_drained()
+    return eng, reqs
+
+
+# ----------------------------------------------------------------------
+# engine-level parity with the non-speculative paged oracle
+@pytest.mark.parametrize("arch", SPEC_FAMILIES)
+def test_spec_matches_paged_with_refill(arch):
+    """5 requests through 2 slots: slots complete mid-K-loop and refill
+    from the queue while other slots are mid-speculation; the emitted
+    streams must match the non-speculative paged engine request-for-
+    request."""
+    cfg, params = _model(arch)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 9, 7, 12, 6)]
+    base = dict(max_len=64, slots=2, sync_every=4, paged=True, block_size=8)
+    _, plain = _drain(params, cfg, ServeConfig(**base), prompts, max_new=6)
+    seng, spec = _drain(params, cfg,
+                        ServeConfig(speculative=True, **base),
+                        prompts, max_new=6)
+    assert seng.speculative
+    for i, (a, b) in enumerate(zip(plain, spec)):
+        assert a.out_tokens == b.out_tokens, (arch, i)
+        assert a.finish_reason == b.finish_reason == "max_new"
+
+
+def test_spec_truncation_parity():
+    """max_len truncation fires at the same token even when it lands in
+    the middle of a verify window (the emission cap clamps the accepted
+    prefix; overshoot K/V past the cap is junk above pos, never read)."""
+    cfg, params = _model("internlm2-1.8b")
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (4, 9)]
+    base = dict(max_len=32, slots=2, sync_every=8, paged=True, block_size=8)
+    _, plain = _drain(params, cfg, ServeConfig(**base), prompts,
+                      max_new=100)
+    _, spec = _drain(params, cfg, ServeConfig(speculative=True, **base),
+                     prompts, max_new=100)
+    for a, b in zip(plain, spec):
+        assert a.out_tokens == b.out_tokens
+        assert a.finish_reason == b.finish_reason == "max_len"
+
+
+def test_spec_prefix_cache_parity():
+    """A speculative engine admitting through prefix-cache hits backfills
+    the draft history from the cached prompt tokens; streams stay exact."""
+    cfg, params = _model("internlm2-1.8b")
+    rng = np.random.RandomState(3)
+    common = rng.randint(0, cfg.vocab, size=16).astype(np.int32)
+    prompts = [np.concatenate([common,
+                               rng.randint(0, cfg.vocab,
+                                           n).astype(np.int32)])
+               for n in (4, 3, 5)]
+    base = dict(max_len=64, slots=2, sync_every=4, paged=True, block_size=8)
+    _, plain = _drain(params, cfg, ServeConfig(**base),
+                      [p.copy() for p in prompts], max_new=6)
+    seng, spec = _drain(params, cfg,
+                        ServeConfig(speculative=True, **base),
+                        [p.copy() for p in prompts], max_new=6)
+    assert seng.metrics.counter("engine.prefix_hit_blocks").value > 0
+    for a, b in zip(plain, spec):
+        assert a.out_tokens == b.out_tokens
+
+
+def test_spec_moe_family_falls_back():
+    """MoE couples batch rows through expert capacity, so speculation
+    falls back to non-speculative paged decode — observably, with
+    identical tokens."""
+    cfg, params = _model("qwen3-moe-30b-a3b")
+    rng = np.random.RandomState(4)
+    prompts = [rng.randint(0, cfg.vocab, size=6).astype(np.int32)
+               for _ in range(2)]
+    base = dict(max_len=32, slots=2, sync_every=4, paged=True, block_size=8)
+    _, plain = _drain(params, cfg, ServeConfig(**base), prompts, max_new=5)
+    seng, spec = _drain(params, cfg,
+                        ServeConfig(speculative=True, **base),
+                        prompts, max_new=5)
+    assert seng.paged and not seng.speculative
+    assert seng.metrics.counter("engine.spec_fallback").value == 1
+    for a, b in zip(plain, spec):
+        assert a.out_tokens == b.out_tokens
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="paged"):
+        ServeConfig(speculative=True)
+    with pytest.raises(ValueError, match="greedy"):
+        ServeConfig(speculative=True, paged=True, max_len=64, block_size=8,
+                    temperature=0.7)
+    with pytest.raises(ValueError, match="spec_draft"):
+        ServeConfig(speculative=True, paged=True, max_len=64, block_size=8,
+                    spec_draft=0)
+
+
+# ----------------------------------------------------------------------
+# draft-acceptance semantics (loop-level, injected draft oracles)
+def _spec_loop_state(cfg, params, scfg, prompt, max_new):
+    """A speculative engine advanced one sync, its slot-0 table fully
+    pre-allocated so a direct spec_decode_loop call never writes through
+    null-block padding."""
+    eng = Engine(params, cfg, scfg)
+    req = eng.submit(prompt, max_new=max_new)
+    eng.step()
+    assert not req.done
+    # the engine's writeback is lazy — make the pool authoritative before
+    # handing eng.caches to a direct loop call
+    eng.flush_kv()
+    sid = eng._seq_of_slot[0]
+    eng.alloc.extend_to(sid, scfg.max_len)
+    eng._bt[0] = padded_table(eng.alloc.table(sid), eng.nb_max)
+    bt = jnp.asarray(eng._bt)
+    return eng, req, bt
+
+
+def _greedy_stream(cfg, params, scfg_base, prompt, max_new):
+    """Ground truth: prompt ++ the non-speculative greedy continuation,
+    as one position-indexed token array."""
+    _, (ref,) = _drain(params, cfg, ServeConfig(**scfg_base),
+                       [prompt.copy()], max_new=max_new)
+    stream = np.concatenate([prompt,
+                             np.asarray(ref.out_tokens, np.int32)])
+    pad = np.zeros(scfg_base["max_len"], np.int32)
+    pad[:len(stream)] = stream
+    return pad, len(stream)
+
+
+def test_spec_oracle_draft_accepts_all():
+    """A draft that always proposes the true greedy continuation is fully
+    accepted: every verify emits d+1 tokens and the stream is exact."""
+    cfg, params = _model("internlm2-1.8b")
+    base = dict(max_len=64, slots=1, sync_every=4, paged=True, block_size=8)
+    prompt = np.random.RandomState(1).randint(
+        0, cfg.vocab, size=6).astype(np.int32)
+    stream, n_stream = _greedy_stream(cfg, params, base, prompt, max_new=40)
+    scfg = ServeConfig(speculative=True, **base)
+    eng, req, bt = _spec_loop_state(cfg, params, scfg, prompt.copy(),
+                                    max_new=40)
+    pos0 = int(np.asarray(eng._pos)[0])
+    assert req.out_tokens == list(stream[len(prompt):pos0 + 1])
+    sarr = jnp.asarray(stream[None])
+    k, d = 3, scfg.spec_draft
+
+    def oracle(hist, pos, last, dd):
+        idx = jnp.clip(pos[:, None] + 1 + jnp.arange(dd)[None, :], 0,
+                       scfg.max_len - 1)
+        return jnp.take_along_axis(
+            jnp.broadcast_to(sarr, (pos.shape[0], scfg.max_len)), idx,
+            axis=1)
+
+    (out, emitted, stats, *_rest) = tfm.spec_decode_loop(
+        params, cfg, eng.caches, eng._hist, eng._pos, eng._last,
+        eng._active, eng._remaining, eng._rng, k=k, d=d,
+        max_len=scfg.max_len, bt=bt, draft_fn=oracle)
+    acc, prop = (int(x) for x in np.asarray(stats))
+    assert prop == k * d and acc == k * d          # everything accepted
+    em = int(np.asarray(emitted)[0])
+    assert em == k * (d + 1)
+    want = stream[pos0 + 1:pos0 + 1 + em]
+    assert pos0 + 1 + em <= n_stream
+    np.testing.assert_array_equal(np.asarray(out)[0, :em], want)
+
+
+def test_spec_adversarial_draft_accepts_none():
+    """A draft that proposes impossible tokens is fully rejected: every
+    verify still emits exactly one correct token (the non-speculative
+    stream), nothing is accepted, and the cache stays coherent."""
+    cfg, params = _model("internlm2-1.8b")
+    base = dict(max_len=64, slots=1, sync_every=4, paged=True, block_size=8)
+    prompt = np.random.RandomState(5).randint(
+        0, cfg.vocab, size=6).astype(np.int32)
+    stream, n_stream = _greedy_stream(cfg, params, base, prompt, max_new=40)
+    scfg = ServeConfig(speculative=True, **base)
+    eng, req, bt = _spec_loop_state(cfg, params, scfg, prompt.copy(),
+                                    max_new=40)
+    pos0 = int(np.asarray(eng._pos)[0])
+    k, d = 3, scfg.spec_draft
+
+    def hostile(hist, pos, last, dd):
+        return jnp.full((pos.shape[0], dd), -1, jnp.int32)
+
+    (out, emitted, stats, *_rest) = tfm.spec_decode_loop(
+        params, cfg, eng.caches, eng._hist, eng._pos, eng._last,
+        eng._active, eng._remaining, eng._rng, k=k, d=d,
+        max_len=scfg.max_len, bt=bt, draft_fn=hostile)
+    acc, prop = (int(x) for x in np.asarray(stats))
+    assert prop == k * d and acc == 0              # nothing accepted
+    em = int(np.asarray(emitted)[0])
+    assert em == k                                 # 1 corrected token each
+    want = stream[pos0 + 1:pos0 + 1 + em]
+    assert pos0 + 1 + em <= n_stream
+    np.testing.assert_array_equal(np.asarray(out)[0, :em], want)
