@@ -461,6 +461,92 @@ def run(quick: bool = False, json_path: str = JSON_PATH,
     return out
 
 
+
+def run_oversubscribe(quick: bool = False, json_path: str = JSON_PATH,
+                      arch: str = "internlm2-1.8b", sync_every: int = 4):
+    """KV oversubscription (PR 8): a session load whose full-concurrency
+    working set is ~4x the KV pool.  With swap OFF the seed behavior
+    applies — the allocator completes victims early as
+    ``kv_pool_exhausted``.  With swap ON the engine preempts whole
+    sessions to host memory and restores them block-exact, so the same
+    pool sustains the load: every request completes ``max_new`` and the
+    token streams match an ample-pool oracle."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.models import api
+    from repro.serving import Engine, ServeConfig, make_engine_fns
+
+    cfg = reduced(get_config(arch))
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(5)
+    n_req = 8 if quick else 16
+    plen, max_new, bs, slots, kv_blocks = 8, 16, 8, 8, 6
+    prompts = [rng.randint(0, cfg.vocab, size=plen).astype(np.int32)
+               for _ in range(n_req)]
+    seq_blocks = -(-(plen + max_new) // bs)
+    ratio = slots * seq_blocks / kv_blocks
+    out = {"meta": {"arch": arch, "quick": quick, "n_requests": n_req,
+                    "prompt_len": plen, "max_new": max_new,
+                    "block_size": bs, "slots": slots,
+                    "kv_blocks": kv_blocks,
+                    "oversubscription": round(ratio, 2)}}
+
+    def drain(scfg):
+        eng = Engine(params, cfg, scfg,
+                     shared_fns=make_engine_fns(cfg, scfg))
+        t0 = time.perf_counter()
+        reqs, peak = _drain_tracking_concurrency(eng, prompts, max_new)
+        wall = time.perf_counter() - t0
+        snap = eng.metrics.snapshot()
+        toks = sum(len(r.out_tokens) for r in reqs)
+        return {"wall_s": wall, "peak_concurrency": peak,
+                "decoded_tokens": toks,
+                "tok_per_s": toks / max(wall, 1e-9),
+                "victims": sum(r.finish_reason == "kv_pool_exhausted"
+                               for r in reqs),
+                "swap_out": int(snap.get("engine.kv_swap_out", 0)),
+                "swap_in": int(snap.get("engine.kv_swap_in", 0)),
+                "swapped_blocks": int(snap.get("engine.kv_swapped_blocks",
+                                               0)),
+                "_tokens": [list(r.out_tokens) for r in reqs]}
+
+    oracle = drain(ServeConfig(max_len=32, slots=slots,
+                               sync_every=sync_every, paged=True,
+                               block_size=bs, kv_blocks=64,
+                               prefix_cache=False))
+    base = drain(ServeConfig(max_len=32, slots=slots,
+                             sync_every=sync_every, paged=True,
+                             block_size=bs, kv_blocks=kv_blocks,
+                             prefix_cache=True))
+    swap = drain(ServeConfig(max_len=32, slots=slots,
+                             sync_every=sync_every, paged=True,
+                             block_size=bs, kv_blocks=kv_blocks,
+                             prefix_cache=True, kv_swap=True))
+    assert base["victims"] > 0, \
+        "baseline must reproduce the seed's kv_pool_exhausted victims"
+    assert swap["victims"] == 0, "swap must eliminate early completions"
+    assert swap["swap_out"] > 0 and swap["swap_in"] == swap["swap_out"]
+    assert swap["_tokens"] == oracle["_tokens"], \
+        "swapped decode lost token parity with the ample-pool oracle"
+    for label, res in (("oracle", oracle), ("swap_off", base),
+                       ("swap_on", swap)):
+        res.pop("_tokens")
+        out[label] = res
+        emit(f"serving/oversubscribe/{label}",
+             1e6 * res["wall_s"] / max(res["decoded_tokens"], 1),
+             f"tok_per_s={res['tok_per_s']:.1f};victims={res['victims']};"
+             f"swaps={res['swap_out']}")
+    emit("serving/oversubscribe/sustained_ratio", 0.0,
+         f"ratio={ratio:.1f}x;swaps={swap['swap_out']};"
+         f"victims_off={base['victims']}")
+    if json_path:
+        mode = "oversubscribe_quick" if quick else "oversubscribe"
+        write_bench_json(json_path, lambda prev: {**prev, mode: out})
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -470,11 +556,16 @@ if __name__ == "__main__":
     ap.add_argument("--paged", action="store_true",
                     help="paged-KV scenarios: concurrent-session capacity "
                          "at fixed KV memory + shared-prefix cache workload")
+    ap.add_argument("--oversubscribe", action="store_true",
+                    help="KV oversubscription mode: 4x working set vs pool, "
+                         "swap-off victims vs swap-on sustained sessions")
     ap.add_argument("--trace-overhead", action="store_true",
                     help="tracing-cost mode: identical fused workload with "
                          "the null tracer vs full span sampling")
     args = ap.parse_args()
-    if args.trace_overhead:
+    if args.oversubscribe:
+        run_oversubscribe(quick=args.quick)
+    elif args.trace_overhead:
         run_trace_overhead(quick=args.quick, sync_every=args.sync_every)
     elif args.paged:
         run_paged(quick=args.quick, sync_every=args.sync_every)

@@ -122,7 +122,8 @@ def build_engine(arch: str = "internlm2-1.8b", max_len: int = 64,
                  prefill_bucketing: bool = True, paged: bool = False,
                  block_size: int = 16, kv_blocks: int = 0,
                  prefix_cache: bool = True, speculative: bool = False,
-                 spec_draft: int = 3):
+                 spec_draft: int = 3, kv_swap: bool = False,
+                 swap_tier: str = "host"):
     """One continuous-batching LM engine.  Weights come from
     ``weights_path`` (a ``checkpoint.Checkpointer`` directory) when given,
     else from deterministic init at ``seed`` — either way the worker holds
@@ -151,7 +152,8 @@ def build_engine(arch: str = "internlm2-1.8b", max_len: int = 64,
                        prefill_bucketing=prefill_bucketing, paged=paged,
                        block_size=block_size, kv_blocks=kv_blocks,
                        prefix_cache=prefix_cache, speculative=speculative,
-                       spec_draft=spec_draft)
+                       spec_draft=spec_draft, kv_swap=kv_swap,
+                       swap_tier=swap_tier)
     # inside a remote worker, report into the registry its heartbeats
     # ship — that is how engine.* counters and the paged engine's
     # kv_blocks_* gauges reach the router's admission headroom gate

@@ -172,11 +172,22 @@ class StreamBackend:
         return out
 
 
+#: payload sentinel tag for warm KV migration: a payload of
+#: ``(KV_IMPORT_TAG, state)`` carries a drained replica's exported KV
+#: blocks to its sessions' new home, where the engine adopts them before
+#: the batch's real requests run (imports are idempotent, so the router's
+#: at-least-once delivery is safe).
+KV_IMPORT_TAG = "__kv_import__"
+
+
 class EngineBackend:
     """One continuous-batching LM engine per replica.
 
     Payloads are ``(prompt_tokens, max_new)``; results are the generated
     token lists.  The whole pulled batch shares the engine's decode slots.
+    A ``(KV_IMPORT_TAG, state)`` payload instead adopts a migrated
+    replica's KV blocks (see :data:`KV_IMPORT_TAG`) and acks with
+    ``("kv_imported", n_blocks)``.
 
     Streaming: when the driver binds an emitter (:meth:`bind_emitter`),
     each engine host sync forwards a ``(new_tokens, done)`` frame for the
@@ -200,6 +211,11 @@ class EngineBackend:
         so engine-side spans parent into the cluster request's trace."""
         self._trace_ctxs = ctxs
 
+    @staticmethod
+    def _is_kv_import(payload) -> bool:
+        return isinstance(payload, tuple) and len(payload) == 2 and \
+            isinstance(payload[0], str) and payload[0] == KV_IMPORT_TAG
+
     def process(self, payloads: List[Any]) -> List[Any]:
         emit = self._emit
         ctxs = self._trace_ctxs
@@ -211,12 +227,30 @@ class EngineBackend:
                 return None
             return lambda req, toks, done: emit(i, (toks, done))
 
-        reqs = [self.engine.submit(prompt, max_new=max_new,
-                                   on_tokens=on_tokens(i),
-                                   trace_ctx=ctxs[i])
-                for i, (prompt, max_new) in enumerate(payloads)]
+        results: List[Any] = [None] * len(payloads)
+        # adopt migrated KV blocks FIRST so this very batch's requests
+        # (the migrated sessions, rerouted here) hit the warm prefixes
+        for i, payload in enumerate(payloads):
+            if self._is_kv_import(payload):
+                imp = getattr(self.engine, "import_kv_state", None)
+                results[i] = ("kv_imported",
+                              imp(payload[1]) if imp is not None else 0)
+        live = [(i, p) for i, p in enumerate(payloads)
+                if results[i] is None]
+        reqs = [(i, self.engine.submit(prompt, max_new=max_new,
+                                       on_tokens=on_tokens(i),
+                                       trace_ctx=ctxs[i]))
+                for i, (prompt, max_new) in live]
         self.engine.run_until_drained()
-        return [r.out_tokens for r in reqs]
+        for i, r in reqs:
+            results[i] = r.out_tokens
+        return results
+
+    def export_kv_state(self):
+        """Drain-time hand-off: the engine's migratable KV state (or None
+        when there is nothing to ship)."""
+        fn = getattr(self.engine, "export_kv_state", None)
+        return fn() if fn is not None else None
 
 
 # ----------------------------------------------------------------------
@@ -319,4 +353,17 @@ def run_replica_loop(backend, cfg: ReplicaConfig, io) -> None:
             return
         bsp.end()
         io.ack(batch, results, time.monotonic() - t0)
+    # graceful drain: a backend holding migratable session state (the LM
+    # engine's published KV blocks) exports it now — after the last batch,
+    # before the drained frame — and the transport publishes it to the
+    # parent, where the router ships it to the sessions' new homes
+    export = getattr(backend, "export_kv_state", None)
+    publish = getattr(io, "publish_kv_state", None)
+    if export is not None and publish is not None:
+        try:
+            state = export()
+        except Exception:       # noqa: BLE001 - hand-off is best-effort
+            state = None
+        if state is not None:
+            publish(state)
     io.close()

@@ -41,7 +41,8 @@ from repro.cluster.admission import AdmissionController, Rejected
 from repro.cluster.backends import BackendSpec
 from repro.cluster.metrics import (MetricsRegistry, merge_snapshots,
                                    null_registry)
-from repro.cluster.replica import ClusterRequest, ReplicaConfig, Status
+from repro.cluster.replica import (KV_IMPORT_TAG, ClusterRequest,
+                                   ReplicaConfig, Status)
 from repro.cluster.tracing import current_recorder, current_tracer
 from repro.cluster.transport import Transport, make_transport
 
@@ -73,12 +74,12 @@ class Router:
         self._rr = itertools.count()
         self._rids = itertools.count(1)
         # session placement ledger: session_key -> replica rid of the last
-        # successful dispatch, kept so a drain can *report* which sessions
-        # lose their warm state (ROADMAP: no cache handoff yet — remapped
-        # sessions restart cold, so surface them instead of hiding it).
-        # Bounded: this is drain-time reporting, not request state, so old
-        # entries evict LRU-ish rather than growing with total sessions
-        # ever served.
+        # successful dispatch.  A drain reads it twice: to *report* which
+        # sessions remap (last_remapped_sessions) and to *migrate* the
+        # drained backend's exported KV state to those sessions' new
+        # rendezvous homes (_migrate_kv).  Bounded: old entries evict
+        # LRU-ish rather than growing with total sessions ever served —
+        # an evicted key only loses the warm hand-off, never correctness.
         self._session_homes: Dict[str, int] = {}
         self.session_ledger_cap = 65536
         self.last_remapped_sessions: Dict[int, List[str]] = {}
@@ -111,7 +112,8 @@ class Router:
         self._set_pool_gauge()
         return worker
 
-    def remove_replica(self, rid: int, drain: bool = True) -> None:
+    def remove_replica(self, rid: int, drain: bool = True,
+                       migrate: bool = True) -> None:
         """Take a replica out of rotation; by default let it finish its
         inbox first (graceful drain).
 
@@ -119,18 +121,62 @@ class Router:
         *only* its sessions: every key homed on a surviving replica keeps
         its placement (the rendezvous property,
         ``tests/test_cluster.py::test_drain_remaps_only_drained_sessions``).
-        Because there is no cache-state handoff yet, the remapped keys
-        restart cold elsewhere, so they are logged and exported via
-        ``last_remapped_sessions`` / the ``router.sessions_remapped``
-        counter for operators to correlate with latency spikes."""
+        With ``migrate=True`` (the default) the drained backend's exported
+        KV state — published by the replica driver just before the drained
+        signal — is shipped to each remapped session's new rendezvous
+        home, so those sessions resume *warm* (block-exact prefix reuse)
+        instead of restarting cold.  Backends that publish nothing (echo
+        workers, dense engines) keep the old log-and-forget behavior via
+        ``last_remapped_sessions`` / ``router.sessions_remapped``."""
         with self._lock:
             worker = self._replicas.pop(rid, None)
-        self._note_remapped_sessions(rid)
+        remapped = self._note_remapped_sessions(rid)
         self._set_pool_gauge()
         if worker is not None and drain:
             worker.drain()
+            if migrate:
+                self._migrate_kv(worker, remapped)
 
-    def _note_remapped_sessions(self, rid: int) -> None:
+    def _migrate_kv(self, worker: Transport,
+                    remapped: List[str]) -> None:
+        """Warm session migration: ship the drained worker's KV export to
+        each remapped session's new rendezvous home as a
+        ``(KV_IMPORT_TAG, state)`` payload, offered directly (admission
+        was already paid by the original requests).  One frame per
+        distinct target replica; imports are idempotent on the far side,
+        so at-least-once delivery — and a later retry landing the same
+        sessions' requests next to the import in one batch — is safe."""
+        state = getattr(worker, "kv_state", None)
+        if state is None or not remapped:
+            return
+        same_kind = [w for w in self.alive_replicas()
+                     if w.kind == worker.kind]
+        if not same_kind:
+            return
+        targets: Dict[int, Transport] = {}
+        for key in remapped:
+            home = max(same_kind,
+                       key=lambda w: _rendezvous_weight(key, w.rid))
+            targets[home.rid] = home
+        shipped = 0
+        for home in targets.values():
+            req = ClusterRequest((KV_IMPORT_TAG, state), kind=worker.kind,
+                                 rid=next(self._rids),
+                                 submitted_s=time.monotonic())
+            if home.offer(req):
+                shipped += 1
+            else:
+                self.metrics.counter("router.kv_migrate_failed").inc()
+        if shipped:
+            self.metrics.counter("router.sessions_migrated") \
+                .inc(len(remapped))
+            self.metrics.counter("router.kv_migrations").inc(shipped)
+            current_recorder().record("session_migrated",
+                                      replica=worker.rid,
+                                      sessions=len(remapped),
+                                      targets=shipped)
+
+    def _note_remapped_sessions(self, rid: int) -> List[str]:
         with self._lock:
             remapped = sorted(k for k, home in self._session_homes.items()
                               if home == rid)
@@ -139,7 +185,7 @@ class Router:
             if not remapped and rid in self.last_remapped_sessions:
                 # second notification for the same replica (e.g. a drain
                 # followed by its death spill): don't clobber the export
-                return
+                return []
             self.last_remapped_sessions[rid] = remapped
             while len(self.last_remapped_sessions) > 64:  # bounded history
                 self.last_remapped_sessions.pop(
@@ -147,10 +193,11 @@ class Router:
         if remapped:
             self.metrics.counter("router.sessions_remapped") \
                 .inc(len(remapped))
-            log.info("replica %d removed: %d session(s) remap and restart "
-                     "cold: %s", rid, len(remapped),
+            log.info("replica %d removed: %d session(s) remap: %s", rid,
+                     len(remapped),
                      ", ".join(remapped[:16]) +
                      (" …" if len(remapped) > 16 else ""))
+        return remapped
 
     def alive_replicas(self) -> List[Transport]:
         with self._lock:

@@ -122,6 +122,11 @@ class Transport:
         # transport wrote to the artifact store on death
         self._inflight_spans: Dict[int, Any] = {}
         self.flight_dumps: List[str] = []
+        # warm KV migration: the backend's drain-time export, published
+        # by the replica driver just before the drained signal.  The
+        # router reads this after drain() returns and ships it to the
+        # drained sessions' new homes; None = nothing to migrate.
+        self.kv_state: Any = None
 
     # -- control surface -------------------------------------------------
     def start(self) -> "Transport":
@@ -309,6 +314,10 @@ class LocalTransport(Transport):
 
     def begin(self, batch: List[ClusterRequest]) -> None:
         pass            # the driver hands the in-flight batch to spill()
+
+    def publish_kv_state(self, state: Any) -> None:
+        """Drain-time KV hand-off — same process, direct hand-over."""
+        self.kv_state = state
 
     @staticmethod
     def emit(req: ClusterRequest, frame: Any) -> None:
@@ -571,6 +580,12 @@ class WorkerIO:
             self._evt_seq = events[-1]["seq"]
         self._send(("dead", repr(error), current_tracer().drain(), events))
 
+    def publish_kv_state(self, state: Any) -> None:
+        """Drain-time KV hand-off: ship the backend's export on the wire.
+        Sent before close()'s ("drained",) frame, so FIFO ordering
+        guarantees the parent stores it before drain() returns."""
+        self._send(("kv_state", state), pickle_only=True)
+
     def close(self) -> None:
         if self.disconnected:
             return                      # the parent already spilled our work
@@ -785,6 +800,10 @@ class RemoteTransport(Transport):
                 req.emit_partial(msg[2])
         elif tag == "ready":
             self._ready.set()
+        elif tag == "kv_state":
+            # the drained worker's KV export; FIFO framing puts it ahead
+            # of ("drained",), so it is in place before drain() returns
+            self.kv_state = msg[1]
         elif tag == "drained":
             self._drained.set()
         elif tag == "dead":

@@ -37,7 +37,8 @@ from repro.cluster.framing import decode_frame, encode_frame, msgpack
 
 # Bump when hello/welcome/tag semantics change: a worker built from an
 # older checkout must be refused at the door, not fail mid-request.
-PROTOCOL_VERSION = 1
+# v2: drain-time ("kv_state", state) frame — warm KV migration hand-off.
+PROTOCOL_VERSION = 2
 
 # Bounds a malicious or corrupted length word before we try to allocate
 # it.  Note this is also the practical cap on a single artifact transfer

@@ -77,6 +77,17 @@ def main(argv=None):
     ap.add_argument("--kv-blocks", type=int, default=0,
                     help="usable pool blocks (paged); 0 = dense-equivalent "
                          "slots * max_len/block_size")
+    ap.add_argument("--kv-swap", action="store_true",
+                    help="KV lifecycle swap (paged): under pool pressure "
+                         "preempt whole lowest-priority sessions to the "
+                         "swap tier and restore them block-exact at "
+                         "re-admit instead of completing them early as "
+                         "kv_pool_exhausted victims")
+    ap.add_argument("--swap-tier", default="host",
+                    choices=("host", "artifact"),
+                    help="where swapped KV blocks live: host memory "
+                         "(inline bytes) or the content-addressed "
+                         "artifact store")
     ap.add_argument("--speculative", action="store_true",
                     help="speculative multi-token decode on the paged path: "
                          "an n-gram draft proposes spec-draft tokens per "
@@ -130,7 +141,8 @@ def main(argv=None):
                        temperature=args.temperature, paged=args.paged,
                        block_size=args.block_size, kv_blocks=args.kv_blocks,
                        speculative=args.speculative,
-                       spec_draft=args.spec_draft)
+                       spec_draft=args.spec_draft, kv_swap=args.kv_swap,
+                       swap_tier=args.swap_tier)
     rng = np.random.RandomState(args.seed)
     prompts = [rng.randint(0, cfg.vocab,
                            size=rng.randint(4, 16)).astype(np.int32)
@@ -166,7 +178,9 @@ def main(argv=None):
                                paged=args.paged, block_size=args.block_size,
                                kv_blocks=args.kv_blocks,
                                speculative=args.speculative,
-                               spec_draft=args.spec_draft)
+                               spec_draft=args.spec_draft,
+                               kv_swap=args.kv_swap,
+                               swap_tier=args.swap_tier)
             for _ in range(args.replicas):
                 router.add_replica(spec=spec, cfg=rcfg,
                                    transport=args.transport)

@@ -1,5 +1,7 @@
 from repro.serving.engine import (Engine, EngineFns, Request,  # noqa: F401
-                                  ServeConfig, make_engine_fns, pad_tolerant)
+                                  ServeConfig, SessionSnapshot,
+                                  make_engine_fns, pad_tolerant)
 from repro.serving.kvpool import (BlockAllocator, PoolExhausted,  # noqa: F401
                                   hash_token_blocks, hash_token_blocks_memo,
-                                  padded_table)
+                                  pack_block_arrays, padded_table,
+                                  unpack_block_arrays)

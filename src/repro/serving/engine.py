@@ -53,7 +53,8 @@ from repro.cluster.tracing import (NULL_SPAN, annotate, current_recorder,
                                    current_tracer)
 from repro.models import api, transformer as tfm
 from repro.serving.kvpool import (NULL_BLOCK, BlockAllocator, PoolExhausted,
-                                  hash_token_blocks_memo, padded_table)
+                                  hash_token_blocks_memo, pack_block_arrays,
+                                  padded_table, unpack_block_arrays)
 
 
 @dataclasses.dataclass
@@ -92,6 +93,15 @@ class ServeConfig:
     # (expert capacity couples the verify window's batch rows).
     speculative: bool = False
     spec_draft: int = 3             # drafted tokens per verify window
+    # KV lifecycle (paged only): under block-pool pressure, preempt the
+    # lowest-priority active session — serialize its blocks off-device,
+    # free them, and re-admit later with the swapped prefix restored
+    # block-exact — instead of completing it early as a
+    # `kv_pool_exhausted` victim.  Turns 4x pool oversubscription into
+    # routine operation; token streams are unchanged by construction
+    # (the restored pool rows are the bytes that were swapped out).
+    kv_swap: bool = False
+    swap_tier: str = "host"         # "host" (in-request bytes) | "artifact"
 
     def __post_init__(self):
         if self.fused and self.sync_every < 1:
@@ -124,6 +134,13 @@ class ServeConfig:
             if self.spec_draft < 1:
                 raise ValueError(f"spec_draft must be >= 1, got "
                                  f"{self.spec_draft}")
+        if self.kv_swap and not self.paged:
+            raise ValueError("kv_swap=True requires paged=True: swap "
+                             "serializes KV *blocks*; the dense layout "
+                             "has no block granularity to preempt at")
+        if self.swap_tier not in ("host", "artifact"):
+            raise ValueError(f"swap_tier must be 'host' or 'artifact', "
+                             f"got {self.swap_tier!r}")
 
 
 @dataclasses.dataclass
@@ -150,11 +167,39 @@ class Request:
     # submit() time (memoized across identical prompts) so the sha256
     # chain never runs on the admit critical path
     block_hashes: Optional[List[bytes]] = None
+    # KV-swap preemption order: lower preempts first; ties break toward
+    # the newest request (least decode work lost).  0 is the default
+    # class — the future per-tenant priority plumbing lands here.
+    priority: int = 0
+    # set while the request is swapped out: the serialized KV state a
+    # re-admit restores instead of re-prefilling (see SessionSnapshot)
+    kv_snapshot: Optional["SessionSnapshot"] = None
 
     @property
     def decoded(self) -> int:
         """Tokens produced by decode steps (excludes the prefill sample)."""
         return max(len(self.out_tokens) - 1, 0)
+
+
+@dataclasses.dataclass
+class SessionSnapshot:
+    """Everything a preempted session needs to resume block-exact.
+
+    The device side is ``n_blocks`` pool rows covering positions
+    ``[0, pos)`` — serialized via :func:`pack_block_arrays` and carried
+    either inline (``data``, host swap tier) or as a content-addressed
+    ``digest`` in the ArtifactStore (``swap_tier="artifact"``).  The host
+    side is the three scalars the fused loop needs: the next write
+    position, the remaining decode budget, and the last emitted token
+    (the next step's input).  ``Request.out_tokens`` stays on the request
+    itself, so emission resumes mid-stream with nothing re-emitted.
+    """
+    pos: int
+    rem: int
+    last_tok: int
+    n_blocks: int
+    data: Optional[bytes] = None
+    digest: Optional[str] = None
 
 
 def _insert_slot(big, small, slot: int):
@@ -318,6 +363,25 @@ class EngineFns:
                 lambda c: c.at[:, dst].set(c[:, src]), caches)
 
         self.cow = jax.jit(cow, donate_argnums=(0,))
+
+        def kv_export(caches, ids):
+            """Gather pool rows ``ids`` from every layer's K/V pool (the
+            swap-out / migration serialization read).  NOT donated — the
+            pool stays live; ``ids`` is padded to a power of two with the
+            null block and the junk pad rows are sliced off host-side."""
+            return jax.tree_util.tree_map(lambda c: c[:, ids], caches)
+
+        self.kv_export = jax.jit(kv_export)
+
+        def kv_import(caches, ids, rows):
+            """Scatter serialized rows back into pool blocks ``ids`` (the
+            swap-in / migration adopt write; donated).  Pad ids are the
+            null block, which absorbs the pad rows' junk by design."""
+            return jax.tree_util.tree_map(
+                lambda c, r: c.at[:, ids].set(r.astype(c.dtype)),
+                caches, rows)
+
+        self.kv_import = jax.jit(kv_import, donate_argnums=(0,))
 
     def flush_fn(self, width: int) -> Callable:
         """Jitted lazy-writeback flush: write rows ``[start[s], stop[s])``
@@ -517,6 +581,9 @@ class Engine:
             self._virt = None
             self._virt_width = 0
             self._wb_h = np.zeros((scfg.slots,), np.int64)
+            # swap_tier="artifact": lazily-built content-addressed store
+            # for swapped block payloads (host tier carries bytes inline)
+            self._swap_store = None
             self.metrics.gauge("engine.kv_blocks_total").set(n_blocks)
             self._kv_gauges()
         else:
@@ -549,10 +616,11 @@ class Engine:
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int,
                on_tokens: Optional[Callable] = None,
-               trace_ctx: Any = None) -> Request:
+               trace_ctx: Any = None, priority: int = 0) -> Request:
         req = Request(rid=next(self._rids),
                       prompt=np.asarray(prompt, np.int32), max_new=max_new,
-                      submit_t=time.perf_counter(), on_tokens=on_tokens)
+                      submit_t=time.perf_counter(), on_tokens=on_tokens,
+                      priority=priority)
         if self.paged and self.scfg.prefix_cache:
             # sha256 prefix-chain hashing runs here — off the admit/step
             # critical path, and memoized across identical prompts
@@ -800,6 +868,14 @@ class Engine:
             # block (fork/victim flush before sharing or freeing, and
             # _finish resets a dead slot's watermark) — so the pool is
             # authoritative for everything an admit can touch
+            if self.queue[0].kv_snapshot is not None:
+                # a preempted session resumes by block import, never by
+                # re-prefill; deferring it keeps FIFO (nothing behind it
+                # may overtake the resume)
+                if self._try_restore(free):
+                    continue
+                self.metrics.counter("engine.admit_deferred_kv").inc()
+                break
             try:
                 prep = self._prep_paged(self.queue[0])
             except _PromptTooLong as e:
@@ -846,8 +922,11 @@ class Engine:
                 rows.append((req, slot, sid, hashes, n_cached_tok,
                              suffix_len))
                 try:
-                    prep = self._prep_paged(self.queue[0]) if self.queue \
-                        else None
+                    # a snapshot-carrying head never joins a prefill
+                    # batch — the outer loop restores it via block import
+                    prep = self._prep_paged(self.queue[0]) \
+                        if self.queue and \
+                        self.queue[0].kv_snapshot is None else None
                 except _PromptTooLong:
                     # oversized next prompt: stop batching here; the head
                     # of the next admit loop rejects it individually,
@@ -998,6 +1077,272 @@ class Engine:
         self._finish(slot, "kv_pool_exhausted")
         self._emit(req, [], True)
 
+    # ------------------------------------------------------------------
+    # KV lifecycle: preemption + host/artifact swap (ServeConfig.kv_swap)
+    # and warm migration export/import (cluster drain path).  Both ride
+    # the same serialization primitives: pin the blocks, flush the
+    # resident view so the pool is authoritative, gather the rows in one
+    # jitted call, and pack them with kvpool.pack_block_arrays.
+    def _swap_payload_store(self):
+        if self._swap_store is None:
+            # deferred import: artifacts -> backends -> engine is a cycle
+            # at module scope
+            from repro.cluster.artifacts import ArtifactStore
+            self._swap_store = ArtifactStore()
+        return self._swap_store
+
+    def _gather_block_rows(self, blocks: List[int]) -> bytes:
+        """Serialize pool rows ``blocks`` (caller flushed + pinned)."""
+        ids = np.asarray(blocks, np.int32)
+        n_pad = _next_pow2(len(ids)) if len(ids) > 1 else 1
+        ids_p = np.full((n_pad,), NULL_BLOCK, np.int32)
+        ids_p[:len(ids)] = ids
+        rows = self.fns.kv_export(self.caches, jnp.asarray(ids_p))
+        arrays = [np.asarray(leaf)[:, :len(ids)]
+                  for leaf in jax.tree_util.tree_leaves(rows)]
+        return pack_block_arrays(arrays)
+
+    def _scatter_block_rows(self, blocks: List[int], arrays) -> None:
+        """Write serialized rows (one array per cache leaf, block axis 1)
+        into pool blocks ``blocks``."""
+        ids = np.asarray(blocks, np.int32)
+        n_pad = _next_pow2(len(ids)) if len(ids) > 1 else 1
+        ids_p = np.full((n_pad,), NULL_BLOCK, np.int32)
+        ids_p[:len(ids)] = ids
+        padded = []
+        for a in arrays:
+            if n_pad > a.shape[1]:
+                fill = np.zeros(a.shape[:1] + (n_pad - a.shape[1],)
+                                + a.shape[2:], a.dtype)
+                a = np.concatenate([a, fill], axis=1)
+            padded.append(jnp.asarray(a))
+        rows = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(self.caches), padded)
+        self.caches = self.fns.kv_import(self.caches, jnp.asarray(ids_p),
+                                         rows)
+
+    def _wave_hi(self, s: int, adv: int, d: int) -> int:
+        """Highest position (exclusive) slot ``s`` can write this sync."""
+        scfg = self.scfg
+        lo = int(self._pos_h[s])
+        hi = min(lo + min(adv, int(self._rem_h[s])), scfg.max_len)
+        if d:
+            # the last verify window scatters up to d+1 rows past the
+            # final emitted position
+            hi = min(min(lo + min(adv, int(self._rem_h[s])),
+                         scfg.max_len - 1) + d + 1, scfg.max_len)
+        return hi
+
+    def _swap_demand(self, s: int, adv: int, d: int) -> int:
+        """Blocks slot ``s`` will claim this sync: fresh allocations plus
+        COW copies of shared blocks in its write range."""
+        bs = self.scfg.block_size
+        sid = self._seq_of_slot[s]
+        lo = int(self._pos_h[s])
+        hi = self._wave_hi(s, adv, d)
+        table = self.alloc.table(sid)
+        fresh = max(-(-hi // bs) - len(table), 0)
+        shared = sum(1 for j in range(lo // bs, min(-(-hi // bs),
+                                                    len(table)))
+                     if self.alloc.refcount(table[j]) > 1)
+        return fresh + shared
+
+    def _swap_out(self, slot: int):
+        """Preempt slot ``slot``: serialize its blocks off-device, free
+        them, and requeue the request at the queue FRONT carrying a
+        :class:`SessionSnapshot` — it resumes ahead of never-admitted
+        requests as soon as headroom returns.  The flush runs while the
+        victim's table is untouched, so the export reads exactly the rows
+        decode wrote."""
+        req = self.active[slot]
+        sid = self._seq_of_slot[slot]
+        self._flush_virt()
+        pos = int(self._pos_h[slot])
+        table = self.alloc.table(sid)
+        blocks = table[:-(-pos // self.scfg.block_size)] if pos else []
+        snap = SessionSnapshot(
+            pos=pos, rem=int(self._rem_h[slot]),
+            last_tok=req.out_tokens[-1] if req.out_tokens else 0,
+            n_blocks=len(blocks))
+        if blocks:
+            self.alloc.pin(blocks)
+            try:
+                data = self._gather_block_rows(blocks)
+            finally:
+                self.alloc.unpin(blocks)
+            if self.scfg.swap_tier == "artifact":
+                snap.digest = self._swap_payload_store().put_bytes(data)
+            else:
+                snap.data = data
+        req.kv_snapshot = snap
+        self.queue.appendleft(req)
+        self.active[slot] = None
+        self.alloc.free_seq(sid)
+        self._seq_of_slot[slot] = None
+        self._bt[slot] = NULL_BLOCK
+        self._bt_dirty = True
+        self._wb_h[slot] = self._pos_h[slot]
+        self._act_h[slot] = False
+        self._active = self._active.at[slot].set(False)
+        self._last = self._last.at[slot].set(0)
+        # the freed blocks can be rebound this very sync — regather so no
+        # stale resident row aliases the new owner's content
+        self._virt = None
+        self.metrics.counter("engine.kv_swap_out").inc()
+        self.metrics.counter("engine.kv_swapped_blocks").inc(len(blocks))
+        current_recorder().record("kv_swap_out", rid=req.rid, slot=slot,
+                                  pos=pos, blocks=len(blocks))
+        self._kv_gauges()
+
+    def _preempt_for_headroom(self, adv: int, d: int):
+        """Swap-out preflight: while this wave's worst-case block demand
+        exceeds the pool, preempt the lowest-``(priority, -rid)`` active
+        session (lowest priority class first; ties toward the newest
+        request, which has the least decode work to lose).  Runs BEFORE
+        cow_targets/extend_to mutate any table, so exports always see
+        consistent tables and no COW pair can reference a freed block.  A
+        lone survivor is never preempted — if it still cannot fit, the
+        existing ``_exhaust_victim`` fallback applies."""
+        while True:
+            live = [(r.priority, -r.rid, s)
+                    for s, r in enumerate(self.active) if r is not None]
+            if len(live) <= 1:
+                return
+            demand = sum(self._swap_demand(s, adv, d) for _, _, s in live)
+            if demand <= self.alloc.available_blocks:
+                return
+            live.sort()
+            self._swap_out(live[0][2])
+
+    def _try_restore(self, free: List[int]) -> bool:
+        """Queue head is a swapped-out session: re-admit it by importing
+        its serialized blocks instead of prefilling.  True = handled
+        (restored into a slot, or finished as unrestorable); False =
+        deferred on pool pressure with the queue left intact — FIFO
+        holds, so the preempted session resumes before anything behind
+        it."""
+        req = self.queue[0]
+        snap = req.kv_snapshot
+        need = snap.n_blocks + 1            # +1 decode-ahead block
+        if need > self.alloc.num_blocks:
+            # no future state of this pool can restore it: complete
+            # explicitly (the single-victim contract)
+            self.queue.popleft()
+            req.kv_snapshot = None
+            self.metrics.counter("engine.kv_pool_exhausted").inc()
+            current_recorder().record("kv_pool_exhausted", rid=req.rid,
+                                      pos=snap.pos, at="restore")
+            req.done = True
+            req.finish_reason = "kv_pool_exhausted"
+            req.done_t = time.perf_counter()
+            self._close_span(req)
+            self.finished.append(req)
+            self._emit(req, [], True)
+            return True
+        if need > self.alloc.available_blocks:
+            return False
+        slot = free.pop(0)
+        self.queue.popleft()
+        # survivors may hold lazily-pending decode rows that exist only in
+        # the resident view; the restore invalidates that view below, so
+        # flush them into the pool first or they would be silently dropped
+        self._flush_virt()
+        data = snap.data if snap.data is not None \
+            else self._swap_payload_store().read_bytes(snap.digest)
+        sid = self.alloc.new_seq()
+        self.alloc.extend_to(sid, snap.pos)
+        table = self.alloc.table(sid)
+        if snap.n_blocks:
+            self._scatter_block_rows(table, unpack_block_arrays(data))
+        self._seq_of_slot[slot] = sid
+        self._bt[slot] = padded_table(table, self.nb_max)
+        self._bt_dirty = True
+        # the pool now holds the restored rows; regather before decoding
+        self._virt = None
+        pos = snap.pos
+        self._pos_h[slot] = pos
+        self._wb_h[slot] = pos
+        self._rem_h[slot] = snap.rem
+        alive = snap.rem > 0 and pos < self.scfg.max_len - 1
+        self._act_h[slot] = alive
+        self._pos = self._pos.at[slot].set(pos)
+        self._last = self._last.at[slot].set(snap.last_tok if alive else 0)
+        self._remaining = self._remaining.at[slot].set(max(snap.rem, 0))
+        self._active = self._active.at[slot].set(alive)
+        if self.speculative:
+            # rebuild the draft history at absolute positions: prompt,
+            # then every token emitted so far (hist[pos] == last_tok)
+            toks = np.concatenate(
+                [req.prompt, np.asarray(req.out_tokens, np.int32)]
+            )[:self.scfg.max_len]
+            self._hist = self._hist.at[slot, :len(toks)].set(
+                jnp.asarray(toks, jnp.int32))
+        self.active[slot] = req
+        req.kv_snapshot = None
+        self.metrics.counter("engine.kv_swap_in").inc()
+        current_recorder().record("kv_swap_in", rid=req.rid, slot=slot,
+                                  pos=pos, blocks=snap.n_blocks)
+        if not alive:
+            self._finish(slot, "max_new" if snap.rem <= 0 else "max_len")
+        self._kv_gauges()
+        return True
+
+    # ------------------------------------------------------------------
+    # warm migration: drain-time hand-off of the prefix cache's published
+    # blocks to a session's new rendezvous home (cluster/router.py ships
+    # the frame; cluster/replica.py calls these between batches)
+    def export_kv_state(self) -> Optional[dict]:
+        """Serialize the prefix cache — ``(chained hash, block rows)`` in
+        LRU order — as one picklable frame, or None when there is nothing
+        to ship (dense engine / empty cache).  Published blocks are
+        immutable (decode COWs before writing), so the export needs no
+        quiesce beyond a flush; pins keep eviction away mid-gather."""
+        if not self.paged:
+            return None
+        items = self.alloc.prefix_items()
+        if not items:
+            return None
+        self.flush_kv()
+        blocks = [b for _, b in items]
+        self.alloc.pin(blocks)
+        try:
+            data = self._gather_block_rows(blocks)
+        finally:
+            self.alloc.unpin(blocks)
+        self.metrics.counter("engine.kv_export_blocks").inc(len(blocks))
+        current_recorder().record("kv_export", blocks=len(blocks))
+        return {"kind": "kv_blocks", "block_size": self.scfg.block_size,
+                "hashes": [h for h, _ in items], "data": data}
+
+    def import_kv_state(self, state) -> int:
+        """Adopt a migrated replica's prefix blocks: every unseen hash
+        binds a *free* block (never evicting — adopted entries arrive
+        evictable, so admission headroom never shrinks) and the shipped
+        rows are scattered in with one jitted call.  Idempotent: already
+        cached hashes are skipped, so at-least-once delivery is safe.
+        Returns the number of adopted blocks."""
+        if not self.paged or not isinstance(state, dict) \
+                or state.get("kind") != "kv_blocks" \
+                or state.get("block_size") != self.scfg.block_size:
+            return 0
+        arrays = unpack_block_arrays(state["data"])
+        ids: List[int] = []
+        cols: List[int] = []
+        for i, h in enumerate(state["hashes"]):
+            b = self.alloc.import_cached(h)
+            if b is None:
+                continue
+            ids.append(b)
+            cols.append(i)
+        if not ids:
+            return 0
+        sel = np.asarray(cols, np.intp)
+        self._scatter_block_rows(ids, [a[:, sel] for a in arrays])
+        self.metrics.counter("engine.kv_import_blocks").inc(len(ids))
+        current_recorder().record("kv_import", blocks=len(ids))
+        self._kv_gauges()
+        return len(ids)
+
     def _step_paged(self) -> bool:
         self._admit_paged()
         if not any(r is not None for r in self.active):
@@ -1009,6 +1354,11 @@ class Engine:
             "engine.decode_sync", parent=self._batch_ctx(),
             k=scfg.sync_every,
             n_active=sum(r is not None for r in self.active))
+        if scfg.kv_swap:
+            # swap preflight: make room by preempting whole sessions
+            # BEFORE any table mutates below, so swap-outs export
+            # consistent tables and never strand a COW pair
+            self._preempt_for_headroom(adv, d)
         # host pre-work: every active slot needs writable private blocks
         # covering every position this loop can write — allocate ahead,
         # COW any block shared with the prefix cache or a fork.  Under
@@ -1023,10 +1373,7 @@ class Engine:
                 continue
             sid = self._seq_of_slot[s]
             lo = int(self._pos_h[s])
-            hi = min(lo + min(adv, int(self._rem_h[s])), scfg.max_len)
-            if d:
-                hi = min(min(lo + min(adv, int(self._rem_h[s])),
-                             scfg.max_len - 1) + d + 1, scfg.max_len)
+            hi = self._wave_hi(s, adv, d)
             pairs = self.alloc.cow_targets(sid, lo, hi)
             try:
                 fresh = self.alloc.extend_to(sid, hi)

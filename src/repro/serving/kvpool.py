@@ -35,11 +35,67 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
+import struct
 from collections import OrderedDict
 from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
                     Tuple)
 
 NULL_BLOCK = 0
+
+# Serialized-block wire format magic (pack_block_arrays). Bump the digit
+# if the layout ever changes; unpack refuses unknown magics outright.
+_PACK_MAGIC = b"KVB1"
+
+
+def pack_block_arrays(arrays: Sequence) -> bytes:
+    """Serialize a list of numpy arrays to one deterministic byte string.
+
+    The format is self-describing and bit-exact: magic, count, then per
+    array the dtype string (which includes byte order, e.g. ``<f4``), the
+    shape, and the raw C-order buffer.  Pure numpy — no pickle, no jax —
+    so the same bytes come out on every host and the sha256 of the
+    payload is a stable content address for the ArtifactStore swap tier.
+    """
+    import numpy as np
+    out = [_PACK_MAGIC, struct.pack("<I", len(arrays))]
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        ds = a.dtype.str.encode("ascii")
+        raw = a.tobytes()
+        out.append(struct.pack("<H", len(ds)))
+        out.append(ds)
+        out.append(struct.pack("<B", a.ndim))
+        out.append(struct.pack(f"<{a.ndim}q", *a.shape))
+        out.append(struct.pack("<Q", len(raw)))
+        out.append(raw)
+    return b"".join(out)
+
+
+def unpack_block_arrays(data: bytes) -> List:
+    """Inverse of :func:`pack_block_arrays`; bit-exact roundtrip."""
+    import numpy as np
+    if data[:4] != _PACK_MAGIC:
+        raise ValueError("bad kv block payload magic")
+    off = 4
+    (count,) = struct.unpack_from("<I", data, off)
+    off += 4
+    arrays: List = []
+    for _ in range(count):
+        (dlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        dtype = np.dtype(data[off:off + dlen].decode("ascii"))
+        off += dlen
+        (ndim,) = struct.unpack_from("<B", data, off)
+        off += 1
+        shape = struct.unpack_from(f"<{ndim}q", data, off)
+        off += 8 * ndim
+        (nbytes,) = struct.unpack_from("<Q", data, off)
+        off += 8
+        a = np.frombuffer(data, dtype=dtype, count=nbytes // dtype.itemsize,
+                          offset=off).reshape(shape).copy()
+        off += nbytes
+        arrays.append(a)
+    return arrays
 
 
 def hash_token_blocks(tokens: Sequence[int], block_size: int) -> List[bytes]:
@@ -221,6 +277,22 @@ class BlockAllocator:
         for b in st.table:
             self._decref(b)
 
+    # -- serialization pins ----------------------------------------------
+    def pin(self, blocks: Iterable[int]) -> None:
+        """Take one extra reference on each block for the duration of a
+        serialization (swap-out / migration export).  A pinned block
+        cannot reach refcount 0 — so neither :meth:`free_seq` nor a
+        prefix-cache eviction can recycle it while its rows are being
+        gathered off the device.  Pair with :meth:`unpin` in a finally
+        block."""
+        for b in blocks:
+            self._ref[b] = self._ref.get(b, 0) + 1
+
+    def unpin(self, blocks: Iterable[int]) -> None:
+        """Release serialization pins taken by :meth:`pin`."""
+        for b in blocks:
+            self._decref(b)
+
     # -- sharing / COW ---------------------------------------------------
     def fork(self, seq_id: int) -> int:
         """New sequence sharing *all* of ``seq_id``'s blocks (refcounts
@@ -284,6 +356,32 @@ class BlockAllocator:
             self._ref[b] = self._ref.get(b, 0) + 1
             added += 1
         return added
+
+    def prefix_items(self) -> List[Tuple[bytes, int]]:
+        """Prefix-cache contents as ``(hash, block)`` pairs in LRU order
+        (oldest first) — the migration export's shipping manifest."""
+        return list(self._prefix.items())
+
+    def import_cached(self, h: bytes) -> Optional[int]:
+        """Bind one *free* block to prefix-cache entry ``h`` (a migrated
+        block about to be filled by a device import).
+
+        Returns the bound block id, or ``None`` when the hash is already
+        cached (LRU refreshed — the import is a no-op) or when no free
+        block exists.  Deliberately never evicts: adopted blocks enter as
+        ordinary cache entries with the cache's single reference, so they
+        stay evictable and admission headroom never shrinks below what a
+        cold replica would have had.
+        """
+        if h in self._prefix:
+            self._prefix.move_to_end(h)
+            return None
+        if not self._free:
+            return None
+        b = self._free.pop()
+        self._ref[b] = 1
+        self._prefix[h] = b
+        return b
 
 
 def padded_table(table: Sequence[int], nb_max: int) -> List[int]:

@@ -292,3 +292,182 @@ def run_slow_loris(transport: str = "process", n_replicas: int = 3,
         lost=lost, double_completed=double, wrong_results=wrong,
         crashes=snap.get("replica.crashes", 0.0),
         disconnects=snap.get("replica.disconnects", 0.0))
+
+
+# ----------------------------------------------------------------------
+# KV-lifecycle chaos: preempt / drain / migrate / kill against a pool of
+# paged LM engine replicas running deliberately tight KV pools with host
+# swap enabled.  The invariant is sharper than the echo harness's "results
+# are right": every OK request's *token stream* must be byte-identical to
+# an undisturbed oracle run of the same prompt on an ample-pool engine —
+# preemption, swap-out/-in, drain, and warm migration must all be
+# observationally invisible to the end-user.
+
+KV_ACTIONS = ("preempt", "drain", "migrate", "kill")
+
+
+def kv_schedule(seed: int, n_faults: int, horizon_s: float,
+                n_replicas: int,
+                actions: Sequence[str] = KV_ACTIONS) -> List[Fault]:
+    """Deterministic KV-lifecycle fault schedule from a seed."""
+    rng = np.random.RandomState(seed)
+    faults = [Fault(at_s=float(rng.uniform(0.0, horizon_s)),
+                    action=str(rng.choice(list(actions))),
+                    target=int(rng.randint(n_replicas)))
+              for _ in range(n_faults)]
+    return sorted(faults, key=lambda f: f.at_s)
+
+
+def _lm_backends(n: int, *, kv_blocks: int, slots: int = 4,
+                 block_size: int = 8, max_len: int = 48,
+                 sync_every: int = 4, kv_swap: bool = True,
+                 prefix_cache: bool = True):
+    """``n`` live EngineBackends over one shared param set + jit cache.
+
+    Heavy imports stay inside: the echo-harness tests must not pay the
+    jax import.  Sharing params and the per-process fn cache means one
+    compile serves the whole pool (and the oracle engine, pool size
+    aside)."""
+    import jax
+
+    from repro.cluster.backends import shared_engine_fns
+    from repro.cluster.replica import EngineBackend
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.models import api
+    from repro.serving import Engine, ServeConfig
+
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(max_len=max_len, slots=slots, sync_every=sync_every,
+                       paged=True, block_size=block_size,
+                       kv_blocks=kv_blocks, prefix_cache=prefix_cache,
+                       kv_swap=kv_swap)
+    fns = shared_engine_fns(cfg, scfg)
+    return cfg, [EngineBackend(Engine(params, cfg, scfg, shared_fns=fns))
+                 for _ in range(n)]
+
+
+def kv_oracle(prompts, max_new: int) -> Dict[tuple, list]:
+    """Undisturbed token streams: one ample-pool engine (no swap, no
+    pressure) decodes every distinct prompt once.  Greedy decode from the
+    shared seed-0 params depends only on (prompt, max_new), so this is
+    the ground truth any chaotic run must reproduce byte-for-byte."""
+    _, (backend,) = _lm_backends(1, kv_blocks=64, slots=4, kv_swap=False,
+                                 prefix_cache=False)
+    eng = backend.engine
+    keys, reqs = [], {}
+    for p in prompts:
+        k = (p.tobytes(), max_new)
+        if k not in reqs:
+            keys.append(k)
+            reqs[k] = eng.submit(p.copy(), max_new=max_new)
+    eng.run_until_drained()
+    return {k: list(reqs[k].out_tokens) for k in keys}
+
+
+def run_kv_chaos(faults: Sequence[Fault], seed: int = 0,
+                 n_replicas: int = 3, n_requests: int = 10,
+                 horizon_s: float = 1.5, kv_blocks: int = 10,
+                 max_new: int = 12, timeout_s: float = 240.0):
+    """One KV-lifecycle chaos episode.
+
+    A steady stream of LM sessions flows through a session-affinity
+    router while the schedule preempts (pressure bursts that force
+    swap-out), drains, warm-migrates, and kills replicas.  Returns
+    ``(ChaosReport, router_metrics_snapshot, backends)`` — the report's
+    ``wrong_results`` compares token streams against :func:`kv_oracle`,
+    and the snapshot/backends let callers assert that swaps and
+    migrations actually happened (a chaos run that never hit the
+    machinery under test proves nothing)."""
+    cfg, backends = _lm_backends(n_replicas, kv_blocks=kv_blocks)
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(0, cfg.vocab,
+                           size=int(rng.randint(6, 12))).astype(np.int32)
+               for _ in range(n_requests)]
+    oracle = kv_oracle(prompts, max_new)
+    # pre-warm each engine's jit outside the fault window so the schedule
+    # offsets land on serving time, not compile time
+    for b in backends:
+        b.engine.submit(prompts[0].copy(), max_new=2)
+        b.engine.run_until_drained()
+
+    metrics = MetricsRegistry()
+    router = Router(policy="session_affinity", metrics=metrics,
+                    max_retries=8, requeue_timeout_s=3.0)
+    rcfg = ReplicaConfig(inbox_capacity=512, max_batch=4)
+    workers = [router.add_replica(b, rcfg, kind="lm") for b in backends]
+
+    submit_lock = threading.Lock()
+    reqs: List[tuple] = []                  # (ClusterRequest, oracle key)
+
+    def submit(i: int, p) -> None:
+        with submit_lock:
+            q = router.submit((p.copy(), max_new), session_key=f"s{i}",
+                              kind="lm", timeout_s=timeout_s)
+            reqs.append((q, (p.tobytes(), max_new)))
+
+    def apply(fault: Fault) -> None:
+        if fault.action == "preempt":
+            # pressure burst: three sessions land at once so the target
+            # pool oversubscribes and must swap, not victimize
+            for j, p in enumerate(prompts[:3]):
+                submit(1000 + fault.target * 10 + j, p)
+            return
+        alive = [w for w in workers if w.alive]
+        if not alive:
+            return
+        w = alive[fault.target % len(alive)]
+        if fault.action == "kill":
+            w.inject_crash()
+        elif router.n_alive() > 1:          # "drain" / "migrate"
+            router.remove_replica(w.rid, drain=True,
+                                  migrate=(fault.action == "migrate"))
+
+    pause = horizon_s / max(n_requests, 1)
+    with _CompletionCounter() as counter:
+        start = time.monotonic()
+        stop_faults = threading.Event()
+
+        def fault_loop():
+            for f in faults:
+                wait = start + f.at_s - time.monotonic()
+                if wait > 0 and stop_faults.wait(wait):
+                    return
+                apply(f)
+
+        injector = threading.Thread(target=fault_loop, daemon=True,
+                                    name="kv-chaos-injector")
+        injector.start()
+        try:
+            for i, p in enumerate(prompts):
+                submit(i, p)
+                time.sleep(pause)
+            # let every scheduled fault fire (and its burst submits land)
+            # before the terminal wait, so the report covers them all
+            injector.join(timeout=horizon_s + 10.0)
+            t_end = time.monotonic() + timeout_s
+            for q, _ in list(reqs):
+                q.done.wait(max(t_end - time.monotonic(), 0.1))
+        finally:
+            stop_faults.set()
+            injector.join(timeout=10.0)
+            router.stop(drain=True)
+
+        lost = [i for i, (q, _) in enumerate(reqs) if not q.done.is_set()]
+        double = [i for i, (q, _) in enumerate(reqs)
+                  if counter.counts.get(id(q), 0) > 1]
+
+    wrong = [i for i, (q, k) in enumerate(reqs)
+             if q.status is Status.OK and list(q.result) != oracle[k]]
+    snap = metrics.snapshot()
+    report = ChaosReport(
+        transport="thread+kv",
+        n_requests=len(reqs),
+        ok=sum(q.status is Status.OK for q, _ in reqs),
+        rejected=sum(q.status is Status.REJECTED for q, _ in reqs),
+        failed=sum(q.status is Status.FAILED for q, _ in reqs),
+        lost=lost, double_completed=double, wrong_results=wrong,
+        crashes=snap.get("replica.crashes", 0.0),
+        disconnects=snap.get("replica.disconnects", 0.0))
+    return report, snap, backends

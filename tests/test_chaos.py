@@ -95,6 +95,128 @@ def test_schedule_is_deterministic():
 
 
 # ----------------------------------------------------------------------
+# KV lifecycle chaos: preempt / drain / migrate / kill against paged LM
+# engines with tight KV pools and host swap on.  The invariant is the
+# tentpole's contract — every completed request's token stream is
+# byte-identical to an undisturbed oracle run.  One deterministic fast
+# episode runs in tier-1; the randomized sweeps carry slow+kvchaos and
+# run in the dedicated ``kv-lifecycle-chaos`` CI job.
+
+@pytest.mark.kvchaos
+def test_kv_chaos_preempt_migrate_drain_token_exact():
+    from tests.chaos import Fault, run_kv_chaos
+
+    faults = [Fault(at_s=0.05, action="preempt", target=0),
+              Fault(at_s=0.25, action="migrate", target=0),
+              Fault(at_s=0.45, action="drain", target=1)]
+    report, snap, backends = run_kv_chaos(
+        faults, seed=5, n_replicas=3, n_requests=12, horizon_s=0.3,
+        kv_blocks=10, max_new=16)
+    report.assert_invariants()
+    # no kills in this schedule: everything must complete OK, and the
+    # token streams already matched the oracle (wrong_results empty)
+    assert report.failed == 0 and report.rejected == 0, str(report)
+    assert report.ok == report.n_requests, str(report)
+    # the episode must actually exercise the machinery under test
+    swaps = sum(b.engine.metrics.snapshot().get("engine.kv_swap_out", 0)
+                for b in backends)
+    assert swaps > 0, "pressure burst never forced a preemption swap"
+    restores = sum(b.engine.metrics.snapshot().get("engine.kv_swap_in", 0)
+                   for b in backends)
+    assert restores == swaps, "every swap-out must be restored (no kills)"
+
+
+@pytest.mark.kvchaos
+def test_kv_chaos_kill_allows_explicit_failures_only():
+    """With hard kills in the schedule requests may FAIL after retries —
+    explicitly — but OK results must still be token-exact and nothing may
+    hang or double-complete."""
+    from tests.chaos import Fault, run_kv_chaos
+
+    faults = [Fault(at_s=0.05, action="preempt", target=0),
+              Fault(at_s=0.2, action="kill", target=1)]
+    report, _, _ = run_kv_chaos(faults, seed=9, n_replicas=3,
+                                n_requests=10, horizon_s=0.3,
+                                kv_blocks=10, max_new=16)
+    report.assert_invariants()
+    assert report.ok > 0, "survivors must absorb the stream"
+
+
+def test_partition_between_autoscaler_ticks_no_double_scale():
+    """Partial partitions landing *between* autoscaler ticks: a
+    partitioned-but-acking replica must not be declared dead (no spurious
+    scale-up), consecutive scale actions must stay a cooldown apart (no
+    double-scale), and the sessions remapped off a drained replica must
+    keep completing on survivors (nothing stranded)."""
+    from repro.cluster import (MetricsRegistry, ReplicaConfig, Router,
+                               Status, echo_spec)
+    from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+
+    m = MetricsRegistry()
+    r = Router(policy="session_affinity", metrics=m, max_retries=8,
+               requeue_timeout_s=3.0)
+    rcfg = ReplicaConfig(inbox_capacity=512, max_batch=4,
+                         heartbeat_timeout_s=2.0)
+    workers = [r.add_replica(spec=echo_spec(delay_s=0.002), cfg=rcfg,
+                             transport="process") for _ in range(3)]
+    clock = [0.0]
+    cooldown = 5.0
+    sc = Autoscaler(r, lambda: echo_spec(delay_s=0.002),
+                    AutoscalerConfig(min_replicas=1, max_replicas=4,
+                                     cooldown_s=cooldown,
+                                     scale_down_depth=1.0,
+                                     idle_ticks_to_drain=2,
+                                     replica_cfg=rcfg),
+                    clock=lambda: clock[0], transport="process")
+    reqs = []
+
+    def wave(n, base):
+        for i in range(n):
+            reqs.append(r.submit(base + i, session_key=f"u{(base + i) % 9}",
+                                 timeout_s=60.0))
+
+    wave(12, 0)
+    sc.tick()                       # busy pool: no action
+    # partition one replica between ticks, shorter than the heartbeat
+    # timeout, while requests keep flowing (acks refresh liveness)
+    workers[1].inject_hb_partition(0.8)
+    wave(12, 100)
+    clock[0] += 1.0
+    sc.tick()                       # within cooldown anyway: must be None
+    for q in reqs:
+        assert q.done.wait(60.0), "request hung during partition"
+    assert r.n_alive() == 3, "partitioned-but-acking replica declared dead"
+    assert all(e.action != "up" for e in sc.events), \
+        f"partition triggered a spurious scale-up: {sc.events}"
+
+    # idle pool now: the scaler drains exactly one replica across ticks,
+    # with another partition window landing between them
+    clock[0] += 10.0
+    sc.tick()                       # idle tick 1
+    workers[0].inject_hb_partition(0.5)
+    clock[0] += 10.0
+    sc.tick()                       # idle tick 2 -> drain
+    clock[0] += 1.0
+    sc.tick()                       # within cooldown: no second drain
+    downs = [e for e in sc.events if e.action == "down"]
+    assert len(downs) == 1, f"double-scaled: {sc.events}"
+    ts = [e.t for e in sc.events]
+    assert all(b - a >= cooldown for a, b in zip(ts, ts[1:])), \
+        f"scale actions closer than cooldown: {sc.events}"
+    assert 1 <= r.n_alive() <= 4
+    assert r.n_alive() == 2
+
+    # the drained replica's sessions must not be stranded: the same
+    # session keys keep completing on the survivors
+    before = len(reqs)
+    wave(9, 200)
+    for q in reqs[before:]:
+        assert q.done.wait(60.0), "remapped session stranded after drain"
+        assert q.status is Status.OK
+    r.stop()
+
+
+# ----------------------------------------------------------------------
 # Slow: multi-episode randomized sweeps over spawned workers.
 
 @pytest.mark.slow
@@ -128,6 +250,25 @@ def test_slow_loris_socket_is_rerouted():
                             ack_timeout_s=1.0)
     report.assert_invariants()
     assert report.ok == report.n_requests, str(report)
+
+
+@pytest.mark.slow
+@pytest.mark.kvchaos
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_kv_chaos_randomized_schedules(seed):
+    """Randomized KV-lifecycle schedules: whatever mix of preempt / drain
+    / migrate / kill the seed draws, nothing is lost or double-completed
+    and every OK token stream matches the undisturbed oracle."""
+    from tests.chaos import kv_schedule, run_kv_chaos
+
+    faults = kv_schedule(seed, n_faults=4, horizon_s=0.4, n_replicas=3)
+    report, _, _ = run_kv_chaos(faults, seed=seed % 1000, n_replicas=3,
+                                n_requests=12, horizon_s=0.4,
+                                kv_blocks=10, max_new=16)
+    report.assert_invariants()
+    if all(f.action != "kill" for f in faults):
+        assert report.failed == 0, str(report)
 
 
 @pytest.mark.slow

@@ -1,0 +1,345 @@
+"""Unified KV-block lifecycle: preemption + host/artifact swap, and warm
+session migration on drain.
+
+Two consumers share one serialize/ship/restore mechanism
+(``kvpool.pack_block_arrays`` + the engine's ``kv_export``/``kv_import``
+gathers):
+
+  * under pool pressure the engine swaps the lowest-priority session's
+    blocks out (host bytes or the artifact store), requeues the request
+    at the queue front, and later restores it block-exact — so
+    oversubscription becomes routine instead of producing
+    ``kv_pool_exhausted`` victims;
+  * on drain a replica exports its prefix-cache blocks and the router
+    ships them to the drained sessions' new rendezvous homes, so decode
+    resumes warm instead of cold.
+
+The invariant throughout is *token-exactness*: greedy decode from the
+shared seed-0 params depends only on (prompt, max_new), so every swap /
+restore / migration must be observationally invisible against an
+undisturbed ample-pool oracle.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.models import api
+from repro.serving import Engine, ServeConfig
+
+pytestmark = pytest.mark.kvchaos
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _drain(params, cfg, scfg, prompts, max_new):
+    eng = Engine(params, cfg, scfg)
+    reqs = [eng.submit(p.copy(), max_new=max_new) for p in prompts]
+    eng.run_until_drained()
+    return eng, reqs
+
+
+# ----------------------------------------------------------------------
+# preemption + swap
+
+def test_preempt_swap_restores_token_exact(model):
+    """A deliberately tight pool forces mid-decode preemption; the swapped
+    session must resume block-exact — identical tokens to an ample-pool
+    run — and both swap counters must tick."""
+    cfg, params = model
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab, size=8).astype(np.int32)
+               for _ in range(6)]
+    _, oracle = _drain(params, cfg,
+                       ServeConfig(max_len=32, slots=2, sync_every=4,
+                                   paged=True, block_size=8, kv_blocks=64,
+                                   prefix_cache=False), prompts, max_new=12)
+    eng, reqs = _drain(params, cfg,
+                       ServeConfig(max_len=32, slots=4, sync_every=4,
+                                   paged=True, block_size=8, kv_blocks=10,
+                                   prefix_cache=False, kv_swap=True),
+                       prompts, max_new=12)
+    for a, b in zip(oracle, reqs):
+        assert b.done and b.finish_reason == "max_new", b.finish_reason
+        assert a.out_tokens == b.out_tokens
+    snap = eng.metrics.snapshot()
+    assert snap.get("engine.kv_swap_out", 0) > 0, snap
+    assert snap.get("engine.kv_swap_in", 0) == snap["engine.kv_swap_out"]
+    assert snap.get("engine.kv_pool_exhausted", 0) == 0
+    # no block leaked across the swap cycles
+    assert eng.alloc.free_blocks + eng.alloc.cached_blocks == \
+        eng.alloc.num_blocks
+
+
+def test_oversubscribe_4x_completes_all(model):
+    """ISSUE acceptance: 4x KV oversubscription (token demand ~4x the
+    pool) sustained via swap where the seed engine produced
+    kv_pool_exhausted victims — everything completes, token-exact."""
+    cfg, params = model
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(0, cfg.vocab, size=8).astype(np.int32)
+               for _ in range(8)]
+    max_new = 16
+    # demand: 8 sessions x 24 tokens = 192; pool: 6 blocks x 8 = 48 -> 4x
+    tight = ServeConfig(max_len=32, slots=8, sync_every=4, paged=True,
+                        block_size=8, kv_blocks=6, prefix_cache=False,
+                        kv_swap=True)
+    _, oracle = _drain(params, cfg,
+                       ServeConfig(max_len=32, slots=8, sync_every=4,
+                                   paged=True, block_size=8, kv_blocks=64,
+                                   prefix_cache=False), prompts, max_new)
+    eng, reqs = _drain(params, cfg, tight, prompts, max_new)
+    for a, b in zip(oracle, reqs):
+        assert b.done and b.finish_reason == "max_new", b.finish_reason
+        assert a.out_tokens == b.out_tokens
+    snap = eng.metrics.snapshot()
+    assert snap.get("engine.kv_pool_exhausted", 0) == 0, snap
+    assert snap.get("engine.kv_swap_out", 0) > 0, snap
+
+
+def test_swap_artifact_tier_token_exact(model):
+    """swap_tier="artifact" routes swapped bytes through the ArtifactStore
+    (content-addressed, digest in the snapshot) instead of host memory;
+    the restore path must stay token-exact."""
+    cfg, params = model
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab, size=8).astype(np.int32)
+               for _ in range(6)]
+    _, oracle = _drain(params, cfg,
+                       ServeConfig(max_len=32, slots=2, sync_every=4,
+                                   paged=True, block_size=8, kv_blocks=64,
+                                   prefix_cache=False), prompts, max_new=12)
+    eng, reqs = _drain(params, cfg,
+                       ServeConfig(max_len=32, slots=4, sync_every=4,
+                                   paged=True, block_size=8, kv_blocks=10,
+                                   prefix_cache=False, kv_swap=True,
+                                   swap_tier="artifact"),
+                       prompts, max_new=12)
+    for a, b in zip(oracle, reqs):
+        assert a.out_tokens == b.out_tokens
+    assert eng.metrics.snapshot().get("engine.kv_swap_out", 0) > 0
+
+
+def test_kv_swap_requires_paged():
+    with pytest.raises(ValueError):
+        ServeConfig(kv_swap=True)
+    with pytest.raises(ValueError):
+        ServeConfig(paged=True, kv_swap=True, swap_tier="nvme")
+
+
+def test_priority_orders_preemption_victims(model):
+    """Lower Request.priority preempts first: under pressure the
+    low-priority session is the one that swaps, never the high-priority
+    ones (observable via which rid the recorder logs)."""
+    from repro.cluster.tracing import FlightRecorder, current_recorder, \
+        set_recorder
+
+    cfg, params = model
+    rng = np.random.RandomState(11)
+    prompts = [rng.randint(0, cfg.vocab, size=8).astype(np.int32)
+               for _ in range(4)]
+    scfg = ServeConfig(max_len=32, slots=4, sync_every=4, paged=True,
+                       block_size=8, kv_blocks=10, prefix_cache=False,
+                       kv_swap=True)
+    prev = current_recorder()
+    set_recorder(FlightRecorder(replica="test"))
+    try:
+        eng = Engine(params, cfg, scfg)
+        low = eng.submit(prompts[0].copy(), max_new=12, priority=-1)
+        rest = [eng.submit(p.copy(), max_new=12) for p in prompts[1:]]
+        eng.run_until_drained()
+        assert low.done and all(r.done for r in rest)
+        swaps = [e for e in current_recorder().events()
+                 if e["kind"] == "kv_swap_out"]
+        assert swaps, "pressure never forced a swap"
+        assert all(e["rid"] == low.rid for e in swaps), \
+            f"preempted a higher-priority session: {swaps}"
+    finally:
+        set_recorder(prev)
+
+
+# ----------------------------------------------------------------------
+# export / import (the migration payload)
+
+def test_export_import_restores_prefix_warm(model):
+    """Engine A's exported blocks adopted by engine B turn B's first
+    decode of the same prefix into cache hits, with tokens identical to a
+    cold run — and the import is idempotent and consumes only free
+    blocks (admission headroom never shrinks)."""
+    cfg, params = model
+    scfg = ServeConfig(max_len=48, slots=2, sync_every=4, paged=True,
+                       block_size=8, kv_blocks=24, prefix_cache=True)
+    rng = np.random.RandomState(13)
+    prompt = rng.randint(0, cfg.vocab, size=17).astype(np.int32)
+
+    a = Engine(params, cfg, scfg)
+    ra = a.submit(prompt.copy(), max_new=8)
+    a.run_until_drained()
+    state = a.export_kv_state()
+    assert state is not None and state["kind"] == "kv_blocks"
+    assert state["block_size"] == 8 and len(state["hashes"]) > 0
+
+    b = Engine(params, cfg, scfg)
+    free_before = b.alloc.free_blocks
+    n = b.import_kv_state(state)
+    assert n == len(state["hashes"])
+    # adopted entries are evictable cache, not pinned residents
+    assert b.alloc.cached_blocks == n
+    assert b.alloc.free_blocks == free_before - n
+    assert b.alloc.free_blocks + b.alloc.cached_blocks == b.alloc.num_blocks
+    # idempotent: a re-delivered frame adopts nothing new
+    assert b.import_kv_state(state) == 0
+
+    cont = np.concatenate([prompt, np.asarray(ra.out_tokens, np.int32)])
+    rb = b.submit(cont.copy(), max_new=6)
+    b.run_until_drained()
+    assert b.metrics.snapshot().get("engine.prefix_hit_blocks", 0) > 0
+
+    c = Engine(params, cfg, scfg)      # cold oracle
+    rc = c.submit(cont.copy(), max_new=6)
+    c.run_until_drained()
+    assert rb.out_tokens == rc.out_tokens
+
+
+def test_import_rejects_mismatched_state(model):
+    cfg, params = model
+    scfg = ServeConfig(max_len=48, slots=2, sync_every=4, paged=True,
+                       block_size=8, kv_blocks=24, prefix_cache=True)
+    eng = Engine(params, cfg, scfg)
+    assert eng.import_kv_state(None) == 0
+    assert eng.import_kv_state({"kind": "other"}) == 0
+    assert eng.import_kv_state({"kind": "kv_blocks", "block_size": 16,
+                                "hashes": [], "data": b""}) == 0
+
+
+# ----------------------------------------------------------------------
+# drain-time warm migration through the router (the PR 7 regression:
+# Router drain used to only *log* sessions_remapped and drop the state)
+
+def test_drained_session_resumes_warm_on_new_home(model):
+    """Satellite regression: after ``remove_replica(home, drain=True,
+    migrate=True)`` the drained session's continuation decodes warm
+    (prefix hits > 0) on its new rendezvous home and resumes at its exact
+    position — token streams match an uninterrupted oracle."""
+    from repro.cluster import MetricsRegistry, ReplicaConfig, Router
+    from repro.cluster.backends import shared_engine_fns
+    from repro.cluster.replica import EngineBackend
+
+    cfg, params = model
+    scfg = ServeConfig(max_len=48, slots=2, sync_every=4, paged=True,
+                       block_size=8, kv_blocks=24, prefix_cache=True)
+    fns = shared_engine_fns(cfg, scfg)
+
+    def backend():
+        return EngineBackend(Engine(params, cfg, scfg, shared_fns=fns))
+
+    r = Router(policy="session_affinity", metrics=MetricsRegistry())
+    workers = [r.add_replica(backend(), ReplicaConfig(max_batch=2),
+                             kind="lm") for _ in range(3)]
+    rng = np.random.RandomState(17)
+    prompt = rng.randint(0, cfg.vocab, size=17).astype(np.int32)
+    q = r.submit((prompt.copy(), 8), session_key="sess-1", kind="lm",
+                 timeout_s=300.0)
+    toks = r.wait(q, 300.0)
+    home = q.replica_rid
+    cont = np.concatenate([prompt, np.asarray(toks, np.int32)])
+
+    # uninterrupted oracle for the continuation, off to the side
+    oeng = Engine(params, cfg, scfg, shared_fns=fns)
+    ro = oeng.submit(cont.copy(), max_new=6)
+    oeng.run_until_drained()
+
+    r.remove_replica(home, drain=True, migrate=True)
+    snap = r.metrics.snapshot()
+    assert snap.get("router.sessions_migrated", 0) >= 1, snap
+    assert snap.get("router.kv_migrations", 0) >= 1, snap
+    assert r.last_remapped_sessions[home] == ["sess-1"]
+
+    q2 = r.submit((cont.copy(), 6), session_key="sess-1", kind="lm",
+                  timeout_s=300.0)
+    toks2 = r.wait(q2, 300.0)
+    assert q2.replica_rid != home, "session not remapped off the drain"
+    new_home = next(w for w in workers if w.rid == q2.replica_rid)
+    hits = new_home.backend.engine.metrics.snapshot() \
+        .get("engine.prefix_hit_blocks", 0)
+    assert hits > 0, "migration did not warm the new home"
+    assert toks2 == list(ro.out_tokens), (toks2, list(ro.out_tokens))
+    r.stop()
+
+
+def test_drain_without_migrate_stays_cold(model):
+    """migrate=False keeps PR 7 semantics: sessions remap but no KV
+    ships, so the new home decodes the continuation cold (and still
+    token-exact — cold is correct, just slower)."""
+    from repro.cluster import MetricsRegistry, ReplicaConfig, Router
+    from repro.cluster.backends import shared_engine_fns
+    from repro.cluster.replica import EngineBackend
+
+    cfg, params = model
+    scfg = ServeConfig(max_len=48, slots=2, sync_every=4, paged=True,
+                       block_size=8, kv_blocks=24, prefix_cache=True)
+    fns = shared_engine_fns(cfg, scfg)
+    r = Router(policy="session_affinity", metrics=MetricsRegistry())
+    workers = [r.add_replica(
+        EngineBackend(Engine(params, cfg, scfg, shared_fns=fns)),
+        ReplicaConfig(max_batch=2), kind="lm") for _ in range(3)]
+    rng = np.random.RandomState(19)
+    prompt = rng.randint(0, cfg.vocab, size=17).astype(np.int32)
+    q = r.submit((prompt.copy(), 8), session_key="sess-2", kind="lm",
+                 timeout_s=300.0)
+    toks = r.wait(q, 300.0)
+    home = q.replica_rid
+    r.remove_replica(home, drain=True, migrate=False)
+    assert r.metrics.snapshot().get("router.sessions_migrated", 0) == 0
+    cont = np.concatenate([prompt, np.asarray(toks, np.int32)])
+    q2 = r.submit((cont.copy(), 6), session_key="sess-2", kind="lm",
+                  timeout_s=300.0)
+    toks2 = r.wait(q2, 300.0)
+    assert isinstance(toks2, list) and q2.replica_rid != home
+    new_home = next(w for w in workers if w.rid == q2.replica_rid)
+    assert new_home.backend.engine.metrics.snapshot() \
+        .get("engine.prefix_hit_blocks", 0) == 0, "cold path hit the cache?"
+    r.stop()
+
+
+# ----------------------------------------------------------------------
+# the wire hand-off over a real process boundary (slow: spawns two jax
+# worker interpreters; runs in the kv-lifecycle-chaos CI job)
+
+@pytest.mark.slow
+def test_process_drain_publishes_kv_state_and_migrates():
+    """Over the process transport the drain-time ("kv_state", state)
+    frame must arrive before ("drained",) — FIFO channel order — and the
+    router must ship it to the new home, which acks the import."""
+    from repro.cluster import (MetricsRegistry, ReplicaConfig, Router,
+                               engine_spec)
+
+    r = Router(policy="session_affinity", metrics=MetricsRegistry())
+    cfg = ReplicaConfig(max_batch=2, spawn_timeout_s=300.0)
+    spec = engine_spec(arch="internlm2-1.8b", max_len=48, slots=2,
+                       sync_every=4, paged=True, block_size=8,
+                       kv_blocks=24, prefix_cache=True)
+    workers = [r.add_replica(spec=spec, cfg=cfg, transport="process",
+                             kind="lm") for _ in range(2)]
+    rng = np.random.RandomState(23)
+    prompt = rng.randint(0, 256, size=17).astype(np.int32)
+    q = r.submit((prompt.copy(), 8), session_key="sess-3", kind="lm",
+                 timeout_s=600.0)
+    toks = r.wait(q, 600.0)
+    assert isinstance(toks, list)
+    home = q.replica_rid
+    r.remove_replica(home, drain=True, migrate=True)
+    snap = r.metrics.snapshot()
+    assert snap.get("router.sessions_migrated", 0) >= 1, snap
+    cont = np.concatenate([prompt, np.asarray(toks, np.int32)])
+    q2 = r.submit((cont.copy(), 6), session_key="sess-3", kind="lm",
+                  timeout_s=600.0)
+    toks2 = r.wait(q2, 600.0)
+    assert isinstance(toks2, list) and q2.replica_rid != home
+    r.stop()

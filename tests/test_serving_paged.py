@@ -10,6 +10,8 @@ import jax
 import numpy as np
 import pytest
 
+from tests._hyp_compat import given, settings, st
+
 from repro.configs import get_config
 from repro.configs.base import reduced
 from repro.models import api, transformer as tfm
@@ -407,3 +409,82 @@ def test_paged_supported_gate():
     assert not tfm.paged_supported(
         reduced(get_config("deepseek-v2-lite-16b")), 64)
     assert not tfm.paged_supported(reduced(get_config("gemma3-4b")), 64)
+
+
+# ----------------------------------------------------------------------
+# KV lifecycle properties (PR 8): the swap serialization frame and the
+# preempt/swap/restore decode path, over randomized shapes and loads.
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pack_unpack_bit_exact_property(seed):
+    """serialize -> ship -> deserialize is bit-exact for arbitrary leaf
+    counts, block counts, dtypes, and head geometries."""
+    from repro.serving import pack_block_arrays, unpack_block_arrays
+
+    rng = np.random.RandomState(seed % (2**31 - 1) or 1)
+    n_leaves = int(rng.randint(1, 5))
+    n_blocks = int(rng.randint(1, 7))
+    arrays = []
+    for _ in range(n_leaves):
+        dt = np.dtype(["<f4", "<i4", "<f2", "<u1"][rng.randint(0, 4)])
+        shape = (int(rng.randint(1, 3)), n_blocks, int(rng.randint(2, 9)),
+                 int(rng.randint(1, 4)), int(rng.randint(2, 9)))
+        if dt.kind == "f":
+            a = rng.randn(*shape).astype(dt)
+        else:
+            a = rng.randint(0, 255, size=shape).astype(dt)
+        arrays.append(a)
+    out = unpack_block_arrays(pack_block_arrays(arrays))
+    assert len(out) == n_leaves
+    for a, b in zip(arrays, out):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert a.tobytes() == b.tobytes()
+
+
+_SWAP_MODEL = {}
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_swap_restore_decode_token_exact_property(seed):
+    """Whatever prompt lengths / budgets / request counts the seed draws,
+    a tight swapping pool's restored block tables produce token-exact
+    decode versus an ample-pool oracle, nothing finishes as a
+    ``kv_pool_exhausted`` victim, and every swap-out is restored."""
+    from repro.cluster.backends import shared_engine_fns
+
+    if "m" not in _SWAP_MODEL:
+        _SWAP_MODEL["m"] = _model("internlm2-1.8b")
+    cfg, params = _SWAP_MODEL["m"]
+    rng = np.random.RandomState(seed % (2**31 - 1) or 1)
+    n_req = int(rng.randint(4, 7))
+    prompts = [rng.randint(0, cfg.vocab,
+                           size=int(rng.randint(4, 12))).astype(np.int32)
+               for _ in range(n_req)]
+    max_new = int(rng.randint(6, 14))
+    ample = ServeConfig(max_len=48, slots=2, sync_every=4, paged=True,
+                        block_size=8, kv_blocks=64, prefix_cache=False)
+    tight = ServeConfig(max_len=48, slots=4, sync_every=4, paged=True,
+                        block_size=8, kv_blocks=9, prefix_cache=True,
+                        kv_swap=True)
+
+    def drain(scfg):
+        eng = Engine(params, cfg, scfg,
+                     shared_fns=shared_engine_fns(cfg, scfg))
+        reqs = [eng.submit(p.copy(), max_new=max_new) for p in prompts]
+        eng.run_until_drained()
+        return eng, reqs
+
+    _, oracle = drain(ample)
+    eng, got = drain(tight)
+    for i, (a, b) in enumerate(zip(oracle, got)):
+        assert b.finish_reason == "max_new", (i, b.finish_reason)
+        assert a.out_tokens == b.out_tokens, \
+            (i, a.out_tokens, b.out_tokens)
+    snap = eng.metrics.snapshot()
+    assert snap.get("engine.kv_pool_exhausted", 0) == 0
+    assert snap.get("engine.kv_swap_in", 0) == \
+        snap.get("engine.kv_swap_out", 0)
+    assert eng.alloc.free_blocks + eng.alloc.cached_blocks == \
+        eng.alloc.num_blocks
