@@ -547,6 +547,122 @@ def run_oversubscribe(quick: bool = False, json_path: str = JSON_PATH,
     return out
 
 
+def run_overload(quick: bool = False, json_path: str = JSON_PATH,
+                 arch: str = "internlm2-1.8b", sync_every: int = 4):
+    """Sustained 2x overload with per-request deadlines (PR 9): requests
+    arrive at twice the engine's measured service rate, each carrying a
+    deadline budget.  *Shed-only* (admission bound, no brownout) keeps
+    decoding full-length answers for requests whose deadlines are already
+    doomed — the decode they consume counts for nothing.  *Brownout-on*
+    climbs the graded ladder instead: halved ``max_new`` under pressure
+    (L2) and a tightened admission bound (L3) convert that wasted decode
+    into shorter answers that land inside their deadlines.
+
+    The score is **goodput**: tokens of requests that completed OK within
+    their deadline, per wall second.  The run asserts brownout-on beats
+    shed-only by >= 1.2x — the graded-degradation claim, machine-checked.
+    """
+    import jax
+
+    from repro.cluster import (AdmissionConfig, AdmissionController,
+                               BrownoutController, EngineBackend,
+                               MetricsRegistry, ReplicaConfig, Router,
+                               Status)
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.models import api
+    from repro.serving import Engine, ServeConfig, make_engine_fns
+
+    cfg = reduced(get_config(arch))
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    # decode-dominated requests (long max_new, short prompt) so that
+    # brownout's halved max_new really halves the service time, and the
+    # timescale (hundreds of fused steps per wave) dwarfs sleep jitter
+    slots, max_new, plen = 4, 200, 16
+    n_req = 16 if quick else 32
+    scfg = ServeConfig(max_len=256, slots=slots, sync_every=sync_every)
+    fns = make_engine_fns(cfg, scfg)
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab, size=plen).astype(np.int32)
+               for _ in range(n_req)]
+
+    def drive(brownout, bound, deadline_s, gap, reqs_payloads):
+        metrics = MetricsRegistry()
+        router = Router(
+            metrics=metrics,
+            admission=None if bound is None else AdmissionController(
+                AdmissionConfig(max_queue_cost=bound), metrics),
+            brownout=BrownoutController() if brownout else None)
+        router.add_replica(
+            EngineBackend(Engine(params, cfg, scfg, metrics=metrics,
+                                 shared_fns=fns)),
+            ReplicaConfig(max_batch=slots))
+        t_start = time.perf_counter()
+        reqs = []
+        for pay in reqs_payloads:
+            reqs.append(router.submit(pay, cost=max_new,
+                                      timeout_s=deadline_s))
+            if gap:
+                time.sleep(gap)
+        for q in reqs:
+            router.wait(q, timeout=deadline_s + 60.0)
+        wall = time.perf_counter() - t_start
+        router.stop()
+        snap = metrics.snapshot()
+        by = {st: sum(q.status is st for q in reqs) for st in Status}
+        good = sum(len(q.result) for q in reqs if q.status is Status.OK)
+        return {"wall_s": wall, "goodput_tok_s": good / max(wall, 1e-9),
+                "good_tokens": good, "ok": by[Status.OK],
+                "expired": by[Status.EXPIRED],
+                "shed": by[Status.REJECTED], "failed": by[Status.FAILED],
+                "brownout_transitions":
+                    int(snap.get("router.brownout_transitions", 0)),
+                "deadline_expired_in_engine":
+                    int(snap.get("engine.deadline_expired", 0))}
+
+    # warm the *cluster-path* shapes (fresh engines later reuse the shared
+    # jitted fns, but each prefill bucket the replica loop can form —
+    # singleton, pair, full wave — must have compiled before timing), then
+    # time one warm full-slot wave: the service unit every knob uses
+    for batch in ((prompts[0],), prompts[:2], prompts[:slots]):
+        drive(False, None, 600.0, 0.0, [(p, max_new) for p in batch])
+    cal = drive(False, None, 600.0, 0.0,
+                [(p, max_new) for p in prompts[:slots]])
+    s_batch = cal["wall_s"]
+    gap = s_batch / (slots * 2)          # 2x-overload inter-arrival
+    deadline_s = 1.5 * s_batch           # one full-length wave fits; a
+    #                                      request queued a wave deep dies
+    bound = 8 * max_new                  # in-flight wave + one queued wave
+
+    payloads = [(p, max_new) for p in prompts]
+    shed_only = drive(False, bound, deadline_s, gap, payloads)
+    browned = drive(True, bound, deadline_s, gap, payloads)
+    ratio = browned["goodput_tok_s"] / max(shed_only["goodput_tok_s"], 1e-9)
+    out = {"meta": {"arch": arch, "quick": quick, "n_requests": n_req,
+                    "max_new": max_new, "slots": slots,
+                    "overload_factor": 2.0,
+                    "deadline_s": round(deadline_s, 3),
+                    "arrival_gap_s": round(gap, 4)},
+           "shed_only": shed_only, "brownout": browned,
+           "goodput_ratio": round(ratio, 3)}
+    for label, res in (("shed_only", shed_only), ("brownout", browned)):
+        emit(f"serving/overload/{label}",
+             1e6 * res["wall_s"] / max(res["good_tokens"], 1),
+             f"goodput={res['goodput_tok_s']:.1f}tok/s;ok={res['ok']};"
+             f"expired={res['expired']};shed={res['shed']}")
+    emit("serving/overload/goodput_ratio", 0.0, f"ratio={ratio:.2f}x")
+    assert browned["brownout_transitions"] >= 1, \
+        "overload never tripped the brownout ladder — workload too light"
+    assert ratio >= 1.2, \
+        f"brownout goodput ratio {ratio:.2f}x below the 1.2x gate " \
+        f"(on={browned['goodput_tok_s']:.1f} " \
+        f"off={shed_only['goodput_tok_s']:.1f} tok/s)"
+    if json_path:
+        mode = "overload_quick" if quick else "overload"
+        write_bench_json(json_path, lambda prev: {**prev, mode: out})
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -562,8 +678,14 @@ if __name__ == "__main__":
     ap.add_argument("--trace-overhead", action="store_true",
                     help="tracing-cost mode: identical fused workload with "
                          "the null tracer vs full span sampling")
+    ap.add_argument("--overload", action="store_true",
+                    help="overload-goodput mode: 2x sustained overload "
+                         "with deadlines, brownout-on vs shed-only "
+                         "(gated at a 1.2x goodput ratio)")
     args = ap.parse_args()
-    if args.oversubscribe:
+    if args.overload:
+        run_overload(quick=args.quick, sync_every=args.sync_every)
+    elif args.oversubscribe:
         run_oversubscribe(quick=args.quick)
     elif args.trace_overhead:
         run_trace_overhead(quick=args.quick, sync_every=args.sync_every)

@@ -18,16 +18,20 @@ from repro.cluster.admission import (AdmissionConfig,  # noqa: F401
                                      AdmissionController, Rejected,
                                      deadline_slack)
 from repro.cluster.artifacts import (ArtifactStore, artifact_ref,  # noqa: F401
-                                     resolve_spec, spec_fingerprint)
+                                     fetch_with_retry, resolve_spec,
+                                     spec_fingerprint)
 from repro.cluster.autoscaler import (Autoscaler, AutoscalerConfig,  # noqa: F401
                                       ScaleEvent)
 from repro.cluster.backends import (BackendSpec, echo_spec,  # noqa: F401
                                     engine_spec, stream_spec)
 from repro.cluster.metrics import (Counter, Gauge, Histogram,  # noqa: F401
                                    MetricsRegistry, merge_snapshots)
+from repro.cluster.overload import (BreakerConfig, BrownoutConfig,  # noqa: F401
+                                    BrownoutController, CircuitBreaker)
 from repro.cluster.replica import (ClusterRequest, EngineBackend,  # noqa: F401
                                    FnBackend, ReplicaConfig, ReplicaCrash,
-                                   Status, StreamBackend)
+                                   Status, StreamBackend, Terminal,
+                                   WaitTimeout)
 from repro.cluster.router import POLICIES, Router  # noqa: F401
 from repro.cluster.tracing import (FlightRecorder, Span,  # noqa: F401
                                    TraceContext, Tracer, current_recorder,

@@ -90,7 +90,8 @@ class AdmissionController:
     def decide(self, queued_cost: int, cost: int, deadline_s: float,
                now: Optional[float] = None,
                kind: Optional[str] = None,
-               kv_free_frac: Optional[float] = None) -> Optional[Rejected]:
+               kv_free_frac: Optional[float] = None,
+               scale: float = 1.0) -> Optional[Rejected]:
         """Returns None to admit, or a :class:`Rejected` describing the shed.
 
         ``queued_cost`` is the outstanding cost ahead of this request (the
@@ -98,13 +99,20 @@ class AdmissionController:
         cluster-wide); ``cost`` the new request's own cost units; ``kind``
         selects a per-backend cost model for the deadline test;
         ``kv_free_frac`` is the backend pool's free-KV-block fraction when
-        known (paged LM engines export it via ``engine.kv_blocks_*``).
+        known (paged LM engines export it via ``engine.kv_blocks_*``);
+        ``scale`` tightens the queue bound under brownout (the router
+        passes the overload controller's admission scale — level 3 halves
+        the effective front-door budget so load sheds cheaply here instead
+        of expiring deep in replica queues).
         """
-        if queued_cost + cost > self.cfg.max_queue_cost:
+        bound = self.cfg.max_queue_cost * scale
+        if queued_cost + cost > bound:
             self._shed_full.inc()
             return Rejected("queue_full",
                             f"queued={queued_cost} + {cost} > "
-                            f"{self.cfg.max_queue_cost}")
+                            f"{bound:g}"
+                            + (f" (brownout scale {scale:g})"
+                               if scale != 1.0 else ""))
         if self.cfg.min_kv_headroom_frac > 0 and kv_free_frac is not None \
                 and kv_free_frac < self.cfg.min_kv_headroom_frac:
             self._shed_kv.inc()

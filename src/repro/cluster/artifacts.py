@@ -26,7 +26,9 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import random
 import tempfile
+import time
 from typing import Callable, Optional
 
 from repro.cluster.backends import BackendSpec
@@ -166,6 +168,41 @@ class ArtifactStore:
 
 
 # ----------------------------------------------------------------------
+def fetch_with_retry(fetch: Callable[[str], Optional[bytes]], digest: str,
+                     attempts: int = 4, base_s: float = 0.2,
+                     max_s: float = 5.0, jitter: float = 0.5,
+                     sleep: Optional[Callable[[float], None]] = None,
+                     rng: Optional[random.Random] = None,
+                     ) -> Optional[bytes]:
+    """Bounded retry around a transient-miss-prone ``fetch(digest)``.
+
+    Two failure modes bracket the design: a single transient miss (parent
+    briefly mid-restart, a dropped frame) used to degrade straight into a
+    hard ``KeyError`` from :func:`resolve_spec`; but unbounded retries
+    after a mass reconnect would synchronize every worker into a fetch
+    storm against the one parent holding the bytes.  So: cap the attempts
+    (total failure stays an explicit, prompt error) and spread them —
+    exponential backoff with multiplicative jitter drawn per *worker*
+    (``rng`` defaults to OS-seeded, deliberately NOT digest-seeded, which
+    would put all workers fetching the same artifact in lockstep).
+
+    Returns the first non-``None`` result, or ``None`` after ``attempts``
+    misses.  Exceptions from ``fetch`` propagate immediately — a closed
+    channel is not a transient miss.
+    """
+    rng = rng if rng is not None else random.Random()
+    do_sleep = sleep if sleep is not None else time.sleep
+    for attempt in range(max(1, attempts)):
+        data = fetch(digest)
+        if data is not None:
+            return data
+        if attempt + 1 >= attempts:
+            break
+        delay = min(base_s * (2 ** attempt), max_s)
+        do_sleep(delay * (1.0 + jitter * rng.random()))
+    return None
+
+
 def spec_fingerprint(spec: BackendSpec) -> str:
     """Stable content hash of a spec: target, kind, and kwargs (sorted;
     non-JSON values fall back to ``repr``, which is stable for the
@@ -185,6 +222,8 @@ def resolve_spec(spec: BackendSpec, store: ArtifactStore,
     Missing artifacts are pulled via ``fetch(sha) -> bytes`` (the socket
     worker wires this to a ``("fetch", sha)`` round-trip); fetched bytes
     are digest-verified by the store's content addressing before use.
+    Misses are retried a bounded number of times with jittered backoff
+    (:func:`fetch_with_retry`) before degrading to ``KeyError``.
     """
     kwargs = dict(spec.kwargs)
     for key, value in spec.kwargs.items():
@@ -196,7 +235,8 @@ def resolve_spec(spec: BackendSpec, store: ArtifactStore,
         # a cache hit is re-verified before trust: a pre-planted or
         # corrupted file under the right name is a miss, not a model
         if not cached_ok:
-            data = fetch(digest) if fetch is not None else None
+            data = fetch_with_retry(fetch, digest) \
+                if fetch is not None else None
             if data is None:
                 raise KeyError(
                     f"artifact {digest} (spec kwarg {key!r}) not in store "

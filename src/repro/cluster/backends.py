@@ -49,17 +49,27 @@ class BackendSpec:
 # ----------------------------------------------------------------------
 # Builders (module-level: importable from a spawned worker process).
 
-def build_echo(delay_s: float = 0.0, scale: int = 2, stall_s: float = 0.0):
+def build_echo(delay_s: float = 0.0, scale: int = 2, stall_s: float = 0.0,
+               poison: Optional[int] = None):
     """Deterministic test/bench backend: ``payload * scale`` after an
     optional per-batch stall (models host-side work).
 
     ``stall_s`` > 0 turns the replica into a *slow loris*: every batch
     hangs for that long (effectively forever for chaos tests) while the
     worker's liveness signals — process aliveness, the socket heartbeat
-    thread — stay green.  Detection is the transports' ack timeout."""
+    thread — stay green.  Detection is the transports' ack timeout.
+
+    ``poison`` marks one payload value as a replica-killer: any batch
+    containing it raises, which spills the batch and ends the replica
+    loop on every transport (thread replicas die in place; worker
+    processes exit and the parent spills).  This models the
+    poison-request pathology — a request that crashes whatever serves it
+    — whose blast radius the router's retry budget must bound."""
     from repro.cluster.replica import FnBackend
 
     def step(payloads):
+        if poison is not None and any(p == poison for p in payloads):
+            raise RuntimeError(f"poison payload {poison!r} in batch")
         if stall_s:
             time.sleep(stall_s)
         if delay_s:

@@ -40,6 +40,38 @@ class Status(enum.Enum):
     OK = "ok"
     REJECTED = "rejected"       # shed by admission control -> Rejected result
     FAILED = "failed"           # retries exhausted / no survivors / shutdown
+    CANCELLED = "cancelled"     # Router.cancel() -> work dropped everywhere
+    EXPIRED = "expired"         # deadline passed before a useful completion
+
+
+class Terminal:
+    """Picklable terminal-result wrapper a replica acks for work it ended
+    early instead of running to completion: deadline expiry (dropped from
+    the worker queue, or finished mid-decode by the engine) and
+    cancellation.  ``tokens`` carries whatever partial output existed at
+    the cut, so a cancelled stream still returns what it produced.
+    ``ClusterRequest.complete`` unwraps it into the matching terminal
+    status rather than ``Status.OK``."""
+
+    __slots__ = ("reason", "tokens")
+
+    def __init__(self, reason: str, tokens: Any = None):
+        self.reason = reason
+        self.tokens = tokens if tokens is not None else []
+
+    def __repr__(self) -> str:
+        return f"Terminal({self.reason!r}, n_tokens={len(self.tokens)})"
+
+
+@dataclasses.dataclass(frozen=True)
+class WaitTimeout:
+    """Typed sentinel returned by ``Router.wait(timeout=)`` when the
+    request is still in flight at the timeout — instead of leaking the
+    request's (unset) result.  The documented follow-up is
+    ``router.cancel(req)``; the request itself is untouched and a later
+    ``wait`` can still observe its terminal state."""
+    rid: int
+    waited_s: float
 
 
 @dataclasses.dataclass
@@ -59,6 +91,15 @@ class ClusterRequest:
     replica_rid: Optional[int] = None     # replica that completed it
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     finished_s: float = 0.0
+    # resilience: ``cancelled`` is set by ``Router.cancel`` before the
+    # cancel frames fan out, so every router-side path (spill, requeue,
+    # dispatch) refuses to move the request again; ``finish_reason``
+    # mirrors the engine's taxonomy ("deadline", "cancelled", "poison",
+    # "" for plain OK/FAILED); ``killed_replicas`` tallies the distinct
+    # replicas whose death spilled this request (poison detection).
+    cancelled: bool = False
+    finish_reason: str = ""
+    killed_replicas: set = dataclasses.field(default_factory=set)
     # streaming: partial-result frames forwarded by the replica while the
     # request is still in flight (e.g. per-K-step token slices from an LM
     # engine).  ``on_partial(frame)`` fires on the transport's receive
@@ -109,8 +150,32 @@ class ClusterRequest:
         self.done.set()
 
     def complete(self, result: Any, replica_rid: int):
-        self.result = result
+        if self.done.is_set():
+            # late ack racing a local terminal (cancel after wait-timeout,
+            # deadline downgrade): the first terminal state wins; dropping
+            # the ack here is what keeps "never double-completed" true
+            # without coordinating with every in-flight replica
+            return
         self.replica_rid = replica_rid
+        if isinstance(result, Terminal):
+            # the replica ended this early (queue drop or mid-decode
+            # finish) and shipped the partial output with the reason
+            self.result = result.tokens
+            self.finish_reason = result.reason
+            self._finish(Status.CANCELLED if result.reason == "cancelled"
+                         else Status.EXPIRED)
+            return
+        self.result = result
+        if time.monotonic() > self.deadline_s:
+            # a full result that arrived past the deadline is not a
+            # success: nobody is waiting for it any more.  Downgrading at
+            # the single completion point makes "nothing expired ever
+            # completes ok" hold even for workers that predate deadline
+            # propagation (old-build interop) and for acks already in
+            # flight when the deadline passed.
+            self.finish_reason = "deadline"
+            self._finish(Status.EXPIRED)
+            return
         self._finish(Status.OK)
 
     def reject(self, rejected: Rejected):
@@ -120,6 +185,27 @@ class ClusterRequest:
     def fail(self, error: BaseException):
         self.error = error
         self._finish(Status.FAILED)
+
+    def finish_cancelled(self):
+        """Router-side terminal for a cancel that cannot expect an ack —
+        the replica is dead, the request is between dispatches, or it was
+        sitting in the requeue loop.  Idempotent against a racing ack."""
+        if self.done.is_set():
+            return
+        self.cancelled = True
+        self.finish_reason = "cancelled"
+        self.result = None
+        self._finish(Status.CANCELLED)
+
+    def finish_expired(self):
+        """Router-side terminal for work whose deadline passed while it
+        had no live home (spilled, waiting for a survivor): re-dispatching
+        it would burn a replica slot on an answer nobody reads."""
+        if self.done.is_set():
+            return
+        self.finish_reason = "deadline"
+        self.result = None
+        self._finish(Status.EXPIRED)
 
     @property
     def missed_deadline(self) -> bool:
@@ -199,6 +285,10 @@ class EngineBackend:
         self.engine = engine
         self._emit = None
         self._trace_ctxs = None
+        self._deadlines = None
+        self._cancel_poll = None
+        self._brownout = 0
+        self._spec0 = None     # engine's own speculative setting, lazily
 
     def bind_emitter(self, emit) -> None:
         """``emit(payload_index, frame)`` forwards a partial-result frame
@@ -211,6 +301,30 @@ class EngineBackend:
         so engine-side spans parent into the cluster request's trace."""
         self._trace_ctxs = ctxs
 
+    def bind_deadlines(self, deadlines) -> None:
+        """Per-payload absolute ``time.monotonic`` deadlines (or None) for
+        the current batch — the engine finishes a session mid-decode with
+        ``finish_reason="deadline"`` once its entry passes."""
+        self._deadlines = deadlines
+
+    def bind_cancel(self, poll) -> None:
+        """``poll(payload_index) -> bool`` checked by the engine each host
+        sync; True finishes that session with
+        ``finish_reason="cancelled"`` and frees its KV within the sync."""
+        self._cancel_poll = poll
+
+    #: brownout ladder, applied per level (cumulative): L1 disables
+    #: speculative decode (frees draft+verify compute), L2 additionally
+    #: halves the effective ``max_new`` (every admitted stream finishes in
+    #: half the decode budget), L3 adds router-side admission tightening.
+    def set_brownout(self, level: int) -> None:
+        self._brownout = level
+        eng = self.engine
+        if self._spec0 is None:
+            self._spec0 = bool(getattr(eng, "speculative", False))
+        if hasattr(eng, "speculative"):
+            eng.speculative = self._spec0 and level < 1
+
     @staticmethod
     def _is_kv_import(payload) -> bool:
         return isinstance(payload, tuple) and len(payload) == 2 and \
@@ -221,11 +335,20 @@ class EngineBackend:
         ctxs = self._trace_ctxs
         if ctxs is None or len(ctxs) != len(payloads):
             ctxs = [None] * len(payloads)
+        dls = self._deadlines
+        if dls is None or len(dls) != len(payloads):
+            dls = [None] * len(payloads)
+        poll = self._cancel_poll
 
         def on_tokens(i):
             if emit is None:
                 return None
             return lambda req, toks, done: emit(i, (toks, done))
+
+        def cancel_cb(i):
+            if poll is None:
+                return None
+            return lambda: poll(i)
 
         results: List[Any] = [None] * len(payloads)
         # adopt migrated KV blocks FIRST so this very batch's requests
@@ -237,13 +360,27 @@ class EngineBackend:
                               imp(payload[1]) if imp is not None else 0)
         live = [(i, p) for i, p in enumerate(payloads)
                 if results[i] is None]
-        reqs = [(i, self.engine.submit(prompt, max_new=max_new,
-                                       on_tokens=on_tokens(i),
-                                       trace_ctx=ctxs[i]))
+        # brownout L2+: shrink the decode budget so every admitted stream
+        # completes inside its deadline at degraded length, instead of a
+        # few streams completing full-length while the rest expire
+        shrink = self._brownout >= 2
+        reqs = [(i, self.engine.submit(
+                    prompt,
+                    max_new=max(1, max_new // 2) if shrink else max_new,
+                    on_tokens=on_tokens(i),
+                    trace_ctx=ctxs[i],
+                    deadline_s=dls[i],
+                    cancel_cb=cancel_cb(i)))
                 for i, (prompt, max_new) in live]
         self.engine.run_until_drained()
         for i, r in reqs:
-            results[i] = r.out_tokens
+            # expired/cancelled sessions ack a Terminal so the parent can
+            # land them in the matching status instead of OK; whatever
+            # tokens existed at the cut ride along
+            if r.finish_reason in ("deadline", "cancelled"):
+                results[i] = Terminal(r.finish_reason, r.out_tokens)
+            else:
+                results[i] = r.out_tokens
         return results
 
     def export_kv_state(self):
@@ -315,7 +452,49 @@ def run_replica_loop(backend, cfg: ReplicaConfig, io) -> None:
             if io.closing():
                 break
             continue
+        # resilience pre-pass: work that is already pointless — past its
+        # deadline while queued, or cancelled by the submitter — is acked
+        # as a Terminal immediately, WITHOUT touching the backend, so an
+        # overloaded replica burns zero compute on tokens nobody reads
+        dl_fn = getattr(io, "deadline", None)
+        cx_fn = getattr(io, "is_cancelled", None)
+        if dl_fn is not None or cx_fn is not None:
+            now = time.monotonic()
+            live: List[Any] = []
+            dropped: List[Any] = []
+            terms: List[Terminal] = []
+            for r in batch:
+                if cx_fn is not None and cx_fn(r):
+                    dropped.append(r)
+                    terms.append(Terminal("cancelled"))
+                    current_recorder().record("cancelled", replica=io.rid,
+                                              where="queue")
+                elif dl_fn is not None and (dl_fn(r) or float("inf")) < now:
+                    dropped.append(r)
+                    terms.append(Terminal("deadline"))
+                    current_recorder().record("deadline_expired",
+                                              replica=io.rid, where="queue")
+                else:
+                    live.append(r)
+            if dropped:
+                io.begin(dropped)
+                io.ack(dropped, terms, 0.0)
+            batch = live
+            if not batch:
+                continue
         io.begin(batch)
+        # mid-flight resilience: a deadline/cancel-aware backend (the LM
+        # engine) gets per-item deadlines and a cancel poll so sessions
+        # end mid-decode instead of only at queue boundaries
+        if dl_fn is not None and hasattr(backend, "bind_deadlines"):
+            backend.bind_deadlines([dl_fn(r) for r in batch])
+        if cx_fn is not None and hasattr(backend, "bind_cancel"):
+            backend.bind_cancel(lambda i, _b=batch: cx_fn(_b[i]))
+        # brownout: apply the router's current degradation level before
+        # the batch runs (disable speculation / shrink effective max_new)
+        bl_fn = getattr(io, "brownout", None)
+        if bl_fn is not None and hasattr(backend, "set_brownout"):
+            backend.set_brownout(bl_fn())
         # streaming bridge: a backend that accepts an emitter gets partial
         # frames forwarded through the transport (LocalTransport fires the
         # request's callback directly; remote workers ship ("partial", ...)

@@ -41,8 +41,9 @@ from repro.cluster.admission import AdmissionController, Rejected
 from repro.cluster.backends import BackendSpec
 from repro.cluster.metrics import (MetricsRegistry, merge_snapshots,
                                    null_registry)
+from repro.cluster.overload import BrownoutController, CircuitBreaker
 from repro.cluster.replica import (KV_IMPORT_TAG, ClusterRequest,
-                                   ReplicaConfig, Status)
+                                   ReplicaConfig, Status, WaitTimeout)
 from repro.cluster.tracing import current_recorder, current_tracer
 from repro.cluster.transport import Transport, make_transport
 
@@ -61,7 +62,12 @@ class Router:
                  admission: Optional[AdmissionController] = None,
                  metrics: Optional[MetricsRegistry] = None,
                  max_retries: int = 2,
-                 requeue_timeout_s: float = 5.0):
+                 requeue_timeout_s: float = 5.0,
+                 retry_backoff_base_s: float = 0.05,
+                 retry_backoff_max_s: float = 1.0,
+                 poison_threshold: int = 2,
+                 breaker: Optional[CircuitBreaker] = None,
+                 brownout: Optional[BrownoutController] = None):
         if policy not in POLICIES:
             raise ValueError(f"policy {policy!r} not in {POLICIES}")
         self.policy = policy
@@ -69,6 +75,17 @@ class Router:
         self.admission = admission
         self.max_retries = max_retries
         self.requeue_timeout_s = requeue_timeout_s
+        # retry budget: each respill waits base * 2^(attempt-1) (capped)
+        # before re-offering — a crash's burst spreads instead of slamming
+        # survivors in lockstep
+        self.retry_backoff_base_s = retry_backoff_base_s
+        self.retry_backoff_max_s = retry_backoff_max_s
+        # poison detection: a request whose dispatch has now killed this
+        # many *distinct* replicas terminates with finish_reason="poison"
+        # instead of cascading through the rest of the fleet
+        self.poison_threshold = poison_threshold
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        self.brownout = brownout
         self._replicas: Dict[int, Transport] = {}
         self._lock = threading.Lock()
         self._rr = itertools.count()
@@ -132,6 +149,7 @@ class Router:
             worker = self._replicas.pop(rid, None)
         remapped = self._note_remapped_sessions(rid)
         self._set_pool_gauge()
+        self.breaker.forget(rid)
         if worker is not None and drain:
             worker.drain()
             if migrate:
@@ -220,7 +238,9 @@ class Router:
         """Alive replicas in dispatch-preference order for this request.
         Dead transports are never candidates (see
         ``tests/test_transport.py`` for the property test)."""
-        alive = sorted(self.alive_replicas(), key=lambda w: w.rid)
+        alive = sorted((w for w in self.alive_replicas()
+                        if self.breaker.allow(w.rid)),
+                       key=lambda w: w.rid)
         if req.kind is not None:
             # strict: a kind with no live replica sheds explicitly rather
             # than falling back to wrong-kind backends (whose process()
@@ -260,15 +280,19 @@ class Router:
             req.trace_ctx = root.context()
         current_recorder().record("submit", rid=req.rid, cost=cost,
                                   backend=kind)
+        self._tick_brownout()
         if self.admission is not None:
             with current_tracer().span("admission.decide",
                                        parent=root) as asp:
                 kv_frac = None
                 if self.admission.cfg.min_kv_headroom_frac > 0:
                     kv_frac = self.kv_free_fraction()
+                scale = self.brownout.admission_scale() \
+                    if self.brownout is not None else 1.0
                 shed = self.admission.decide(self.queue_depth(kind), cost,
                                              req.deadline_s, now, kind=kind,
-                                             kv_free_frac=kv_frac)
+                                             kv_free_frac=kv_frac,
+                                             scale=scale)
                 asp.tag(shed=shed is not None)
             if shed is not None:
                 current_recorder().record("shed", rid=req.rid,
@@ -280,6 +304,29 @@ class Router:
             if req.replica_rid is None and not req.done.is_set():
                 dsp.tag(replica="pending")
         return req
+
+    def _tick_brownout(self) -> int:
+        """Advance the brownout ladder from the live overload signals
+        (queue occupancy vs the admission bound, KV-pool occupancy) and
+        broadcast the level to every replica on a transition."""
+        bo = self.brownout
+        if bo is None:
+            return 0
+        qmax = self.admission.cfg.max_queue_cost \
+            if self.admission is not None else 0
+        qfrac = self.queue_depth() / qmax if qmax else 0.0
+        kv = self.kv_free_fraction()
+        lvl = bo.tick(qfrac, 1.0 - kv if kv is not None else 0.0)
+        self.metrics.gauge("router.brownout_level").set(lvl)
+        if bo.changed:
+            current_recorder().record("brownout_level", level=lvl,
+                                      queue_frac=round(qfrac, 3))
+            self.metrics.counter("router.brownout_transitions").inc()
+            for w in self.alive_replicas():
+                fn = getattr(w, "set_brownout", None)
+                if fn is not None:
+                    fn(lvl)
+        return lvl
 
     def kv_free_fraction(self) -> Optional[float]:
         """Cluster-wide paged-KV headroom: free / total blocks summed over
@@ -307,6 +354,11 @@ class Router:
                 self._session_homes.pop(next(iter(self._session_homes)))
 
     def _dispatch(self, req: ClusterRequest) -> None:
+        if req.cancelled:
+            # a cancel can only precede dispatch on the respill path, but
+            # the guard is cheap and makes "never re-dispatched" local
+            req.finish_cancelled()
+            return
         for worker in self._ranked(req):
             attempts_before = req.attempts
             if worker.offer(req):
@@ -314,6 +366,7 @@ class Router:
                 # ownership (the fault path requeues it elsewhere and bumps
                 # req.attempts); only an undisturbed accept makes this
                 # worker the session's home
+                self.breaker.note_dispatch(worker.rid)
                 if req.session_key is not None and \
                         req.attempts == attempts_before:
                     self._note_session_home(req.session_key, worker.rid)
@@ -323,12 +376,48 @@ class Router:
         self.metrics.counter("router.shed_backpressure").inc()
         req.reject(Rejected("queue_full", "all replica inboxes full"))
 
-    def wait(self, req: ClusterRequest, timeout: Optional[float] = None) -> Any:
+    def wait(self, req: ClusterRequest,
+             timeout: Optional[float] = None) -> Any:
+        """Block for the result.  On timeout the request is *still in
+        flight* and a typed :class:`WaitTimeout` comes back instead of a
+        leaked falsy result — the documented follow-up is
+        ``router.cancel(req)`` (a later wait can still observe the
+        terminal state the cancel produces)."""
         out = req.wait(timeout)
+        if not req.done.is_set():
+            self.metrics.counter("router.wait_timeout").inc()
+            return WaitTimeout(rid=req.rid,
+                               waited_s=timeout if timeout is not None
+                               else 0.0)
         if req.status is Status.OK:
             self._completed.inc()
             self._latency.observe(req.finished_s - req.submitted_s)
+            if req.replica_rid is not None:
+                # a clean completion resolves that replica's half-open
+                # probe (if this request happened to be it)
+                self.breaker.record_ack(req.replica_rid)
         return out
+
+    def cancel(self, req: ClusterRequest) -> None:
+        """Cancel an in-flight request: flag it so no router path ever
+        moves it again (dispatch, spill, requeue), then fan a best-effort
+        ``("cancel", rid)`` to every alive replica — rids are globally
+        unique and never reused, so broadcasting is race-free even while
+        the request migrates between replicas.  The terminal state arrives
+        either as the replica's ``Terminal("cancelled")`` ack (with any
+        partial tokens) or, if the request is currently between homes,
+        from the requeue loop observing the flag.  A cancel that loses the
+        race with a genuine completion is a no-op: the first terminal
+        state wins."""
+        if req.done.is_set():
+            return
+        req.cancelled = True
+        self.metrics.counter("router.cancelled").inc()
+        current_recorder().record("cancelled", rid=req.rid, where="router")
+        for w in self.alive_replicas():
+            fn = getattr(w, "cancel", None)
+            if fn is not None:
+                fn(req.rid)
 
     # -------------------------------------------------- fault path
     def _on_spill(self, spilled: List[ClusterRequest],
@@ -348,9 +437,22 @@ class Router:
                 self._replicas.pop(dead.rid, None)
             self._note_remapped_sessions(dead.rid)
             self._set_pool_gauge()
+            # a dead transport leaves the pool for good (rids are never
+            # reused) — drop its breaker state instead of growing the map
+            self.breaker.forget(dead.rid)
+        # circuit breaker: a spill from a transport that *stays* in the
+        # pool (socket flap inside its reconnect window) is a strike — a
+        # crash-looping replica trips into quarantine instead of being
+        # ranked first on the very next dispatch
+        elif self.breaker.record_crash(dead.rid):
+            self.metrics.counter("router.quarantined").inc()
+            current_recorder().record("quarantine", replica=dead.rid,
+                                      state=self.breaker.state(dead.rid))
         exclude = dead.rid if not dead.alive else None
         for req in spilled:
             req.attempts += 1
+            if not dead.alive:
+                req.killed_replicas.add(dead.rid)
             # the replacement replica re-runs from scratch and re-streams
             # every token: reset the partial-frame view so incremental
             # consumers don't render the first attempt's prefix twice
@@ -363,37 +465,84 @@ class Router:
             current_recorder().record("spill", rid=req.rid,
                                       replica=dead.rid,
                                       attempt=req.attempts)
+            if req.cancelled:
+                # never re-dispatch a cancelled rid — terminal right here
+                req.finish_cancelled()
+                self.metrics.counter("router.cancelled_on_spill").inc()
+                continue
+            if len(req.killed_replicas) >= self.poison_threshold:
+                # this request has now taken down N distinct replicas:
+                # stop feeding it to the fleet
+                req.finish_reason = "poison"
+                self.metrics.counter("router.poisoned").inc()
+                current_recorder().record(
+                    "poison", rid=req.rid,
+                    replicas=sorted(req.killed_replicas))
+                req.fail(RuntimeError(
+                    f"request {req.rid}: poison — killed "
+                    f"{len(req.killed_replicas)} replicas "
+                    f"{sorted(req.killed_replicas)}"))
+                self._failed.inc()
+                continue
             if req.attempts > self.max_retries:
                 req.fail(RuntimeError(
                     f"request {req.rid}: retries exhausted after replica "
                     f"{dead.rid} crash"))
                 self._failed.inc()
                 continue
+            # bounded exponential backoff before the re-offer: a crash
+            # dumps a burst — attempt 1 waits base, attempt 2 waits 2x,
+            # ... capped, so survivors absorb the wave instead of a
+            # synchronized stampede
+            delay = min(self.retry_backoff_base_s * (2 ** (req.attempts - 1)),
+                        self.retry_backoff_max_s)
+            if delay > 0:
+                self.metrics.counter("router.retry_backoff").inc()
+                current_recorder().record("retry_backoff", rid=req.rid,
+                                          attempt=req.attempts,
+                                          delay_s=round(delay, 4))
+                time.sleep(delay)
             if not self._requeue_blocking(req, exclude=exclude):
                 req.fail(RuntimeError(
                     f"request {req.rid}: no surviving replica accepted it"))
                 self._failed.inc()
-            else:
+            elif not req.done.is_set():
                 self._requeued.inc()
 
     def _requeue_blocking(self, req: ClusterRequest,
                           exclude: Optional[int]) -> bool:
         """Offer to survivors, waiting out transient inbox fullness (a crash
-        dumps a burst on the pool) up to ``requeue_timeout_s``."""
+        dumps a burst on the pool) up to ``requeue_timeout_s``.  Returns
+        True when the request was *handled* — accepted by a survivor, or
+        terminally finished here because it was cancelled / expired while
+        waiting (re-dispatching either would waste a survivor's slot on
+        work nobody wants)."""
         t_end = time.monotonic() + self.requeue_timeout_s
-        while time.monotonic() < t_end:
+        while True:
+            if req.cancelled or req.done.is_set():
+                req.finish_cancelled()      # no-op if already terminal
+                return True
+            now = time.monotonic()
+            if now > req.deadline_s:
+                current_recorder().record("deadline_expired", rid=req.rid,
+                                          where="requeue")
+                self.metrics.counter("router.expired_on_requeue").inc()
+                req.finish_expired()
+                return True
+            if now >= t_end:
+                return False
             ranked = [w for w in self._ranked(req) if w.rid != exclude]
             if not ranked:
                 return False
             for worker in ranked:
                 attempts_before = req.attempts
                 if worker.offer(req):
+                    self.breaker.note_dispatch(worker.rid)
                     if req.session_key is not None and \
                             req.attempts == attempts_before:
                         self._note_session_home(req.session_key, worker.rid)
                     return True
             time.sleep(0.002)
-        return False
 
     # -------------------------------------------------- service bridge
     def process_batch(self, payloads: List[Any],

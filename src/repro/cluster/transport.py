@@ -227,6 +227,7 @@ class LocalTransport(Transport):
         self._outstanding_cost = 0
         self._crash = threading.Event()
         self._closing = threading.Event()
+        self._brownout_level = 0
         self._hist = self.metrics.histogram("replica.batch_s")
         self._thread = threading.Thread(
             target=run_replica_loop, args=(backend, cfg, self),
@@ -311,6 +312,28 @@ class LocalTransport(Transport):
         """Same process: the driver reads the context straight off the
         request (remote transports rehydrate it from the wire frame)."""
         return req.trace_ctx
+
+    @staticmethod
+    def deadline(req: ClusterRequest) -> Any:
+        """Same process, same monotonic clock: the absolute deadline is
+        readable straight off the request (None when unbounded)."""
+        dl = req.deadline_s
+        return dl if dl != float("inf") else None
+
+    @staticmethod
+    def is_cancelled(req: ClusterRequest) -> bool:
+        """Shared object: ``Router.cancel`` already flipped the flag."""
+        return req.cancelled
+
+    def cancel(self, rid: int) -> None:
+        """No frame needed — cancellation travels through the shared
+        ``ClusterRequest.cancelled`` flag the loop polls."""
+
+    def brownout(self) -> int:
+        return self._brownout_level
+
+    def set_brownout(self, level: int) -> None:
+        self._brownout_level = int(level)
 
     def begin(self, batch: List[ClusterRequest]) -> None:
         pass            # the driver hands the in-flight batch to spill()
@@ -430,6 +453,8 @@ class WorkerIO:
         self.registry = registry
         self._hist = registry.histogram("replica.batch_s")
         self.pending: "queue.Queue[Tuple[int, int, Any, Any]]" = queue.Queue()
+        self.cancelled: set = set()     # rids cancelled by the parent
+        self._brownout = 0              # parent's current degradation level
         self._evt_seq = 0       # last flight-recorder seq shipped on a hb
         self.disconnected = False
         self.crashed = False
@@ -474,10 +499,22 @@ class WorkerIO:
     def _ingest(self, msg) -> None:
         tag = msg[0]
         if tag == "req":
-            # trailing element is the optional trace context (older
-            # parents send 4-element frames; tolerate both)
+            # trailing elements are optional: trace context (PR 6) then
+            # the deadline *budget* in seconds (older parents send 4- or
+            # 5-element frames; tolerate all).  The budget is relative —
+            # time.monotonic() does not cross hosts — and pinned to this
+            # worker's clock at ingest.
             tctx = TraceContext.from_wire(msg[4]) if len(msg) > 4 else None
-            self.pending.put((msg[1], msg[2], msg[3], tctx))
+            budget = msg[5] if len(msg) > 5 else None
+            deadline = time.monotonic() + budget if budget is not None \
+                else None
+            self.pending.put((msg[1], msg[2], msg[3], tctx, deadline))
+        elif tag == "cancel":
+            # monotonic rid space, never reused: a cancel can never name
+            # future work, so a plain grow-only set is race-free
+            self.cancelled.add(msg[1])
+        elif tag == "brownout":
+            self._brownout = int(msg[1])
         elif tag == "drain":
             self._closing = True
         elif tag == "crash":
@@ -549,6 +586,17 @@ class WorkerIO:
     def trace_ctx(item) -> Any:
         """The rehydrated :class:`TraceContext` riding the work item."""
         return item[3] if len(item) > 3 else None
+
+    @staticmethod
+    def deadline(item) -> Any:
+        """Absolute worker-clock deadline riding the item (or None)."""
+        return item[4] if len(item) > 4 else None
+
+    def is_cancelled(self, item) -> bool:
+        return item[0] in self.cancelled
+
+    def brownout(self) -> int:
+        return self._brownout
 
     def begin(self, batch) -> None:
         pass                            # the parent tracks in-flight state
@@ -664,9 +712,14 @@ class RemoteTransport(Transport):
             # must neither kill the replica nor leak an outstanding entry —
             # refusing here lets the router shed it explicitly
             tctx = req.trace_ctx
+            # deadline rides as a *relative* budget (monotonic clocks do
+            # not cross hosts); workers that predate it ignore the extra
+            # element, exactly like the PR 6 trace-context rollout
+            budget = req.deadline_s - time.monotonic() \
+                if req.deadline_s != float("inf") else None
             frame = encode_frame(
                 ("req", req.rid, req.cost, req.payload,
-                 tctx.to_wire() if tctx is not None else None),
+                 tctx.to_wire() if tctx is not None else None, budget),
                 pickle_only=True)
         except Exception:               # noqa: BLE001 - unserializable
             return False
@@ -708,6 +761,30 @@ class RemoteTransport(Transport):
     def outstanding_cost(self) -> int:
         with self._lock:
             return self._outstanding_cost
+
+    def cancel(self, rid: int) -> None:
+        """Best-effort ``("cancel", rid)`` control frame.  Safe to send
+        for rids this worker never saw (the worker's cancelled-set is
+        keyed by globally-unique rids) and safe to lose (the parent-side
+        terminal state already refuses late acks and re-dispatch)."""
+        chan = self._chan
+        if chan is None or not self.alive:
+            return
+        try:
+            chan.send(("cancel", rid))
+        except ChannelClosed:
+            pass                        # dying replica: spill handles it
+
+    def set_brownout(self, level: int) -> None:
+        """Ship the router's degradation level; old workers drop the
+        unknown frame on the floor (graceful non-degradation)."""
+        chan = self._chan
+        if chan is None or not self.alive:
+            return
+        try:
+            chan.send(("brownout", int(level)))
+        except ChannelClosed:
+            pass
 
     def drain(self, timeout: float = 10.0) -> None:
         self._closing.set()

@@ -38,6 +38,14 @@ from repro.cluster.framing import decode_frame, encode_frame, msgpack
 # Bump when hello/welcome/tag semantics change: a worker built from an
 # older checkout must be refused at the door, not fail mid-request.
 # v2: drain-time ("kv_state", state) frame — warm KV migration hand-off.
+#
+# Still v2 (backward/forward compatible additions, same door):
+#   * ("req", rid, cost, payload, tctx[, budget]) — element 5 is an
+#     optional *relative* deadline budget in seconds (monotonic clocks do
+#     not cross hosts; the worker pins an absolute deadline at ingest).
+#     Old workers ignore the extra element; old parents omit it.
+#   * ("cancel", rid) and ("brownout", level) parent->worker control
+#     frames — WorkerIO drops unknown tags, so old workers skip them.
 PROTOCOL_VERSION = 2
 
 # Bounds a malicious or corrupted length word before we try to allocate

@@ -71,11 +71,18 @@ def _recv_blocking(chan: SocketChannel, timeout_s: float):
 
 
 def _fetch_over(chan: SocketChannel, digest: str, backlog: list,
-                timeout_s: float = 60.0) -> Optional[bytes]:
+                timeout_s: float = 15.0) -> Optional[bytes]:
     """Pull one artifact blob from the parent's store by content hash.
-    Any non-artifact frame read while waiting (a drain or crash control
-    frame racing the build) goes into ``backlog`` for the WorkerIO to
-    replay — never silently dropped."""
+
+    One *attempt*: one ``("fetch", digest)`` frame, one bounded wait.
+    ``resolve_spec`` wraps this in ``fetch_with_retry``, so a ``None``
+    here (parent busy, frame lost) is retried with jittered backoff and
+    each retry re-sends the request frame — the per-attempt timeout is
+    deliberately short so retries happen while the build window is still
+    open.  A late answer to a timed-out attempt is matched by digest on
+    the next attempt; any non-artifact frame read while waiting (a drain
+    or crash control frame racing the build) goes into ``backlog`` for
+    the WorkerIO to replay — never silently dropped."""
     chan.send(("fetch", digest))
     t_end = time.monotonic() + timeout_s
     while time.monotonic() < t_end:

@@ -30,10 +30,10 @@ import jax
 import numpy as np
 
 from repro.cluster import (AdmissionConfig, AdmissionController,
-                           EngineBackend, MetricsRegistry, POLICIES,
-                           ReplicaConfig, Router, TRANSPORTS, Tracer,
-                           current_tracer, engine_spec, prometheus_text,
-                           set_tracer, to_chrome_trace)
+                           BrownoutController, EngineBackend,
+                           MetricsRegistry, POLICIES, ReplicaConfig, Router,
+                           TRANSPORTS, Tracer, current_tracer, engine_spec,
+                           prometheus_text, set_tracer, to_chrome_trace)
 from repro.cluster.tracing import start_profiling, stop_profiling
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import reduced as reduce_cfg
@@ -95,6 +95,16 @@ def main(argv=None):
                          "(greedy only; requires --paged)")
     ap.add_argument("--spec-draft", type=int, default=3,
                     help="draft tokens proposed per speculative step")
+    ap.add_argument("--request-timeout", type=float, default=600.0,
+                    help="per-request deadline budget in seconds; the "
+                         "budget rides the wire to workers, which drop "
+                         "expired queue work and finish expired sessions "
+                         "mid-decode (finish_reason='deadline')")
+    ap.add_argument("--brownout", action="store_true",
+                    help="graded overload controller: under queue/KV "
+                         "pressure, degrade service (disable speculation, "
+                         "halve max_new, tighten admission) instead of "
+                         "only shedding at the front door")
     ap.add_argument("--kv-headroom", type=float, default=0.0,
                     help="admission: shed when the cluster's free KV-block "
                          "fraction drops below this (0 disables)")
@@ -167,7 +177,9 @@ def main(argv=None):
                             AdmissionConfig(
                                 max_queue_cost=args.max_queue,
                                 min_kv_headroom_frac=args.kv_headroom),
-                            metrics))
+                            metrics),
+                        brownout=BrownoutController() if args.brownout
+                        else None)
         rcfg = ReplicaConfig(max_batch=args.slots)
         if args.transport in ("process", "socket"):
             spec = engine_spec(arch=args.arch, max_len=args.max_len,
@@ -193,9 +205,11 @@ def main(argv=None):
                     rcfg)
         t0 = time.perf_counter()
         creqs = [router.submit((p, args.max_new), cost=args.max_new,
-                               session_key=str(i), timeout_s=600.0)
+                               session_key=str(i),
+                               timeout_s=args.request_timeout)
                  for i, p in enumerate(prompts)]
-        outs = [router.wait(r, timeout=600.0) for r in creqs]
+        outs = [router.wait(r, timeout=args.request_timeout)
+                for r in creqs]
         wall = time.perf_counter() - t0
         router.stop()
         toks = sum(len(o) for o in outs if isinstance(o, list))

@@ -174,6 +174,13 @@ class Request:
     # set while the request is swapped out: the serialized KV state a
     # re-admit restores instead of re-prefilling (see SessionSnapshot)
     kv_snapshot: Optional["SessionSnapshot"] = None
+    # resilience: absolute time.monotonic() deadline — once passed the
+    # engine finishes the session (queued or mid-decode) with
+    # finish_reason="deadline" and frees its KV instead of decoding
+    # tokens nobody will read; ``cancel_cb()`` is polled each host sync
+    # and True finishes it with finish_reason="cancelled" the same way
+    deadline_s: Optional[float] = None
+    cancel_cb: Optional[Callable[[], bool]] = None
 
     @property
     def decoded(self) -> int:
@@ -612,15 +619,23 @@ class Engine:
         # monotonic request ids: never reused, regardless of how many
         # requests are queued/active/finished at submit time
         self._rids = itertools.count(1000)
+        # flipped by the first submit carrying a deadline or cancel_cb;
+        # keeps the per-step resilience sweep off the hot path otherwise
+        self._watch_early = False
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int,
                on_tokens: Optional[Callable] = None,
-               trace_ctx: Any = None, priority: int = 0) -> Request:
+               trace_ctx: Any = None, priority: int = 0,
+               deadline_s: Optional[float] = None,
+               cancel_cb: Optional[Callable[[], bool]] = None) -> Request:
         req = Request(rid=next(self._rids),
                       prompt=np.asarray(prompt, np.int32), max_new=max_new,
                       submit_t=time.perf_counter(), on_tokens=on_tokens,
-                      priority=priority)
+                      priority=priority, deadline_s=deadline_s,
+                      cancel_cb=cancel_cb)
+        if deadline_s is not None or cancel_cb is not None:
+            self._watch_early = True
         if self.paged and self.scfg.prefix_cache:
             # sha256 prefix-chain hashing runs here — off the admit/step
             # critical path, and memoized across identical prompts
@@ -1076,6 +1091,80 @@ class Engine:
         self._virt = None
         self._finish(slot, "kv_pool_exhausted")
         self._emit(req, [], True)
+
+    # ------------------------------------------------------------------
+    # resilience: deadline expiry + cancellation.  Both terminate a
+    # session early at the next step boundary — "within one sync" — with
+    # the single-victim contract of _exhaust_victim: the rest of the
+    # batch keeps decoding, the victim's KV frees immediately.
+    @staticmethod
+    def _early_reason(req: Request, now: float) -> Optional[str]:
+        if req.cancel_cb is not None:
+            try:
+                if req.cancel_cb():
+                    return "cancelled"
+            except Exception:           # noqa: BLE001 - poller's bug
+                pass                    # a broken poller must not kill step()
+        if req.deadline_s is not None and now > req.deadline_s:
+            return "deadline"
+        return None
+
+    def _finish_early(self, slot: int, reason: str):
+        """End an *active* slot mid-decode with ``reason``; on the paged
+        path this frees its blocks inside the current sync (flush first,
+        exactly like :meth:`_exhaust_victim`, so surviving slots' pending
+        rows reach the pool while the table still maps every owner)."""
+        req = self.active[slot]
+        if self.scfg.fused:
+            self._active = self._active.at[slot].set(False)
+            self._last = self._last.at[slot].set(0)
+        if self.paged:
+            self._act_h[slot] = False
+            self._flush_virt()
+            self._virt = None
+        self._finish(slot, reason)
+        self._emit(req, [], True)
+
+    def _sweep_expired(self):
+        """Per-step resilience sweep: complete queued work that is already
+        pointless (expired in queue / cancelled before admit) without it
+        ever taking a slot, then end active sessions whose deadline passed
+        or whose submitter cancelled."""
+        now = time.monotonic()
+        if self.queue:
+            keep: Deque[Request] = deque()
+            for req in self.queue:
+                reason = self._early_reason(req, now)
+                if reason is None:
+                    keep.append(req)
+                    continue
+                req.done = True
+                req.finish_reason = reason
+                req.done_t = req.first_token_t = time.perf_counter()
+                self._close_span(req)
+                self.finished.append(req)
+                self.metrics.counter(
+                    "engine.cancelled" if reason == "cancelled"
+                    else "engine.deadline_expired").inc()
+                current_recorder().record(
+                    reason if reason == "cancelled" else "deadline_expired",
+                    rid=req.rid, where="engine_queue")
+                self._emit(req, [], True)
+            self.queue = keep
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            reason = self._early_reason(req, now)
+            if reason is None:
+                continue
+            self.metrics.counter(
+                "engine.cancelled" if reason == "cancelled"
+                else "engine.deadline_expired").inc()
+            current_recorder().record(
+                reason if reason == "cancelled" else "deadline_expired",
+                rid=req.rid, where="mid_decode",
+                decoded=req.decoded)
+            self._finish_early(s, reason)
 
     # ------------------------------------------------------------------
     # KV lifecycle: preemption + host/artifact swap (ServeConfig.kv_swap)
@@ -1618,6 +1707,8 @@ class Engine:
         """One engine iteration: admit, then decode — a single step on the
         reference path, ``sync_every`` fused steps (one host sync) on the
         fused and paged paths."""
+        if self._watch_early:
+            self._sweep_expired()
         if self.paged:
             return self._step_paged()
         if self.scfg.fused:

@@ -89,6 +89,8 @@ class ChaosReport:
     wrong_results: List[int]              # OK payloads with a wrong result
     crashes: float
     disconnects: float
+    cancelled: int = 0                    # terminal via Router.cancel
+    expired: int = 0                      # terminal via deadline expiry
 
     def assert_invariants(self) -> "ChaosReport":
         assert not self.lost, \
@@ -98,7 +100,13 @@ class ChaosReport:
             f"{self.transport}: double-completed: {self.double_completed[:10]}"
         assert not self.wrong_results, \
             f"{self.transport}: wrong results for {self.wrong_results[:10]}"
-        assert self.ok + self.rejected + self.failed == self.n_requests
+        total = self.ok + self.rejected + self.failed \
+            + self.cancelled + self.expired
+        assert total == self.n_requests, \
+            f"{self.transport}: accounting leak: ok={self.ok} " \
+            f"rejected={self.rejected} failed={self.failed} " \
+            f"cancelled={self.cancelled} expired={self.expired} " \
+            f"!= n={self.n_requests}"
         return self
 
 
@@ -226,7 +234,9 @@ def run_chaos(transport: str, faults: Sequence[Fault], n_replicas: int = 3,
         failed=sum(q.status is Status.FAILED for q in reqs),
         lost=lost, double_completed=double, wrong_results=wrong,
         crashes=snap.get("replica.crashes", 0.0),
-        disconnects=snap.get("replica.disconnects", 0.0))
+        disconnects=snap.get("replica.disconnects", 0.0),
+        cancelled=sum(q.status is Status.CANCELLED for q in reqs),
+        expired=sum(q.status is Status.EXPIRED for q in reqs))
 
 
 # ----------------------------------------------------------------------
@@ -291,7 +301,9 @@ def run_slow_loris(transport: str = "process", n_replicas: int = 3,
         failed=sum(q.status is Status.FAILED for q in reqs),
         lost=lost, double_completed=double, wrong_results=wrong,
         crashes=snap.get("replica.crashes", 0.0),
-        disconnects=snap.get("replica.disconnects", 0.0))
+        disconnects=snap.get("replica.disconnects", 0.0),
+        cancelled=sum(q.status is Status.CANCELLED for q in reqs),
+        expired=sum(q.status is Status.EXPIRED for q in reqs))
 
 
 # ----------------------------------------------------------------------
@@ -469,5 +481,195 @@ def run_kv_chaos(faults: Sequence[Fault], seed: int = 0,
         failed=sum(q.status is Status.FAILED for q, _ in reqs),
         lost=lost, double_completed=double, wrong_results=wrong,
         crashes=snap.get("replica.crashes", 0.0),
-        disconnects=snap.get("replica.disconnects", 0.0))
+        disconnects=snap.get("replica.disconnects", 0.0),
+        cancelled=sum(q.status is Status.CANCELLED for q, _ in reqs),
+        expired=sum(q.status is Status.EXPIRED for q, _ in reqs))
     return report, snap, backends
+
+
+# ----------------------------------------------------------------------
+# Overload chaos: cancellation, deadline expiry, and poison requests
+# racing the crash/spill/requeue machinery.  The invariants sharpen the
+# echo harness's contract:
+#
+#   * nothing expired completes "ok" — any OK request finished inside its
+#     deadline (``complete()`` downgrades late acks, so this holds even
+#     against a worker that ignored the wire budget);
+#   * a cancelled request reaches exactly one terminal state and is never
+#     re-dispatched after it (a cancel losing the race to a genuine
+#     completion is a legal no-op: OK wins);
+#   * a poison request — one that crashes whatever serves it — kills at
+#     most ``poison_threshold`` distinct replicas before the router stops
+#     retrying it (finish_reason="poison").
+
+OVERLOAD_ACTIONS = ("cancel", "expire", "kill", "delay")
+POISON_PAYLOAD = 666_666
+
+
+def overload_schedule(seed: int, n_faults: int, horizon_s: float,
+                      n_replicas: int,
+                      actions: Sequence[str] = OVERLOAD_ACTIONS,
+                      ) -> List[Fault]:
+    """Deterministic overload fault schedule.  A separate helper (not a
+    new entry in :data:`ACTIONS`) so existing seeded schedules replay
+    byte-identically."""
+    rng = np.random.RandomState(seed)
+    faults = [Fault(at_s=float(rng.uniform(0.0, horizon_s)),
+                    action=str(rng.choice(list(actions))),
+                    target=int(rng.randint(max(n_replicas, 1))),
+                    duration_s=float(rng.uniform(0.02, 0.10)))
+              for _ in range(n_faults)]
+    return sorted(faults, key=lambda f: f.at_s)
+
+
+def run_overload_chaos(transport: str, faults: Sequence[Fault],
+                       n_replicas: int = 3, n_requests: int = 80,
+                       horizon_s: float = 0.8,
+                       cfg: Optional[ReplicaConfig] = None,
+                       max_retries: int = 8, timeout_s: float = 60.0,
+                       expire_budget_s: float = 0.03,
+                       n_poison: int = 1, poison_threshold: int = 2):
+    """One overload episode: a steady echo stream plus *request-level*
+    faults — "cancel" cancels a recent in-flight request, "expire"
+    submits a request with a deliberately tiny deadline budget, "kill"
+    and "delay" behave as in :func:`run_chaos`.  ``n_poison``
+    replica-killer payloads are injected mid-stream.
+
+    Returns ``(ChaosReport, metrics_snapshot, info)`` where ``info``
+    holds the faulted request objects (``cancel_targets``,
+    ``expire_reqs``, ``poison_reqs``) and every submitted request
+    (``reqs``) for invariant checks the tally alone cannot express.
+    """
+    if cfg is None:
+        cfg = ReplicaConfig(inbox_capacity=512, max_batch=4,
+                            heartbeat_timeout_s=1.5)
+    metrics = MetricsRegistry()
+    router = Router(policy="round_robin", metrics=metrics,
+                    max_retries=max_retries, requeue_timeout_s=3.0,
+                    poison_threshold=poison_threshold,
+                    retry_backoff_base_s=0.002, retry_backoff_max_s=0.02)
+    placements = ("thread", "process", "socket") if transport == "mixed" \
+        else (transport,) * n_replicas
+    workers = [router.add_replica(
+                   spec=echo_spec(delay_s=0.002, poison=POISON_PAYLOAD),
+                   cfg=cfg, transport=placements[i % len(placements)])
+               for i in range(n_replicas)]
+    gate = threading.Event()
+    gate.set()
+    submit_lock = threading.Lock()
+    reqs: List[ClusterRequest] = []
+    cancel_targets: List[ClusterRequest] = []
+    expire_reqs: List[ClusterRequest] = []
+    poison_reqs: List[ClusterRequest] = []
+    pause = horizon_s / max(n_requests, 1)
+
+    def apply(fault: Fault) -> None:
+        if fault.action == "cancel":
+            with submit_lock:
+                if not reqs:
+                    return
+                # a recent request: likely queued or in flight, so the
+                # cancel races dispatch/spill rather than a settled state
+                q = reqs[-1 - (fault.target % min(len(reqs), 8))]
+                cancel_targets.append(q)
+            router.cancel(q)
+            return
+        if fault.action == "expire":
+            with submit_lock:
+                q = router.submit(10_000 + len(expire_reqs),
+                                  session_key="exp",
+                                  timeout_s=expire_budget_s)
+                reqs.append(q)
+                expire_reqs.append(q)
+            return
+        _apply_fault(fault, workers, gate)
+
+    with _CompletionCounter() as counter:
+        start = time.monotonic()
+        stop_faults = threading.Event()
+
+        def fault_loop():
+            for f in faults:
+                wait = start + f.at_s - time.monotonic()
+                if wait > 0 and stop_faults.wait(wait):
+                    return
+                apply(f)
+
+        injector = threading.Thread(target=fault_loop, daemon=True,
+                                    name="overload-chaos-injector")
+        injector.start()
+        try:
+            for i in range(n_requests):
+                gate.wait(1.0)
+                with submit_lock:
+                    q = router.submit(i, session_key=f"s{i % 7}",
+                                      timeout_s=timeout_s)
+                    reqs.append(q)
+                    if n_poison and i == n_requests // 4 + 1:
+                        # poison lands early, while the pool is healthy,
+                        # so the retry budget (not pool exhaustion) is
+                        # what bounds its blast radius
+                        for _ in range(n_poison):
+                            pq = router.submit(POISON_PAYLOAD,
+                                               session_key="poison",
+                                               timeout_s=timeout_s)
+                            reqs.append(pq)
+                            poison_reqs.append(pq)
+                time.sleep(pause)
+            injector.join(timeout=horizon_s + 10.0)
+            t_end = time.monotonic() + timeout_s
+            for q in list(reqs):
+                q.done.wait(max(t_end - time.monotonic(), 0.1))
+        finally:
+            stop_faults.set()
+            injector.join(timeout=5.0)
+            router.stop(drain=True)
+
+        lost = [q.payload for q in reqs if not q.done.is_set()]
+        double = [q.payload for q in reqs
+                  if counter.counts.get(id(q), 0) > 1]
+
+    wrong = [q.payload for q in reqs
+             if q.status is Status.OK and q.result != 2 * q.payload]
+    snap = metrics.snapshot()
+    report = ChaosReport(
+        transport=f"{transport}+overload",
+        n_requests=len(reqs),
+        ok=sum(q.status is Status.OK for q in reqs),
+        rejected=sum(q.status is Status.REJECTED for q in reqs),
+        failed=sum(q.status is Status.FAILED for q in reqs),
+        lost=lost, double_completed=double, wrong_results=wrong,
+        crashes=snap.get("replica.crashes", 0.0),
+        disconnects=snap.get("replica.disconnects", 0.0),
+        cancelled=sum(q.status is Status.CANCELLED for q in reqs),
+        expired=sum(q.status is Status.EXPIRED for q in reqs))
+    info = {"reqs": reqs, "cancel_targets": cancel_targets,
+            "expire_reqs": expire_reqs, "poison_reqs": poison_reqs,
+            "expire_budget_s": expire_budget_s,
+            "poison_threshold": poison_threshold}
+    return report, snap, info
+
+
+def assert_overload_invariants(report: ChaosReport, info: dict) -> None:
+    """The overload-specific contract, on top of the base invariants."""
+    report.assert_invariants()
+    eps = 0.005
+    for q in info["reqs"]:
+        if q.status is Status.OK and q.deadline_s != float("inf"):
+            assert q.finished_s <= q.deadline_s + eps, \
+                f"request {q.payload} completed OK past its deadline " \
+                f"({q.finished_s - q.deadline_s:.3f}s late)"
+    for q in info["cancel_targets"]:
+        # OK-wins-race: the cancel may have lost to a genuine completion
+        # (or to a backpressure shed that already rejected the target) —
+        # but it must be terminal and completed at most once
+        assert q.done.is_set(), "cancel target never reached terminal state"
+        assert q.status in (Status.OK, Status.CANCELLED, Status.FAILED,
+                            Status.EXPIRED, Status.REJECTED)
+    for q in info["poison_reqs"]:
+        assert q.done.is_set(), "poison request never reached terminal state"
+        assert q.status is not Status.OK, \
+            "a replica-killing payload cannot have completed OK"
+        assert len(q.killed_replicas) <= info["poison_threshold"], \
+            f"poison request killed {len(q.killed_replicas)} replicas, " \
+            f"budget was {info['poison_threshold']}"

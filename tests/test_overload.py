@@ -1,0 +1,657 @@
+"""End-to-end resilience control plane: deadline propagation and expiry,
+cancellation, retry budgets (backoff + poison detection), replica circuit
+breaking, graded brownout, bounded artifact-fetch retry, and the
+finish-reason taxonomy every terminal path must land in.
+
+Engine-level taxonomy tests use a reduced LM engine (jax); everything else
+runs over plain-function backends so the concurrency machinery is what's
+under test.  Randomized overload-chaos episodes carry the ``slow`` marker
+(CI runs them in a dedicated job).
+"""
+import random
+import threading
+import time
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import (ArtifactStore, BackendSpec, BreakerConfig,
+                           BrownoutConfig, BrownoutController,
+                           CircuitBreaker, FnBackend, MetricsRegistry,
+                           ReplicaConfig, Router, Status, WaitTimeout,
+                           artifact_ref, echo_spec, fetch_with_retry,
+                           prometheus_text, resolve_spec)
+from repro.cluster.artifacts import sha256_bytes
+from repro.cluster.replica import ClusterRequest, EngineBackend
+from repro.cluster.tracing import FlightRecorder, set_recorder
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.models import api
+from repro.serving import Engine, ServeConfig
+
+#: every reason a request can terminate with — the engine's decode-side
+#: taxonomy plus the cluster-side resilience reasons
+FINISH_REASONS = {"max_new", "max_len", "rejected_prompt_too_long",
+                  "kv_pool_exhausted", "deadline", "cancelled", "poison"}
+
+
+class _Clock:
+    """Injectable monotonic clock: tests never sleep through cooldowns."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def echo(delay: float = 0.0):
+    def step(payloads):
+        if delay:
+            time.sleep(delay)
+        return [p * 2 for p in payloads]
+    return FnBackend(step)
+
+
+def gated(event: threading.Event):
+    def step(payloads):
+        assert event.wait(10.0), "gate never opened"
+        return [p * 2 for p in payloads]
+    return FnBackend(step)
+
+
+# ----------------------------------------------------------------------
+# circuit breaker
+
+def test_breaker_trips_after_crash_window_and_probes_half_open():
+    clk = _Clock()
+    cb = CircuitBreaker(BreakerConfig(crash_threshold=3, window_s=10.0,
+                                      cooldown_s=5.0), clock=clk)
+    assert cb.allow(1)
+    assert not cb.record_crash(1)
+    assert not cb.record_crash(1)
+    assert cb.record_crash(1), "third crash in the window must trip"
+    assert cb.state(1) == "open"
+    assert not cb.allow(1), "quarantined during cooldown"
+    clk.t = 5.0
+    assert cb.allow(1), "cooldown over: eligible for the probe"
+    # ranking alone must not consume the probe (allow is side-effect free)
+    assert cb.allow(1) and cb.state(1) == "open"
+    cb.note_dispatch(1)
+    assert cb.state(1) == "half_open"
+    assert not cb.allow(1), "only the one probe flies while half-open"
+    cb.record_ack(1)
+    assert cb.state(1) == "closed" and cb.allow(1)
+
+
+def test_breaker_probe_failure_reopens_with_fresh_cooldown():
+    clk = _Clock()
+    cb = CircuitBreaker(BreakerConfig(crash_threshold=2, window_s=10.0,
+                                      cooldown_s=5.0), clock=clk)
+    cb.record_crash(1)
+    assert cb.record_crash(1)
+    clk.t = 5.0
+    cb.note_dispatch(1)
+    assert cb.state(1) == "half_open"
+    assert cb.record_crash(1), "a dying probe re-trips"
+    assert cb.state(1) == "open"
+    assert not cb.allow(1)
+    clk.t = 9.9
+    assert not cb.allow(1), "cooldown restarted at the probe failure"
+    clk.t = 10.0
+    assert cb.allow(1)
+
+
+def test_breaker_ignores_crashes_outside_window():
+    clk = _Clock()
+    cb = CircuitBreaker(BreakerConfig(crash_threshold=3, window_s=10.0),
+                        clock=clk)
+    for t in (0.0, 20.0, 40.0):      # spread wider than the window
+        clk.t = t
+        assert not cb.record_crash(1)
+    assert cb.state(1) == "closed" and cb.allow(1)
+
+
+def test_breaker_forget_clears_state():
+    cb = CircuitBreaker(BreakerConfig(crash_threshold=1), clock=_Clock())
+    assert cb.record_crash(1)
+    cb.forget(1)
+    assert cb.state(1) == "closed" and cb.allow(1)
+
+
+# ----------------------------------------------------------------------
+# brownout ladder
+
+def test_brownout_one_rung_per_tick_with_hysteresis():
+    bo = BrownoutController()
+    assert bo.tick(0.95) == 1 and bo.changed
+    assert bo.tick(0.95) == 2 and bo.changed
+    assert bo.tick(0.95) == 3 and bo.changed
+    assert bo.tick(0.95) == 3 and not bo.changed, "ladder tops out"
+    # inside the hysteresis band (below enter[2]=0.90, above exit[2]=0.75):
+    # the level holds instead of flapping
+    assert bo.tick(0.80) == 3 and not bo.changed
+    assert bo.tick(0.70) == 2 and bo.changed
+    assert bo.tick(0.65) == 2 and not bo.changed   # band for level 2
+    assert bo.tick(0.50) == 1 and bo.changed
+    assert bo.tick(0.40) == 0 and bo.changed
+    assert bo.tick(0.40) == 0 and not bo.changed
+
+
+def test_brownout_pressure_is_max_of_queue_and_kv():
+    bo = BrownoutController()
+    assert bo.tick(0.0, kv_used_frac=0.95) == 1, \
+        "KV occupancy alone must raise the level"
+    assert bo.admission_scale() == 1.0
+    bo.tick(0.95, 0.95)
+    bo.tick(0.95, 0.95)
+    assert bo.level == 3 and bo.admission_scale() == 0.5
+
+
+def test_brownout_config_validates_hysteresis_band():
+    with pytest.raises(ValueError):
+        BrownoutConfig(enter=(0.6, 0.75, 0.9), exit=(0.6, 0.6, 0.75))
+    with pytest.raises(ValueError):
+        BrownoutConfig(enter=(0.6, 0.75), exit=(0.45, 0.6))
+
+
+def test_engine_backend_brownout_toggles_speculation():
+    eng = types.SimpleNamespace(speculative=True)
+    be = EngineBackend(eng)
+    be.set_brownout(1)
+    assert eng.speculative is False
+    be.set_brownout(0)
+    assert eng.speculative is True, "level 0 restores the engine's setting"
+    be.set_brownout(2)
+    assert eng.speculative is False
+
+
+def test_router_brownout_ladder_under_queue_pressure():
+    """Queue occupancy against the admission bound drives the ladder up
+    one rung per submit; level 3 tightens the front door (scaled bound →
+    explicit queue_full shed); draining drops it back down — and every
+    transition broadcasts the level to the replicas."""
+    from repro.cluster import AdmissionConfig, AdmissionController
+    gate = threading.Event()
+    m = MetricsRegistry()
+    r = Router(metrics=m,
+               admission=AdmissionController(
+                   AdmissionConfig(max_queue_cost=10), m),
+               brownout=BrownoutController())
+    w = r.add_replica(gated(gate), ReplicaConfig(max_batch=1))
+    held = [r.submit(0, cost=8, timeout_s=30.0)]       # qfrac -> 0.8
+    held.append(r.submit(1, cost=1, timeout_s=30.0))   # tick: L1
+    held.append(r.submit(2, cost=1, timeout_s=30.0))   # tick: L2
+    assert m.gauge("router.brownout_level").value == 2
+    shed = r.submit(3, cost=1, timeout_s=30.0)         # tick: L3 -> bound 5
+    assert shed.status is Status.REJECTED
+    assert "brownout" in shed.result.detail
+    assert w.brownout() == 3, "transition was broadcast to the replica"
+    assert m.counter("router.brownout_transitions").value == 3
+    gate.set()
+    for q in held:
+        assert r.wait(q, timeout=10.0) == 2 * q.payload
+    for i in range(4):                                 # drained: descend
+        r.wait(r.submit(10 + i, cost=1, timeout_s=10.0), timeout=10.0)
+    assert m.gauge("router.brownout_level").value == 0
+    r.stop()
+
+
+# ----------------------------------------------------------------------
+# wait timeout + cancellation
+
+def test_wait_timeout_is_typed_and_cancel_reaches_queued_work():
+    gate = threading.Event()
+    m = MetricsRegistry()
+    r = Router(metrics=m)
+    r.add_replica(gated(gate), ReplicaConfig(max_batch=1))
+    blocker = r.submit(1, timeout_s=30.0)
+    target = r.submit(2, timeout_s=30.0)     # queued behind the blocker
+    out = r.wait(target, timeout=0.05)
+    assert isinstance(out, WaitTimeout)
+    assert out.rid == target.rid and out.waited_s == 0.05
+    assert m.counter("router.wait_timeout").value == 1
+    r.cancel(target)
+    gate.set()
+    assert r.wait(blocker, timeout=10.0) == 2
+    assert target.done.wait(10.0)
+    assert target.status is Status.CANCELLED
+    assert target.finish_reason == "cancelled"
+    assert m.counter("router.cancelled").value == 1
+    r.stop()
+
+
+def test_cancel_losing_race_to_completion_is_noop():
+    r = Router()
+    r.add_replica(echo())
+    q = r.submit(5, timeout_s=30.0)
+    assert r.wait(q, timeout=10.0) == 10
+    r.cancel(q)                      # already terminal: OK wins
+    assert q.status is Status.OK and q.finish_reason == ""
+    r.stop()
+
+
+def test_deadline_expires_in_replica_queue():
+    gate = threading.Event()
+    r = Router()
+    r.add_replica(gated(gate), ReplicaConfig(max_batch=1))
+    blocker = r.submit(1, timeout_s=30.0)
+    victim = r.submit(2, timeout_s=0.05)
+    time.sleep(0.15)                 # victim expires while queued
+    gate.set()
+    assert r.wait(blocker, timeout=10.0) == 2
+    assert victim.done.wait(10.0)
+    assert victim.status is Status.EXPIRED
+    assert victim.finish_reason == "deadline"
+    assert victim.result == [], "queue drop acks empty partial output"
+    r.stop()
+
+
+def test_late_ack_downgrades_to_expired():
+    """A full result arriving after the deadline must not land as OK —
+    the single-completion-point downgrade covers workers that ignored the
+    wire budget (old builds) and acks already in flight."""
+    gate = threading.Event()
+    r = Router()
+    r.add_replica(gated(gate), ReplicaConfig(max_batch=1))
+    victim = r.submit(3, timeout_s=0.05)    # pulled before expiry, stuck
+    time.sleep(0.15)
+    gate.set()
+    assert victim.done.wait(10.0)
+    assert victim.status is Status.EXPIRED
+    assert victim.finish_reason == "deadline"
+    r.stop()
+
+
+# ----------------------------------------------------------------------
+# retry budgets: backoff + poison
+
+def test_poison_request_blast_radius_is_bounded():
+    m = MetricsRegistry()
+    r = Router(metrics=m, max_retries=8, poison_threshold=2,
+               retry_backoff_base_s=0.001, retry_backoff_max_s=0.01)
+    for _ in range(3):
+        r.add_replica(spec=echo_spec(delay_s=0.001, poison=7),
+                      cfg=ReplicaConfig(max_batch=2))
+    bad = r.submit(7, timeout_s=30.0)
+    assert bad.done.wait(10.0)
+    assert bad.status is Status.FAILED
+    assert bad.finish_reason == "poison"
+    assert len(bad.killed_replicas) == 2, \
+        "poison terminates at the threshold, not the whole fleet"
+    assert m.counter("router.poisoned").value == 1
+    assert m.counter("router.retry_backoff").value >= 1
+    assert r.n_alive() == 1, "the third replica survived"
+    ok = r.submit(5, timeout_s=10.0)
+    assert r.wait(ok, timeout=10.0) == 10
+    r.stop()
+
+
+def test_quarantine_routes_around_crash_looping_replica():
+    """Spills from a transport that stays in the pool (socket-flap
+    semantics) are breaker strikes; a tripped replica stops winning
+    ranking rounds and traffic lands on the healthy one."""
+    clk = _Clock()
+    m = MetricsRegistry()
+    cb = CircuitBreaker(BreakerConfig(crash_threshold=2, window_s=30.0,
+                                      cooldown_s=5.0), clock=clk)
+    r = Router(metrics=m, breaker=cb)
+    flaky = r.add_replica(echo())
+    healthy = r.add_replica(echo())
+    fake = types.SimpleNamespace(rid=flaky.rid, alive=True)
+    r._on_spill([], fake)
+    assert cb.state(flaky.rid) == "closed"
+    r._on_spill([], fake)
+    assert cb.state(flaky.rid) == "open"
+    assert m.counter("router.quarantined").value == 1
+    reqs = [r.submit(i, timeout_s=10.0) for i in range(6)]
+    for q in reqs:
+        assert r.wait(q, timeout=10.0) == 2 * q.payload
+    assert all(q.replica_rid == healthy.rid for q in reqs), \
+        "no request may land on the quarantined replica"
+    r.stop()
+
+
+def test_half_open_probe_readmits_recovered_replica():
+    clk = _Clock()
+    cb = CircuitBreaker(BreakerConfig(crash_threshold=1, cooldown_s=5.0),
+                        clock=clk)
+    r = Router(breaker=cb)
+    w = r.add_replica(echo())
+    fake = types.SimpleNamespace(rid=w.rid, alive=True)
+    r._on_spill([], fake)
+    assert cb.state(w.rid) == "open"
+    # during cooldown the only replica is unrankable: explicit shed
+    q = r.submit(1, timeout_s=5.0)
+    assert q.status is Status.REJECTED
+    clk.t = 5.0
+    probe = r.submit(99, timeout_s=10.0)
+    assert r.wait(probe, timeout=10.0) == 198
+    assert cb.state(w.rid) == "closed", "a clean probe ack closes it"
+    r.stop()
+
+
+# ----------------------------------------------------------------------
+# artifact fetch retry
+
+def test_fetch_with_retry_bounds_attempts_and_jitters_backoff():
+    calls, sleeps = [], []
+    out = fetch_with_retry(lambda d: calls.append(d), "ab", attempts=4,
+                           base_s=0.1, max_s=0.15, jitter=0.5,
+                           sleep=sleeps.append, rng=random.Random(0))
+    assert out is None
+    assert len(calls) == 4
+    assert len(sleeps) == 3, "no backoff after the final attempt"
+    for i, s in enumerate(sleeps):
+        base = min(0.1 * 2 ** i, 0.15)
+        assert base <= s <= base * 1.5, "jitter is bounded and additive"
+    seq = iter([None, None, b"blob"])
+    assert fetch_with_retry(lambda d: next(seq), "ab", attempts=4,
+                            sleep=lambda s: None) == b"blob"
+
+
+def test_fetch_with_retry_propagates_exceptions_immediately():
+    calls = []
+
+    def broken(d):
+        calls.append(d)
+        raise OSError("channel closed")
+
+    with pytest.raises(OSError):
+        fetch_with_retry(broken, "ab", attempts=4, sleep=lambda s: None)
+    assert len(calls) == 1, "a closed channel is not a transient miss"
+
+
+def test_resolve_spec_survives_transient_fetch_miss(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    payload = b"weights-bytes"
+    digest = sha256_bytes(payload)
+    spec = BackendSpec("mod:fn", {"weights_path": artifact_ref(digest)})
+    attempts = []
+
+    def flaky_fetch(d):
+        attempts.append(d)
+        return payload if len(attempts) >= 3 else None
+
+    resolved = resolve_spec(spec, store, fetch=flaky_fetch)
+    assert resolved.kwargs["weights_path"] == store.get_path(digest)
+    assert len(attempts) == 3, "two transient misses then success"
+
+
+def test_resolve_spec_total_failure_is_still_explicit(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    digest = sha256_bytes(b"never-arrives")
+    spec = BackendSpec("mod:fn", {"weights_path": artifact_ref(digest)})
+    attempts = []
+
+    def always_miss(d):
+        attempts.append(d)
+        return None
+
+    t0 = time.monotonic()
+    with pytest.raises(KeyError):
+        resolve_spec(spec, store, fetch=always_miss)
+    assert len(attempts) == 4, "bounded attempts, then the explicit error"
+    assert time.monotonic() - t0 < 10.0, "capped backoff keeps it prompt"
+
+
+# ----------------------------------------------------------------------
+# observability: every resilience event reaches the flight recorder and
+# every counter/gauge renders through the Prometheus exporter
+
+def test_resilience_events_recorded_and_exported():
+    from repro.cluster import AdmissionConfig, AdmissionController
+    from repro.cluster.tracing import current_recorder
+
+    prev = current_recorder()
+    rec = FlightRecorder(capacity=4096, replica="parent")
+    set_recorder(rec)
+    try:
+        gate = threading.Event()
+        m = MetricsRegistry()
+        clk = _Clock()
+        cb = CircuitBreaker(BreakerConfig(crash_threshold=1), clock=clk)
+        r = Router(metrics=m, breaker=cb,
+                   admission=AdmissionController(
+                       AdmissionConfig(max_queue_cost=20), m),
+                   brownout=BrownoutController(),
+                   max_retries=8, poison_threshold=2,
+                   retry_backoff_base_s=0.001, retry_backoff_max_s=0.01)
+        w = r.add_replica(gated(gate), ReplicaConfig(max_batch=1))
+        blocker = r.submit(1, cost=16, timeout_s=30.0)
+        cancelled = r.submit(2, timeout_s=30.0)   # qfrac 0.8 -> brownout L1
+        expired = r.submit(3, timeout_s=0.02)
+        r.cancel(cancelled)
+        assert isinstance(r.wait(blocker, timeout=0.01), WaitTimeout)
+        time.sleep(0.1)
+        gate.set()
+        assert r.wait(blocker, timeout=10.0) == 2
+        assert cancelled.done.wait(10.0) and expired.done.wait(10.0)
+        # quarantine strike from a still-alive transport
+        r._on_spill([], types.SimpleNamespace(rid=w.rid, alive=True))
+        r.stop()
+
+        # poison episode (its own pool: the gated one is quarantined)
+        r2 = Router(metrics=m, max_retries=8, poison_threshold=2,
+                    retry_backoff_base_s=0.001, retry_backoff_max_s=0.01)
+        for _ in range(3):
+            r2.add_replica(spec=echo_spec(poison=7),
+                           cfg=ReplicaConfig(max_batch=2))
+        bad = r2.submit(7, timeout_s=30.0)
+        assert bad.done.wait(10.0) and bad.finish_reason == "poison"
+        r2.stop()
+
+        kinds = {e["kind"] for e in rec.events()}
+        for kind in ("cancelled", "deadline_expired", "retry_backoff",
+                     "quarantine", "brownout_level", "poison"):
+            assert kind in kinds, f"flight recorder missed {kind!r}"
+
+        text = prometheus_text(m.snapshot())
+        for metric in ("router_cancelled", "router_wait_timeout",
+                       "router_retry_backoff", "router_poisoned",
+                       "router_quarantined", "router_brownout_level",
+                       "router_brownout_transitions"):
+            assert metric in text, f"exporter missed {metric}"
+    finally:
+        set_recorder(prev)
+
+
+# ----------------------------------------------------------------------
+# finish-reason taxonomy: one engine, seven ways to stop
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _frames(sink):
+    """on_tokens collector: (tokens, done) pairs in arrival order."""
+    def cb(req, toks, done):
+        sink.append((list(toks), done))
+    return cb
+
+
+@pytest.mark.parametrize("scenario", sorted(FINISH_REASONS - {"poison"}))
+def test_finish_reason_taxonomy(lm, scenario):
+    """Every terminal path lands in exactly one taxonomy reason, with a
+    consistent stream view: exactly one ``done=True`` frame, and partial
+    output only where the contract allows it.  ("poison" is cluster-side;
+    see test_poison_request_blast_radius_is_bounded.)"""
+    cfg, params = lm
+    rng = np.random.RandomState(0)
+    prompt = rng.randint(0, cfg.vocab, size=6).astype(np.int32)
+    dense = ServeConfig(max_len=32, slots=2, fused=True, sync_every=4)
+    frames = []
+
+    if scenario == "max_new":
+        eng = Engine(params, cfg, dense)
+        r = eng.submit(prompt, max_new=4, on_tokens=_frames(frames))
+        eng.run_until_drained()
+        assert r.decoded == 4, "prefill token rides free of the budget"
+        assert len(r.out_tokens) == 5
+    elif scenario == "max_len":
+        eng = Engine(params, cfg, dense)
+        r = eng.submit(prompt, max_new=100, on_tokens=_frames(frames))
+        eng.run_until_drained()
+        assert r.decoded == dense.max_len - 1 - len(prompt)
+    elif scenario == "rejected_prompt_too_long":
+        scfg = ServeConfig(max_len=32, slots=2, fused=True, sync_every=4,
+                           paged=True, block_size=8, kv_blocks=4,
+                           prefix_cache=False)
+        eng = Engine(params, cfg, scfg)
+        big = rng.randint(0, cfg.vocab, size=30).astype(np.int32)
+        r = eng.submit(big, max_new=3, on_tokens=_frames(frames))
+        eng.run_until_drained()
+        assert r.out_tokens == []
+    elif scenario == "kv_pool_exhausted":
+        scfg = ServeConfig(max_len=32, slots=2, fused=True, sync_every=4,
+                           paged=True, block_size=8, kv_blocks=5,
+                           prefix_cache=False)
+        eng = Engine(params, cfg, scfg)
+        a = eng.submit(prompt, max_new=24)
+        r = eng.submit(rng.randint(0, cfg.vocab, size=8).astype(np.int32),
+                       max_new=24, on_tokens=_frames(frames))
+        eng.run_until_drained()
+        assert a.done and r.done
+        reasons = {a.finish_reason, r.finish_reason}
+        assert "kv_pool_exhausted" in reasons
+        if r.finish_reason != "kv_pool_exhausted":
+            r = a        # the victim is what the scenario asserts on
+            frames = None
+    elif scenario == "deadline":
+        eng = Engine(params, cfg, dense)
+        r = eng.submit(prompt, max_new=8, on_tokens=_frames(frames),
+                       deadline_s=time.monotonic() - 1.0)
+        eng.run_until_drained()
+        assert r.out_tokens == [], "expired in queue: no decode spent"
+        assert eng.metrics.counter("engine.deadline_expired").value == 1
+    elif scenario == "cancelled":
+        eng = Engine(params, cfg, dense)
+        r = eng.submit(prompt, max_new=8, on_tokens=_frames(frames),
+                       cancel_cb=lambda: True)
+        eng.run_until_drained()
+        assert r.out_tokens == []
+        assert eng.metrics.counter("engine.cancelled").value == 1
+
+    assert r.done
+    assert r.finish_reason == scenario
+    assert r.finish_reason in FINISH_REASONS
+    if frames is not None:
+        assert sum(1 for _, done in frames if done) == 1, \
+            "exactly one terminal frame per request"
+        assert frames[-1][1], "the terminal frame is last"
+
+
+def test_engine_cancels_mid_decode_and_frees_kv():
+    """A cancel landing after decode starts ends the session at the next
+    sync with its partial tokens intact — and on the paged path its KV
+    blocks return to the pool immediately, not at drain."""
+    cfg = reduced(get_config("internlm2-1.8b"))
+    params, _ = api.init(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(max_len=64, slots=2, fused=True, sync_every=2,
+                       paged=True, block_size=8, prefix_cache=False)
+    eng = Engine(params, cfg, scfg)
+    rng = np.random.RandomState(1)
+    prompt = rng.randint(0, cfg.vocab, size=6).astype(np.int32)
+    flag = {"cancel": False}
+    seen = []
+
+    def on_tokens(req, toks, done):
+        seen.extend(toks)
+        if seen:
+            flag["cancel"] = True    # cancel after the first sync's tokens
+
+    victim = eng.submit(prompt, max_new=40, on_tokens=on_tokens,
+                        cancel_cb=lambda: flag["cancel"])
+    survivor = eng.submit(rng.randint(0, cfg.vocab, size=7).astype(np.int32),
+                          max_new=6)
+    eng.run_until_drained()
+    assert victim.done and victim.finish_reason == "cancelled"
+    assert 0 < len(victim.out_tokens) < 40, "partial output survives"
+    assert survivor.done and survivor.finish_reason == "max_new"
+    assert survivor.decoded == 6, "batch-mates are untouched"
+    assert eng.alloc.free_blocks + eng.alloc.cached_blocks == \
+        eng.alloc.num_blocks, "cancelled session's blocks were freed"
+
+
+def test_engine_deadline_mid_decode(lm):
+    """A deadline that passes mid-decode finishes the session with its
+    partial tokens (finish_reason="deadline") while batch-mates decode to
+    completion."""
+    cfg, params = lm
+    scfg = ServeConfig(max_len=64, slots=2, fused=True, sync_every=2)
+    eng = Engine(params, cfg, scfg)
+    rng = np.random.RandomState(2)
+    prompt = rng.randint(0, cfg.vocab, size=6).astype(np.int32)
+
+    def on_tokens(req, toks, done):
+        # once the first tokens land, yank the deadline into the past —
+        # the sweep re-reads deadline_s every step
+        if toks and not done:
+            req.deadline_s = time.monotonic() - 1.0
+
+    victim = eng.submit(prompt, max_new=40, on_tokens=on_tokens,
+                        deadline_s=time.monotonic() + 100.0)
+    survivor = eng.submit(rng.randint(0, cfg.vocab, size=7).astype(np.int32),
+                          max_new=6)
+    eng.run_until_drained()
+    assert victim.done and victim.finish_reason == "deadline"
+    assert 0 < len(victim.out_tokens) < 40, "partial output survives"
+    assert eng.metrics.counter("engine.deadline_expired").value == 1
+    assert survivor.done and survivor.finish_reason == "max_new"
+    assert survivor.decoded == 6, "batch-mates are untouched"
+
+
+# ----------------------------------------------------------------------
+# end-to-end deadline propagation over the wire (worker pins the budget)
+
+@pytest.mark.parametrize("transport", ["thread", "process"])
+def test_deadline_propagates_to_worker_queue(transport):
+    """The budget rides the request frame; the worker drops expired queue
+    work without touching the backend, acking Terminal("deadline")."""
+    m = MetricsRegistry()
+    r = Router(metrics=m)
+    r.add_replica(spec=echo_spec(delay_s=0.2), cfg=ReplicaConfig(max_batch=1),
+                  transport=transport)
+    blocker = r.submit(1, timeout_s=30.0)       # holds the backend 200ms
+    victim = r.submit(2, timeout_s=0.05)        # expires while queued
+    assert r.wait(blocker, timeout=20.0) == 2
+    assert victim.done.wait(20.0)
+    assert victim.status is Status.EXPIRED
+    assert victim.finish_reason == "deadline"
+    r.stop()
+
+
+# ----------------------------------------------------------------------
+# randomized overload chaos (CI job: overload-chaos)
+
+@pytest.mark.slow
+@pytest.mark.parametrize("transport", ["thread", "process"])
+def test_overload_chaos_invariants(transport):
+    from tests.chaos import (assert_overload_invariants, overload_schedule,
+                             run_overload_chaos)
+    faults = overload_schedule(seed=5, n_faults=12, horizon_s=0.8,
+                               n_replicas=3)
+    report, snap, info = run_overload_chaos(transport, faults,
+                                            n_replicas=3, n_requests=80)
+    assert_overload_invariants(report, info)
+    if any(f.action == "cancel" for f in faults):
+        assert info["cancel_targets"], "schedule had cancels but none fired"
+    if any(f.action == "expire" for f in faults):
+        assert info["expire_reqs"], "schedule had expiries but none fired"
+
+
+@pytest.mark.slow
+def test_overload_chaos_thread_seeds():
+    from tests.chaos import (assert_overload_invariants, overload_schedule,
+                             run_overload_chaos)
+    for seed in (0, 1, 2, 3):
+        faults = overload_schedule(seed, n_faults=10, horizon_s=0.6,
+                                   n_replicas=3)
+        report, _, info = run_overload_chaos("thread", faults,
+                                             n_replicas=3, n_requests=60)
+        assert_overload_invariants(report, info)
