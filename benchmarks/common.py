@@ -41,12 +41,24 @@ def bench_json_path(name: str) -> str:
     return os.path.join(REPO_ROOT, name)
 
 
+#: entries kept in each BENCH_*.json ``history`` array (append-only,
+#: oldest dropped first) — enough for ``scripts/bench_report.py`` trends
+#: without letting the files grow unboundedly
+HISTORY_CAP = 50
+
+
 def write_bench_json(path: str, merge: Callable[[Dict], Dict]) -> Dict:
     """Merge-write a BENCH_*.json: read whatever is already there (absent or
     corrupt files degrade to ``{}``), let ``merge(prev)`` fold the new
     results in — so a partial run updates only its own columns instead of
     clobbering the trajectory the file exists to track — and write it back
-    deterministically."""
+    deterministically.
+
+    Every write also appends one entry to the file's ``history`` array:
+    a timestamp plus the new values of the top-level scenario keys this
+    run changed.  ``scripts/bench_report.py`` turns those into per-metric
+    trend lines and regression flags; the array is bounded at
+    :data:`HISTORY_CAP` entries."""
     prev: Dict = {}
     if os.path.exists(path):
         try:
@@ -55,6 +67,15 @@ def write_bench_json(path: str, merge: Callable[[Dict], Dict]) -> Dict:
         except (OSError, ValueError):
             prev = {}
     out = merge(prev)
+    history: List[Dict] = list(prev.get("history") or [])
+    changed = {k: out[k] for k in out
+               if k != "history" and out[k] != prev.get(k)}
+    if changed:
+        history.append({
+            "at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "changed": changed,
+        })
+    out["history"] = history[-HISTORY_CAP:]
     with open(path, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
     print(f"# wrote {path}")

@@ -1,0 +1,114 @@
+"""Render the perf trajectory recorded in BENCH_*.json history arrays.
+
+    python scripts/bench_report.py [--strict] [FILES...]
+
+Every ``benchmarks.common.write_bench_json`` call appends a timestamped
+entry of the scenario keys it changed to the file's ``history`` array
+(bounded at ``HISTORY_CAP``).  This script flattens those entries into
+per-metric trend lines for the throughput-bearing metrics (``tok_per_s``,
+``goodput_tok_s``, ratio and overhead fractions), prints a trend table,
+and flags any metric whose latest throughput sample dropped more than
+10% below the previous one.  ``--strict`` exits non-zero when a
+regression is flagged (the default only reports, since single-box CI
+timing is noisy).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Any, Dict, List, Tuple
+
+REGRESSION_FRAC = 0.10
+#: metrics where a drop is a regression (higher is better)
+THROUGHPUT_SUFFIXES = ("tok_per_s", "goodput_tok_s", "speedup",
+                       "capacity_ratio", "goodput_ratio",
+                       "paged_vs_dense_tok_ratio",
+                       "spec_effective_tok_ratio", "accept_rate",
+                       "prefix_hit_rate")
+#: metrics reported but not direction-flagged (lower is better / bounded)
+INFO_SUFFIXES = ("overhead_frac", "overhead_frac_sampled", "p50_lat_s",
+                 "wall_s")
+
+
+def _flatten(prefix: str, node: Any, out: Dict[str, float]) -> None:
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _flatten(f"{prefix}.{k}" if prefix else str(k), v, out)
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        out[prefix] = float(node)
+
+
+def _interesting(path: str) -> str:
+    """'' if the metric is noise; 'throughput' or 'info' otherwise."""
+    leaf = path.rsplit(".", 1)[-1]
+    if leaf in THROUGHPUT_SUFFIXES:
+        return "throughput"
+    if leaf in INFO_SUFFIXES:
+        return "info"
+    return ""
+
+
+def trends(path: str) -> Dict[str, List[Tuple[str, float]]]:
+    """metric path -> [(timestamp, value), ...] across the history."""
+    try:
+        doc = json.load(open(path))
+    except (OSError, ValueError):
+        return {}
+    series: Dict[str, List[Tuple[str, float]]] = {}
+    for entry in doc.get("history") or []:
+        flat: Dict[str, float] = {}
+        _flatten("", entry.get("changed", {}), flat)
+        for k, v in flat.items():
+            if _interesting(k):
+                series.setdefault(k, []).append((entry.get("at", "?"), v))
+    return series
+
+
+def report(paths: List[str], strict: bool = False) -> int:
+    regressions = []
+    any_rows = False
+    for path in paths:
+        series = trends(path)
+        if not series:
+            continue
+        any_rows = True
+        print(f"\n== {os.path.basename(path)} ==")
+        print(f"{'metric':<58}{'n':>3}{'first':>12}{'last':>12}"
+              f"{'delta':>9}")
+        for metric in sorted(series):
+            pts = series[metric]
+            first, last = pts[0][1], pts[-1][1]
+            delta = (last - first) / first if first else 0.0
+            flag = ""
+            if len(pts) >= 2 and _interesting(metric) == "throughput":
+                prev = pts[-2][1]
+                if prev > 0 and last < (1.0 - REGRESSION_FRAC) * prev:
+                    flag = "  << REGRESSION " \
+                           f"(-{(1.0 - last / prev) * 100:.0f}% vs prev)"
+                    regressions.append((path, metric, prev, last))
+            print(f"{metric:<58}{len(pts):>3}{first:>12.3f}{last:>12.3f}"
+                  f"{delta * 100:>8.1f}%{flag}")
+    if not any_rows:
+        print("no history recorded yet — run any benchmarks/ module to "
+              "start the trajectory")
+    if regressions:
+        print(f"\n{len(regressions)} throughput regression(s) flagged "
+              f"(>{REGRESSION_FRAC * 100:.0f}% drop vs previous sample)")
+        return 1 if strict else 0
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="BENCH_*.json files (default: repo root glob)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when a regression is flagged")
+    args = ap.parse_args()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = args.files or sorted(glob.glob(os.path.join(root,
+                                                        "BENCH_*.json")))
+    sys.exit(report(files, strict=args.strict))

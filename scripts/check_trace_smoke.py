@@ -1,6 +1,7 @@
-"""Validate the trace-smoke artifacts (CI `trace-smoke` job).
+"""Validate the trace-smoke / dashboard-smoke artifacts (CI).
 
     PYTHONPATH=src python scripts/check_trace_smoke.py trace.json prom.txt
+    PYTHONPATH=src python scripts/check_trace_smoke.py --stats PREFIX
 
 Asserts the Chrome trace-event JSON from a traced serve run is
 schema-valid and forms *connected* span trees covering every hot-path
@@ -8,8 +9,16 @@ stage — parent-side (admission, router, transport) and worker-side
 (replica batch, engine prefill/decode), the latter proving spans crossed
 the socket boundary over heartbeats — and that the Prometheus text
 exposition parses with internally consistent histogram series.
+
+``--stats PREFIX`` validates a ``serve --stats-dump PREFIX`` artifact
+set instead: ``PREFIX.metrics.txt`` must prom-parse, the
+``PREFIX.timeseries.json`` schema must hold its documented memory bound,
+``PREFIX.slo.json`` must carry well-formed burn-rate alert states, and
+``PREFIX.dash.html`` must contain rendered sparkline SVGs and the table
+view with no non-finite coordinates.
 """
 import json
+import math
 import re
 import sys
 
@@ -61,7 +70,8 @@ def check_prom(path: str) -> None:
     for ln in lines:
         if ln.startswith("#"):
             assert re.match(r"^# TYPE [a-zA-Z_:][a-zA-Z0-9_:]* "
-                            r"(gauge|counter|histogram)$", ln), \
+                            r"(gauge|counter|histogram)$", ln) \
+                or re.match(r"^# HELP [a-zA-Z_:][a-zA-Z0-9_:]* \S", ln), \
                 f"bad comment line: {ln}"
             continue
         assert SAMPLE_RE.match(ln), f"unparseable sample line: {ln}"
@@ -86,8 +96,80 @@ def check_prom(path: str) -> None:
           f"{len(hist_stems)} histograms consistent")
 
 
+def check_timeseries(path: str) -> None:
+    doc = json.load(open(path))
+    for key in ("now", "windows", "n_keys", "n_points", "max_points",
+                "dropped_keys", "counters", "gauges", "histograms"):
+        assert key in doc, f"timeseries.json missing {key!r}"
+    assert doc["n_points"] <= doc["max_points"], \
+        f"memory bound violated: {doc['n_points']} > {doc['max_points']}"
+    windows = [f"{w:g}s" for w in doc["windows"]]
+    for key, c in doc["counters"].items():
+        for w in windows:
+            rate = c["rate"][w]
+            assert math.isfinite(rate) and rate >= 0.0, \
+                f"{key}: bad rate {rate}"
+    for stem, h in doc["histograms"].items():
+        for w in windows:
+            for field in ("count_rate", "p50", "p99", "mean"):
+                v = h[field][w]
+                assert math.isfinite(v) and v >= 0.0, \
+                    f"{stem}.{field}[{w}]: bad value {v}"
+            assert h["p50"][w] <= h["p99"][w], f"{stem}: p50 > p99"
+    assert doc["histograms"], "no histogram stems sampled"
+    print(f"[dash-smoke] {path}: {doc['n_keys']} keys, "
+          f"{doc['n_points']}/{doc['max_points']} points, "
+          f"{len(doc['histograms'])} histogram stems")
+
+
+def check_slo(path: str) -> None:
+    doc = json.load(open(path))
+    assert isinstance(doc.get("objectives"), list), "no objectives"
+    assert doc.get("ticks", 0) > 0, "SLO engine never ticked"
+    n_alerts = 0
+    for obj in doc["objectives"]:
+        for sub, alert in obj["alerts"].items():
+            assert sub in ("latency", "availability"), f"odd sub {sub}"
+            assert alert["state"] in ("ok", "firing"), \
+                f"bad alert state {alert['state']}"
+            assert math.isfinite(alert["budget_remaining"])
+            n_alerts += 1
+    assert n_alerts, "no alerts evaluated"
+    print(f"[dash-smoke] {path}: {n_alerts} alerts, "
+          f"ticks={doc['ticks']}, pressure={doc['pressure']:.2f}")
+
+
+def check_dash(path: str) -> None:
+    html = open(path).read()
+    assert "<svg" in html, "no inline SVG sparklines"
+    assert "<table" in html, "no table view (a11y requirement)"
+    assert "NaN" not in html and "Infinity" not in html, \
+        "non-finite values leaked into markup"
+    polys = re.findall(r'<polyline points="([^"]+)"', html)
+    assert polys, "no sparkline polylines rendered"
+    pt_re = re.compile(r"^-?\d+(\.\d+)?,-?\d+(\.\d+)?$")
+    for poly in polys:
+        for pt in poly.split():
+            assert pt_re.match(pt), f"malformed coordinate {pt!r}"
+    print(f"[dash-smoke] {path}: {html.count('<svg')} SVGs, "
+          f"{len(polys)} polylines, table view present")
+
+
+def check_stats(prefix: str) -> None:
+    check_prom(f"{prefix}.metrics.txt")
+    check_timeseries(f"{prefix}.timeseries.json")
+    check_slo(f"{prefix}.slo.json")
+    check_dash(f"{prefix}.dash.html")
+
+
 if __name__ == "__main__":
-    trace_path, prom_path = sys.argv[1], sys.argv[2]
-    check_chrome(trace_path)
-    check_prom(prom_path)
-    print("[trace-smoke] OK")
+    if sys.argv[1] == "--stats":
+        check_stats(sys.argv[2])
+        print("[dash-smoke] OK")
+    else:
+        trace_path, prom_path = sys.argv[1], sys.argv[2]
+        check_chrome(trace_path)
+        check_prom(prom_path)
+        if len(sys.argv) > 4 and sys.argv[3] == "--stats":
+            check_stats(sys.argv[4])
+        print("[trace-smoke] OK")

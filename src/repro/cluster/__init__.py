@@ -32,7 +32,13 @@ from repro.cluster.replica import (ClusterRequest, EngineBackend,  # noqa: F401
                                    FnBackend, ReplicaConfig, ReplicaCrash,
                                    Status, StreamBackend, Terminal,
                                    WaitTimeout)
+from repro.cluster.dashboard import (StatsServer, render_dash,  # noqa: F401
+                                     render_watch)
 from repro.cluster.router import POLICIES, Router  # noqa: F401
+from repro.cluster.slo import (BurnWindow, SLOEngine,  # noqa: F401
+                               SLOObjective, test_scaled_objective)
+from repro.cluster.timeseries import (EwmaRate, StageAttributor,  # noqa: F401
+                                      TelemetrySampler, TimeSeriesStore)
 from repro.cluster.tracing import (FlightRecorder, Span,  # noqa: F401
                                    TraceContext, Tracer, current_recorder,
                                    current_tracer, prometheus_text,

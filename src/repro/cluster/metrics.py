@@ -31,6 +31,45 @@ HIST_BUCKET_BOUNDS: Sequence[float] = tuple(
 _N_BUCKETS = len(HIST_BUCKET_BOUNDS) + 1          # + overflow
 _BUCKET_KEY_RE = re.compile(r"^(?P<stem>.+)\.le(?P<i>\d+)$")
 
+# ----------------------------------------------------------------------
+# Flat snapshots erase metric types — every consumer that needs to treat
+# a key as "level" rather than "monotone count" (departed-replica
+# retention in Router.cluster_snapshot, TimeSeriesStore windowing) has to
+# re-derive them, so the classification lives here, next to the metrics
+# themselves.  Histogram-derived keys are recognized structurally; gauges
+# by name.  Everything else is a counter.
+GAUGE_KEYS = frozenset({
+    "engine.kv_blocks_total", "engine.kv_blocks_free",
+    "engine.kv_blocks_cached",
+    "router.replicas", "router.queue_depth", "router.brownout_level",
+    "service.queue_depth", "stream.falling_behind",
+    "autoscaler.depth_per_replica",
+})
+GAUGE_PREFIXES = ("slo.", "timeseries.")
+_HIST_DERIVED_SUFFIXES = (".mean", ".p50", ".p95", ".p99")
+
+
+def is_gauge_key(key: str) -> bool:
+    """True for keys that carry a *level* (last-value semantics): named
+    gauges and the histogram-derived mean/percentile keys.  Histogram
+    ``.count``/``.le<i>`` keys and plain counters are monotone and return
+    False."""
+    if key in GAUGE_KEYS or key.startswith(GAUGE_PREFIXES):
+        return True
+    return key.endswith(_HIST_DERIVED_SUFFIXES)
+
+
+def terminal_snapshot_view(snap: Dict[str, float]) -> Dict[str, float]:
+    """What of a departed replica's final snapshot stays in the cluster
+    merge: monotone counters, histogram ``.count``/``.le<i>`` buckets and
+    ``.mean`` s (the count-weighted mean merge stays correct).  Levels
+    drop — a dead replica holds no queue depth or KV blocks, and
+    retaining its gauges would inflate cluster capacity forever — and so
+    do lifetime percentiles, whose max-merge would otherwise pin the
+    cluster tail to a corpse's worst sample."""
+    return {k: v for k, v in snap.items()
+            if k.endswith(".mean") or not is_gauge_key(k)}
+
 
 class Counter:
     __slots__ = ("_value", "_lock")

@@ -161,8 +161,14 @@ class BrownoutController:
         self.level = 0
         self.changed = False
 
-    def tick(self, queue_frac: float, kv_used_frac: float = 0.0) -> int:
-        pressure = max(float(queue_frac), float(kv_used_frac))
+    def tick(self, queue_frac: float, kv_used_frac: float = 0.0,
+             extra: float = 0.0) -> int:
+        """``extra`` admits additional pressure sources beyond the two
+        occupancy signals — e.g. a firing SLO burn alert
+        (``SLOEngine.pressure``) browning the service out *before* the
+        queues themselves look full."""
+        pressure = max(float(queue_frac), float(kv_used_frac),
+                       float(extra))
         before = self.level
         if self.level < 3 and pressure >= self.cfg.enter[self.level]:
             self.level += 1

@@ -112,6 +112,12 @@ class ClusterRequest:
     # attempt stay tagged apart from the retry's.
     trace_span: Any = None
     trace_ctx: Any = None
+    # telemetry: the router attaches its registry so the single terminal
+    # transition below can count every outcome by finish reason
+    # (``router.finish.total`` / ``router.finish.<reason>``) — the SLO
+    # engine's availability objective is computed from exactly these.
+    # Never pickled: only payloads cross the transport boundary.
+    metrics: Any = None
 
     def emit_partial(self, frame: Any) -> None:
         self.partials.append(frame)
@@ -144,6 +150,10 @@ class ClusterRequest:
     def _finish(self, status: Status):
         self.status = status
         self.finished_s = time.monotonic()
+        if self.metrics is not None:
+            reason = self.finish_reason or status.value
+            self.metrics.counter("router.finish.total").inc()
+            self.metrics.counter(f"router.finish.{reason}").inc()
         if self.trace_span is not None:
             self.trace_span.tag(status=status.value, attempts=self.attempts)
             self.trace_span.end()
@@ -227,6 +237,9 @@ class ReplicaCrash(RuntimeError):
 class FnBackend:
     """Wrap a batched ``step_fn(payloads) -> results`` (tests, services)."""
 
+    kind = "fn"                     # backend kind (admission cost model,
+                                    # per-kind telemetry attribution)
+
     def __init__(self, step_fn: Callable[[List[Any]], List[Any]]):
         self.step_fn = step_fn
 
@@ -242,6 +255,8 @@ class StreamBackend:
     micro-batch before device compute; it blocks the host thread, which is
     exactly what overlapping replicas hide.
     """
+
+    kind = "stream"
 
     def __init__(self, runtime, fetch: Optional[Callable[[Any], Any]] = None):
         self.runtime = runtime
@@ -280,6 +295,8 @@ class EngineBackend:
     payload that produced it — partial tokens reach the submitter at
     K-step granularity instead of whole-request acks.
     """
+
+    kind = "engine"
 
     def __init__(self, engine):
         self.engine = engine

@@ -39,8 +39,10 @@ log = logging.getLogger(__name__)
 
 from repro.cluster.admission import AdmissionController, Rejected
 from repro.cluster.backends import BackendSpec
+from collections import OrderedDict
+
 from repro.cluster.metrics import (MetricsRegistry, merge_snapshots,
-                                   null_registry)
+                                   null_registry, terminal_snapshot_view)
 from repro.cluster.overload import BrownoutController, CircuitBreaker
 from repro.cluster.replica import (KV_IMPORT_TAG, ClusterRequest,
                                    ReplicaConfig, Status, WaitTimeout)
@@ -104,6 +106,17 @@ class Router:
         self._completed = self.metrics.counter("router.completed")
         self._failed = self.metrics.counter("router.failed")
         self._requeued = self.metrics.counter("router.requeued")
+        self._submitted = self.metrics.counter("router.submitted")
+        # optional SLO engine (wired by serve/telemetry setup): a firing
+        # burn alert feeds extra pressure into the brownout ladder
+        self.slo: Optional[Any] = None
+        # terminal snapshots of departed replicas: a removed/dead worker's
+        # last-merged counters stay in cluster_snapshot() so cluster-wide
+        # counters (and .le<i> histogram counts) never regress when a
+        # worker leaves.  Bounded FIFO by rid; gauges/percentiles are
+        # filtered out at capture (terminal_snapshot_view).
+        self._departed: "OrderedDict[int, Dict[str, float]]" = OrderedDict()
+        self.departed_cap = 32
 
     # -------------------------------------------------- replica pool
     def add_replica(self, backend=None, cfg: ReplicaConfig = ReplicaConfig(),
@@ -154,6 +167,10 @@ class Router:
             worker.drain()
             if migrate:
                 self._migrate_kv(worker, remapped)
+        if worker is not None:
+            # after the drain: the final heartbeat's snapshot is the
+            # freshest view of the worker's lifetime counters
+            self._retain_departed(worker)
 
     def _migrate_kv(self, worker: Transport,
                     remapped: List[str]) -> None:
@@ -217,6 +234,18 @@ class Router:
                      (" …" if len(remapped) > 16 else ""))
         return remapped
 
+    def _retain_departed(self, worker: Transport) -> None:
+        """Keep a departed replica's monotone counters in the cluster
+        merge (bounded; see ``cluster_snapshot``).  Thread replicas share
+        the router registry and ship an empty snapshot — nothing to do."""
+        snap = terminal_snapshot_view(worker.metrics_snapshot())
+        if not snap:
+            return
+        with self._lock:
+            self._departed[worker.rid] = snap
+            while len(self._departed) > self.departed_cap:
+                self._departed.popitem(last=False)
+
     def alive_replicas(self) -> List[Transport]:
         with self._lock:
             return [w for w in self._replicas.values() if w.alive]
@@ -270,7 +299,8 @@ class Router:
         req = ClusterRequest(payload, cost=cost, session_key=session_key,
                              kind=kind, deadline_s=now + timeout_s,
                              rid=next(self._rids), submitted_s=now,
-                             on_partial=on_partial)
+                             on_partial=on_partial, metrics=self.metrics)
+        self._submitted.inc()
         # trace root: the sampling decision for this request's entire
         # cross-host span tree is made here, once
         root = current_tracer().span("request", rid=req.rid, cost=cost,
@@ -316,7 +346,9 @@ class Router:
             if self.admission is not None else 0
         qfrac = self.queue_depth() / qmax if qmax else 0.0
         kv = self.kv_free_fraction()
-        lvl = bo.tick(qfrac, 1.0 - kv if kv is not None else 0.0)
+        slo_pressure = self.slo.pressure() if self.slo is not None else 0.0
+        lvl = bo.tick(qfrac, 1.0 - kv if kv is not None else 0.0,
+                      extra=slo_pressure)
         self.metrics.gauge("router.brownout_level").set(lvl)
         if bo.changed:
             current_recorder().record("brownout_level", level=lvl,
@@ -435,6 +467,7 @@ class Router:
         if not dead.alive:
             with self._lock:
                 self._replicas.pop(dead.rid, None)
+            self._retain_departed(dead)
             self._note_remapped_sessions(dead.rid)
             self._set_pool_gauge()
             # a dead transport leaves the pool for good (rids are never
@@ -572,10 +605,14 @@ class Router:
         """One flat view of the whole service: the router-side registry
         merged with each alive worker's last shipped snapshot (process
         replicas report their counters over the heartbeat channel; thread
-        replicas already share the registry)."""
+        replicas already share the registry) plus the retained terminal
+        snapshots of departed replicas — cluster counters and histogram
+        bucket counts stay monotone when a worker dies or is removed."""
+        with self._lock:
+            departed = list(self._departed.values())
         return merge_snapshots(self.metrics.snapshot(),
                                [w.metrics_snapshot()
-                                for w in self.alive_replicas()])
+                                for w in self.alive_replicas()] + departed)
 
     # -------------------------------------------------- lifecycle
     def stop(self, drain: bool = True) -> None:
@@ -588,4 +625,5 @@ class Router:
             else:
                 w.inject_crash()
                 w.join()
+            self._retain_departed(w)
         self._set_pool_gauge()

@@ -445,38 +445,75 @@ def prometheus_text(snapshot: Dict[str, float],
     HIST_BUCKET_BOUNDS`, plus ``_sum`` (mean x count) and ``_count`` —
     with the snapshot's percentile estimates exported alongside as
     ``<stem>_p50`` etc. gauges.  Everything else exports as a gauge.
+
+    Conformance hardening (all repairs, never assertions — the exporter
+    runs on telemetry paths and must not raise on a weird merge):
+
+    * ``_bucket`` series are monotone non-decreasing by construction —
+      negative per-bucket increments (a torn merge) clamp to zero;
+    * ``le="+Inf"`` always equals ``_count``, including for legacy
+      bucket-less stems, and both are raised to the bucket total when
+      the buckets have seen more than ``.count`` reports;
+    * every metric gets a ``# HELP`` line before its ``# TYPE``;
+    * two source keys sanitizing to the same metric name do not
+      interleave: the later (sorted) key is emitted under a
+      deterministic ``_dup<n>`` suffix instead.
     """
     lines: List[str] = []
     consumed = set()
+    used_names: Dict[str, str] = {}     # emitted base name -> source key
+
+    def unique(name: str, source: str, *derived: str) -> str:
+        """Claim ``name`` (and histogram-derived series names) for
+        ``source``; on a collision pick the first free ``_dup<n>``."""
+        base, n = name, 1
+        while any(d in used_names for d in (name, *[f"{name}{s}"
+                                                    for s in derived])):
+            n += 1
+            name = f"{base}_dup{n}"
+        used_names[name] = source
+        for s in derived:
+            used_names[f"{name}{s}"] = source
+        return name
+
     stems = sorted(k[:-len(".count")] for k in snapshot
                    if k.endswith(".count")
                    and f"{k[:-len('.count')]}.p50" in snapshot)
     for stem in stems:
-        name = _prom_name(stem, prefix)
+        name = unique(_prom_name(stem, prefix), stem,
+                      "_bucket", "_sum", "_count")
         count = snapshot[f"{stem}.count"]
         mean = snapshot.get(f"{stem}.mean", 0.0)
         consumed.update({f"{stem}.count", f"{stem}.mean"})
+        lines.append(f"# HELP {name} histogram of {stem} "
+                     f"(merged cluster snapshot)")
         lines.append(f"# TYPE {name} histogram")
         cum = 0.0
         for i, bound in enumerate(HIST_BUCKET_BOUNDS):
-            cum += snapshot.get(f"{stem}.le{i}", 0.0)
+            cum += max(snapshot.get(f"{stem}.le{i}", 0.0), 0.0)
             consumed.add(f"{stem}.le{i}")
             lines.append(f'{name}_bucket{{le="{bound:.6g}"}} {cum:.6g}')
-        consumed.add(f"{stem}.le{len(HIST_BUCKET_BOUNDS)}")
-        # +Inf must equal _count even for legacy snapshots with no buckets
-        lines.append(f'{name}_bucket{{le="+Inf"}} {count:.6g}')
+        overflow_key = f"{stem}.le{len(HIST_BUCKET_BOUNDS)}"
+        consumed.add(overflow_key)
+        # +Inf must equal _count even for legacy snapshots with no
+        # buckets, and must not dip below the finite-bucket cumulative
+        total = max(count, cum + max(snapshot.get(overflow_key, 0.0), 0.0))
+        lines.append(f'{name}_bucket{{le="+Inf"}} {total:.6g}')
         lines.append(f"{name}_sum {mean * count:.6g}")
-        lines.append(f"{name}_count {count:.6g}")
+        lines.append(f"{name}_count {total:.6g}")
         for p in (50, 95, 99):
             key = f"{stem}.p{p}"
             if key in snapshot:
                 consumed.add(key)
-                lines.append(f"# TYPE {name}_p{p} gauge")
-                lines.append(f"{name}_p{p} {snapshot[key]:.6g}")
+                pname = unique(f"{name}_p{p}", key)
+                lines.append(f"# HELP {pname} p{p} estimate of {stem}")
+                lines.append(f"# TYPE {pname} gauge")
+                lines.append(f"{pname} {snapshot[key]:.6g}")
     for k in sorted(snapshot):
         if k in consumed:
             continue
-        name = _prom_name(k, prefix)
+        name = unique(_prom_name(k, prefix), k)
+        lines.append(f"# HELP {name} value of {k}")
         lines.append(f"# TYPE {name} gauge")
         lines.append(f"{name} {snapshot[k]:.6g}")
     return "\n".join(lines) + "\n"

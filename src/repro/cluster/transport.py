@@ -177,7 +177,8 @@ class Transport:
             return
         self._inflight_spans[req.rid] = current_tracer().span(
             "transport.inflight", parent=req.trace_ctx,
-            replica=self.rid, transport=type(self).__name__)
+            replica=self.rid, transport=type(self).__name__,
+            kind=self.kind)
 
     def _end_inflight(self, rid: int, **tags) -> None:
         sp = self._inflight_spans.pop(rid, None)
@@ -1465,7 +1466,8 @@ def make_transport(transport: str, *, backend=None,
             raise ValueError("LocalTransport needs a backend or a spec")
         backend = spec.build()
     resolved_kind = kind if kind is not None else \
-        (spec.kind if spec is not None else "fn")
+        (spec.kind if spec is not None
+         else getattr(backend, "kind", "fn") or "fn")
     return LocalTransport(backend, cfg, rid=rid, metrics=metrics,
                           on_spill=on_spill, kind=resolved_kind)
 

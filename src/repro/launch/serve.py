@@ -24,7 +24,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import threading
 import time
+import urllib.request
 
 import jax
 import numpy as np
@@ -32,13 +34,77 @@ import numpy as np
 from repro.cluster import (AdmissionConfig, AdmissionController,
                            BrownoutController, EngineBackend,
                            MetricsRegistry, POLICIES, ReplicaConfig, Router,
-                           TRANSPORTS, Tracer, current_tracer, engine_spec,
-                           prometheus_text, set_tracer, to_chrome_trace)
+                           SLOEngine, SLOObjective, StatsServer, TRANSPORTS,
+                           TelemetrySampler, TimeSeriesStore, Tracer,
+                           current_tracer, engine_spec, prometheus_text,
+                           render_watch, set_tracer, to_chrome_trace)
 from repro.cluster.tracing import start_profiling, stop_profiling
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import reduced as reduce_cfg
 from repro.models import api
 from repro.serving import Engine, ServeConfig, make_engine_fns
+
+
+def _start_telemetry(args, snapshot_fn, registry, router=None):
+    """Build the stats stack — ring-buffer TimeSeriesStore, SLO burn-rate
+    engine, background sampler, HTTP stats endpoint, optional terminal
+    watcher — and return a ``finalize()`` that takes one last sample,
+    dumps the routes (``--stats-dump``), and tears everything down."""
+    from repro.cluster.tracing import current_recorder
+
+    store = TimeSeriesStore()
+    slo = SLOEngine([SLOObjective(kind="any")], registry,
+                    recorder=current_recorder())
+    if router is not None:
+        router.slo = slo            # brownout reads slo.pressure()
+    sampler = TelemetrySampler(snapshot_fn, store, registry=registry,
+                               tracer=current_tracer(), slo=slo,
+                               period_s=args.stats_period)
+    sampler.start()
+    server = None
+    port = args.stats_port
+    if port is None and args.stats_dump:
+        port = 0
+    if port is not None:
+        server = StatsServer(snapshot_fn, store, slo=slo,
+                             host=args.stats_host, port=port).start()
+        print(f"[stats] /metrics /timeseries.json /slo.json /dash "
+              f"on {server.url}")
+    stop_watch = threading.Event()
+    wt = None
+    if args.watch:
+        def _watch_loop():
+            while not stop_watch.wait(1.0):
+                print("\x1b[2J\x1b[H" + render_watch(store, slo.status()))
+        wt = threading.Thread(target=_watch_loop, daemon=True,
+                              name="stats-watch")
+        wt.start()
+
+    def finalize():
+        stop_watch.set()
+        if wt is not None:
+            wt.join(timeout=2.0)
+        sampler.stop()
+        sampler.tick()              # one last sample so dumps see the end
+        if args.watch:
+            print(render_watch(store, slo.status()))
+        if args.stats_dump and server is not None:
+            routes = (("metrics", "txt", "/metrics"),
+                      ("timeseries", "json", "/timeseries.json"),
+                      ("slo", "json", "/slo.json"),
+                      ("dash", "html", "/dash"))
+            for name, ext, route in routes:
+                with urllib.request.urlopen(server.url + route,
+                                            timeout=10.0) as resp:
+                    body = resp.read()
+                with open(f"{args.stats_dump}.{name}.{ext}", "wb") as f:
+                    f.write(body)
+            print(f"[stats] dumped {len(routes)} routes -> "
+                  f"{args.stats_dump}.*")
+        if server is not None:
+            server.stop()
+
+    return finalize
 
 
 def main(argv=None):
@@ -130,6 +196,21 @@ def main(argv=None):
                     help="capture a jax.profiler device trace of the run "
                          "into DIR (TensorBoard/Perfetto loadable); adds "
                          "TraceAnnotation markers around prefill/decode")
+    ap.add_argument("--stats-port", type=int, default=None, metavar="PORT",
+                    help="serve live stats over HTTP: /metrics (Prometheus), "
+                         "/timeseries.json, /slo.json, /dash (HTML "
+                         "dashboard); 0 picks an ephemeral port")
+    ap.add_argument("--stats-host", default="127.0.0.1",
+                    help="stats bind address (loopback unless you mean it)")
+    ap.add_argument("--stats-dump", default=None, metavar="PREFIX",
+                    help="at end of run, fetch every stats route over HTTP "
+                         "and write PREFIX.metrics.txt / .timeseries.json / "
+                         ".slo.json / .dash.html; implies --stats-port 0")
+    ap.add_argument("--watch", action="store_true",
+                    help="render a terminal stats screen every second "
+                         "while the run is in flight")
+    ap.add_argument("--stats-period", type=float, default=0.25,
+                    help="telemetry sampling cadence in seconds")
     args = ap.parse_args(argv)
 
     if args.trace_out:
@@ -159,15 +240,23 @@ def main(argv=None):
                for _ in range(args.requests)]
 
     snap = None
+    stats_on = (args.stats_port is not None or args.stats_dump is not None
+                or args.watch)
+    finalize_stats = None
     if args.replicas <= 1:
-        metrics = MetricsRegistry() if args.prom_out else None
+        metrics = MetricsRegistry() if (args.prom_out or stats_on) else None
         eng = Engine(params, cfg, scfg, metrics=metrics)
+        if stats_on:
+            finalize_stats = _start_telemetry(args, metrics.snapshot,
+                                              metrics)
         reqs = [eng.submit(p, max_new=args.max_new) for p in prompts]
         t0 = time.perf_counter()
         eng.run_until_drained()
         wall = time.perf_counter() - t0
         toks = sum(len(r.out_tokens) for r in reqs)
         lats = [r.done_t - r.submit_t for r in reqs]
+        if finalize_stats is not None:
+            finalize_stats()
         if metrics is not None:
             snap = metrics.snapshot()
     else:
@@ -203,6 +292,9 @@ def main(argv=None):
                     EngineBackend(Engine(params, cfg, scfg, metrics=metrics,
                                          shared_fns=shared_fns)),
                     rcfg)
+        if stats_on:
+            finalize_stats = _start_telemetry(args, router.cluster_snapshot,
+                                              metrics, router=router)
         t0 = time.perf_counter()
         creqs = [router.submit((p, args.max_new), cost=args.max_new,
                                session_key=str(i),
@@ -211,6 +303,8 @@ def main(argv=None):
         outs = [router.wait(r, timeout=args.request_timeout)
                 for r in creqs]
         wall = time.perf_counter() - t0
+        if finalize_stats is not None:
+            finalize_stats()
         router.stop()
         toks = sum(len(o) for o in outs if isinstance(o, list))
         lats = [r.finished_s - r.submitted_s for r in creqs]

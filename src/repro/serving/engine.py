@@ -754,6 +754,10 @@ class Engine:
                 rids=[r.rid for r in batch])
             current_recorder().record("admit", rids=[r.rid for r in batch],
                                       bucket=bucket, n=n)
+            _qh = self.metrics.histogram("engine.queue_wait_s")
+            _now = time.perf_counter()
+            for r in batch:
+                _qh.observe(_now - r.submit_t)
             # the prefill span brackets the jitted call *plus* the host
             # sync that realizes its tokens — tracing never reaches
             # inside jit, it measures the host-visible stage
@@ -980,6 +984,10 @@ class Engine:
             current_recorder().record(
                 "admit", rids=[r[0].rid for r in rows], bucket=bucket,
                 n=n, prefix_hit_tokens=hit_toks)
+            _qh = self.metrics.histogram("engine.queue_wait_s")
+            _now = time.perf_counter()
+            for r in rows:
+                _qh.observe(_now - r[0].submit_t)
             psp = current_tracer().span("engine.prefill", parent=asp,
                                         bucket=bucket, n_pad=n_pad)
             with annotate("prefill"):

@@ -1,0 +1,423 @@
+"""Time-series telemetry + SLO burn-rate engine: windowed bucket-delta
+percentiles match a brute-force oracle and recover after a spike (the
+lifetime reservoir provably does not), counter windowing is reset-safe,
+memory stays bounded under stem/ring pressure and concurrent access, the
+multi-window burn alerts fire during a deadline-miss burst and clear
+with hysteresis (FlightRecorder events + ``slo.*`` gauges on every
+transition), and cluster counters stay monotone when replicas are
+removed or killed (departed-replica retention).
+
+Everything runs on injected fake clocks except the two end-to-end
+harness tests (live Router; the process one pays worker spawns).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (FnBackend, MetricsRegistry, ReplicaConfig,
+                           Router, Status, echo_spec, prometheus_text)
+from repro.cluster.metrics import is_gauge_key
+from repro.cluster.slo import SLOEngine
+from repro.cluster.slo import test_scaled_objective as scaled_objective
+from repro.cluster.timeseries import (EwmaRate, TelemetrySampler,
+                                      TimeSeriesStore)
+from repro.cluster.tracing import FlightRecorder
+
+#: one 10^(1/4)x histogram bucket — the documented resolution bound
+BUCKET_FACTOR = 10.0 ** 0.25
+PROC_CFG = ReplicaConfig(inbox_capacity=256, max_batch=4)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def gated(event: threading.Event):
+    def step(payloads):
+        assert event.wait(10.0), "gate never opened"
+        return [p * 2 for p in payloads]
+    return FnBackend(step)
+
+
+# ----------------------------------------------------------------------
+# windowed percentiles from bucket deltas
+
+
+def test_window_percentile_matches_bruteforce_oracle():
+    """p50/p90/p99 over the trailing window agree with numpy over the
+    exact same observations, up to one bucket of resolution."""
+    rng = np.random.RandomState(7)
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s")
+    clk = FakeClock()
+    store = TimeSeriesStore(clock=clk)
+    store.sample(reg.snapshot())               # baseline tick at t=0
+    obs = []
+    for _ in range(10):
+        clk.t += 1.0
+        vals = np.exp(rng.uniform(np.log(1e-3), np.log(5.0), size=60))
+        for v in vals:
+            h.observe(float(v))
+        obs.extend(float(v) for v in vals)
+        store.sample(reg.snapshot())
+    for p in (50, 90, 99):
+        est = store.window_percentile("lat_s", p, window_s=10.5)
+        oracle = float(np.percentile(obs, p))
+        assert oracle / BUCKET_FACTOR <= est <= oracle * BUCKET_FACTOR, \
+            (p, est, oracle)
+    # the windowed count is the exact number of in-window observations
+    assert store.window_count("lat_s", 10.5) == len(obs)
+
+
+def test_window_percentile_sees_only_the_window():
+    """Observations older than the window do not leak into the estimate:
+    a narrow window over the slow phase ignores earlier fast traffic."""
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s")
+    clk = FakeClock()
+    store = TimeSeriesStore(clock=clk)
+    store.sample(reg.snapshot())
+    for _ in range(5):                         # fast phase: t=1..5
+        clk.t += 1.0
+        for _ in range(20):
+            h.observe(0.002)
+        store.sample(reg.snapshot())
+    for _ in range(3):                         # slow phase: t=6..8
+        clk.t += 1.0
+        for _ in range(20):
+            h.observe(3.0)
+        store.sample(reg.snapshot())
+    est = store.window_percentile("lat_s", 50, window_s=3.0)
+    assert est > 1.0, est                      # fast phase fully aged out
+
+
+def test_spike_recovers_within_one_window_reservoir_does_not():
+    """The acceptance scenario: after a latency spike passes, the
+    windowed p99 returns to baseline within one window — while the
+    lifetime reservoir p99 stays stuck on the spike forever (why the
+    point-in-time snapshot cannot answer "what is p99 *now*")."""
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s")
+    clk = FakeClock()
+    store = TimeSeriesStore(clock=clk)
+    store.sample(reg.snapshot())
+    window_s = 5.0
+
+    def drive(n_ticks, value, per_tick=20):
+        for _ in range(n_ticks):
+            clk.t += 1.0
+            for _ in range(per_tick):
+                h.observe(value)
+            store.sample(reg.snapshot())
+
+    drive(6, 0.002)                            # steady fast traffic
+    assert store.window_percentile("lat_s", 99, window_s) < 0.01
+    drive(2, 3.0)                              # spike
+    assert store.window_percentile("lat_s", 99, window_s) > 1.0
+    drive(6, 0.002)                            # one full window of fast
+    recovered = store.window_percentile("lat_s", 99, window_s)
+    assert recovered < 0.01, recovered
+    # the lifetime reservoir still reports the spike as "the p99"
+    lifetime = store.last("lat_s.p99")
+    assert lifetime is not None and lifetime > 1.0, lifetime
+
+
+def test_empty_window_and_unknown_keys_read_zero():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s")
+    clk = FakeClock()
+    store = TimeSeriesStore(clock=clk)
+    assert store.window_percentile("nope", 99, 10.0) == 0.0
+    assert store.rate("nope", 10.0) == 0.0
+    assert store.increase("nope", 10.0) == 0.0
+    clk.t = 1.0
+    h.observe(0.5)
+    store.sample(reg.snapshot())
+    clk.t = 100.0                              # stem known, window empty
+    store.sample(reg.snapshot())
+    assert store.window_percentile("lat_s", 99, 5.0) == 0.0
+    assert store.rate("lat_s.count", 5.0) == 0.0
+
+
+# ----------------------------------------------------------------------
+# reset-safe counter windowing
+
+
+def test_counter_reset_clamps_and_attach_is_not_credited():
+    clk = FakeClock()
+    store = TimeSeriesStore(clock=clk)
+    clk.t = 1.0
+    store.sample({"reqs": 100.0})              # attach to a running source
+    clk.t = 2.0
+    store.sample({"reqs": 150.0})
+    clk.t = 3.0
+    store.sample({"reqs": 20.0})               # worker restart: reset
+    clk.t = 4.0
+    store.sample({"reqs": 30.0})
+    # +50, reset clamps the -130 to 0, +10; the lifetime 100 seen at
+    # attach is NOT credited as fresh traffic
+    assert store.increase("reqs", 10.0) == pytest.approx(60.0)
+    assert store.rate("reqs", 10.0) >= 0.0
+    # a key appearing after the store was already ticking gets a
+    # synthetic zero baseline: its first value IS fresh traffic
+    clk.t = 5.0
+    store.sample({"reqs": 30.0, "late": 7.0})
+    assert store.increase("late", 10.0) == pytest.approx(7.0)
+
+
+def test_ewma_rate_clamps_resets():
+    e = EwmaRate(halflife_s=1.0)
+    e.update(100.0, 0.0)
+    r1 = e.update(200.0, 1.0)
+    assert r1 > 0.0
+    r2 = e.update(0.0, 2.0)                    # reset: decays, never < 0
+    assert 0.0 <= r2 < r1
+
+
+# ----------------------------------------------------------------------
+# memory bounds + concurrency
+
+
+def test_memory_bound_and_stem_cap():
+    clk = FakeClock()
+    store = TimeSeriesStore(capacity=8, max_stems=16, clock=clk)
+    for i in range(50):
+        clk.t += 1.0
+        store.sample({f"k{j}": float(i) for j in range(40)})
+    assert store.max_points == 8 * 16
+    assert store.n_points <= store.max_points
+    assert len(store.keys()) == 16             # stem bound held
+    assert store.dropped_keys > 0              # overflow counted, not kept
+    assert len(store.points("k0")) <= 8        # per-key ring bound
+    j = store.to_json()
+    assert j["n_points"] <= j["max_points"]
+    assert j["dropped_keys"] == store.dropped_keys
+
+
+def test_concurrent_writers_and_readers():
+    store = TimeSeriesStore(capacity=32, max_stems=64)
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s")
+    errors = []
+    stop = threading.Event()
+
+    def writer(i):
+        try:
+            while not stop.is_set():
+                h.observe(0.01 * (i + 1))
+                reg.counter("reqs").inc()
+                store.sample(reg.snapshot())
+        except Exception as exc:               # noqa: BLE001
+            errors.append(exc)
+
+    def reader():
+        try:
+            while not stop.is_set():
+                store.to_json()
+                store.window_percentile("lat_s", 99, 1.0)
+                store.rate("reqs", 1.0)
+                store.ewma("lat_s.p99")
+        except Exception as exc:               # noqa: BLE001
+            errors.append(exc)
+
+    threads = ([threading.Thread(target=writer, args=(i,))
+                for i in range(3)]
+               + [threading.Thread(target=reader) for _ in range(2)])
+    for t in threads:
+        t.start()
+    time.sleep(0.3)
+    stop.set()
+    for t in threads:
+        t.join(5.0)
+    assert not errors, errors
+    assert store.n_points <= store.max_points
+
+
+# ----------------------------------------------------------------------
+# SLO burn-rate engine (fake clock)
+
+
+def _slo_rig():
+    reg = MetricsRegistry()
+    clk = FakeClock()
+    store = TimeSeriesStore(clock=clk)
+    rec = FlightRecorder()
+    slo = SLOEngine([scaled_objective()], reg, recorder=rec,
+                    clock=clk)
+    return reg, clk, store, rec, slo
+
+
+def _tick(clk, store, slo, reg, dt=0.1):
+    clk.t += dt
+    store.sample(reg.snapshot())
+    slo.tick(store, now=clk.t)
+
+
+def test_slo_latency_burn_fires_and_clears_with_hysteresis():
+    reg, clk, store, rec, slo = _slo_rig()
+    h = reg.histogram("router.latency_s")
+    store.sample(reg.snapshot())
+    for _ in range(4):                         # healthy: under threshold
+        for _ in range(5):
+            h.observe(0.01)
+        _tick(clk, store, slo, reg)
+    assert slo.firing() == []
+    assert slo.pressure() == 0.0
+    for _ in range(6):                         # burst: every request slow
+        for _ in range(5):
+            h.observe(5.0)
+        _tick(clk, store, slo, reg)
+    assert ("any", "latency") in slo.firing()
+    assert slo.pressure() > 0.0                # feeds the brownout ladder
+    snap = reg.snapshot()
+    assert snap["slo.any.latency.firing"] == 1.0
+    assert snap["slo.any.latency.burn_fast"] > 2.0
+    fired = [e for e in rec.events() if e["kind"] == "slo_burn_fired"]
+    assert any(e["slo"] == "latency" and e["objective"] == "any"
+               for e in fired)
+    # gauges survive the prometheus exporter round-trip
+    assert "repro_slo_any_latency_firing 1" in prometheus_text(snap)
+    for _ in range(25):                        # recovery: > slow window
+        for _ in range(5):
+            h.observe(0.01)
+        _tick(clk, store, slo, reg)
+    assert slo.firing() == []
+    assert slo.pressure() == 0.0
+    snap = reg.snapshot()
+    assert snap["slo.any.latency.firing"] == 0.0
+    assert any(e["kind"] == "slo_burn_cleared" and e["slo"] == "latency"
+               for e in rec.events())
+    # the burst spent lifetime error budget; recovery does not refund it
+    assert snap["slo.any.latency.budget_remaining"] < 1.0
+
+
+def test_slo_availability_deadline_burns_cancelled_is_neutral():
+    reg, clk, store, rec, slo = _slo_rig()
+    total = reg.counter("router.finish.total")
+    dead = reg.counter("router.finish.deadline")
+    canc = reg.counter("router.finish.cancelled")
+    store.sample(reg.snapshot())
+    for _ in range(6):          # cancelled-only traffic: caller's choice,
+        total.inc(5)            # excluded from the denominator entirely
+        canc.inc(5)
+        _tick(clk, store, slo, reg)
+    assert slo.firing() == []
+    for _ in range(6):                         # deadline-miss burst
+        total.inc(5)
+        dead.inc(4)
+        _tick(clk, store, slo, reg)
+    assert ("any", "availability") in slo.firing()
+    assert any(e["kind"] == "slo_burn_fired"
+               and e["slo"] == "availability" for e in rec.events())
+    for _ in range(25):                        # clean traffic drains it
+        total.inc(5)
+        _tick(clk, store, slo, reg)
+    assert ("any", "availability") not in slo.firing()
+    assert any(e["kind"] == "slo_burn_cleared"
+               and e["slo"] == "availability" for e in rec.events())
+
+
+# ----------------------------------------------------------------------
+# end-to-end: live Router harnesses
+
+
+def test_slo_fires_in_overload_deadline_burst_harness():
+    """The overload-chaos scenario end-to-end: a wedged replica makes a
+    burst of requests expire in its queue; the sampler feeds the real
+    ``cluster_snapshot`` counters into the store and the fast-window
+    availability alert fires, then clears once traffic is healthy."""
+    reg = MetricsRegistry()
+    rec = FlightRecorder()
+    r = Router(metrics=reg)
+    gate = threading.Event()
+    r.add_replica(gated(gate), ReplicaConfig(max_batch=1))
+    clk = FakeClock()
+    store = TimeSeriesStore(clock=clk)
+    slo = SLOEngine([scaled_objective()], reg, recorder=rec,
+                    clock=clk)
+    sampler = TelemetrySampler(r.cluster_snapshot, store, registry=reg,
+                               slo=slo, clock=clk)
+    try:
+        sampler.tick()                         # baseline before the burst
+        blocker = r.submit(1, timeout_s=30.0)
+        victims = [r.submit(i, timeout_s=0.05) for i in range(8)]
+        time.sleep(0.15)                       # deadlines pass while queued
+        gate.set()                             # replica drains its queue:
+        assert r.wait(blocker, timeout=10.0) == 2
+        for q in victims:                      # ...dropping expired work
+            assert q.done.wait(10.0)
+        assert all(q.status is Status.EXPIRED for q in victims)
+        for _ in range(4):
+            clk.t += 0.1
+            sampler.tick()
+        assert ("any", "availability") in slo.firing()
+        snap = reg.snapshot()
+        assert snap["slo.any.availability.firing"] == 1.0
+        assert any(e["kind"] == "slo_burn_fired" for e in rec.events())
+        for i in range(8):                     # healthy traffic again
+            assert r.wait(r.submit(10 + i, timeout_s=10.0),
+                          timeout=10.0) == 2 * (10 + i)
+        for _ in range(25):
+            clk.t += 0.1
+            sampler.tick()
+        assert slo.firing() == []
+        assert any(e["kind"] == "slo_burn_cleared"
+                   for e in rec.events())
+    finally:
+        gate.set()
+        r.stop()
+
+
+def _monotone_keys(snap):
+    """Counter-typed keys (plain counters, ``.count``, ``.le<i>``) —
+    the ones cluster_snapshot must never regress."""
+    return [k for k in snap
+            if not is_gauge_key(k)
+            and TimeSeriesStore.key_type(k) in ("counter", "bucket")]
+
+
+def _assert_monotone(before, after, label):
+    for k in _monotone_keys(before):
+        assert after.get(k, 0.0) >= before[k] - 1e-9, \
+            (label, k, before[k], after.get(k))
+
+
+def test_cluster_counters_monotone_across_replica_kill_and_removal():
+    """Departed-replica retention: removing a worker gracefully AND
+    losing one to a crash must not regress any cluster-wide counter or
+    histogram bucket count in ``cluster_snapshot()``."""
+    reg = MetricsRegistry()
+    r = Router(policy="round_robin", metrics=reg)
+    workers = [r.add_replica(spec=echo_spec(delay_s=0.001), cfg=PROC_CFG,
+                             transport="process")
+               for _ in range(3)]
+    reqs = [r.submit(i) for i in range(18)]
+    assert [r.wait(q, 30.0) for q in reqs] == [2 * i for i in range(18)]
+    # wait for worker-side counters (replica.batch_s.*) to ship over the
+    # heartbeat channel so snapshot A actually holds worker-held keys
+    deadline = time.monotonic() + 15.0
+    while time.monotonic() < deadline:
+        a = r.cluster_snapshot()
+        if a.get("replica.batch_s.count", 0.0) > 0:
+            break
+        time.sleep(0.05)
+    assert a.get("replica.batch_s.count", 0.0) > 0, \
+        "worker counters never arrived over heartbeats"
+    r.remove_replica(workers[0].rid)           # graceful removal
+    b = r.cluster_snapshot()
+    _assert_monotone(a, b, "after graceful removal")
+    workers[1].inject_crash(soft=True)         # abrupt death
+    more = [r.submit(100 + i) for i in range(6)]
+    assert [r.wait(q, 30.0) for q in more] == \
+        [2 * (100 + i) for i in range(6)]
+    c = r.cluster_snapshot()
+    r.stop()
+    _assert_monotone(b, c, "after crash")
+    # the new traffic actually moved the merged counters forward
+    assert c["router.finish.total"] > b.get("router.finish.total", 0.0)

@@ -315,6 +315,62 @@ def test_prometheus_text_exposition_parses():
     assert count == 5.0 and total == pytest.approx(3.55, rel=1e-6)
 
 
+def test_prometheus_every_metric_has_help_before_type():
+    reg = MetricsRegistry()
+    reg.counter("router.completed").inc()
+    reg.gauge("router.queue_depth").set(3)
+    reg.histogram("replica.batch_s").observe(0.1)
+    lines = prometheus_text(reg.snapshot()).strip().splitlines()
+    helped = set()
+    for line in lines:
+        if line.startswith("# HELP "):
+            name = line.split()[2]
+            assert line.split(None, 3)[3:], f"empty HELP text: {line}"
+            helped.add(name)
+        elif line.startswith("# TYPE "):
+            assert line.split()[2] in helped, \
+                f"# TYPE without preceding # HELP: {line}"
+
+
+def test_prometheus_name_collision_gets_dup_suffix():
+    """Two source keys sanitizing to the same metric name must not
+    interleave into one series — the later sorted key is renamed."""
+    text = prometheus_text({"a.b": 1.0, "a_b": 2.0})
+    assert "repro_a_b 1" in text
+    assert "repro_a_b_dup2 2" in text
+    names = [ln.split()[0] for ln in text.splitlines()
+             if ln and not ln.startswith("#")]
+    assert len(names) == len(set(names)), names
+
+
+def test_prometheus_repairs_torn_merge_histogram():
+    """A torn cluster merge can ship a negative per-bucket delta and a
+    ``.count`` below the bucket total; the exporter must still emit
+    monotone cumulative buckets with ``+Inf`` == ``_count``."""
+    snap = {
+        "lat_s.count": 3.0,        # below the bucket total of 5
+        "lat_s.mean": 0.2,
+        "lat_s.p50": 0.1,
+        "lat_s.le4": 4.0,
+        "lat_s.le5": -2.0,         # torn: clamps to zero, never dips
+        "lat_s.le6": 1.0,
+    }
+    text = prometheus_text(snap)
+    cums = [float(m.group(2)) for m in re.finditer(
+        r'repro_lat_s_bucket\{le="([^"]+)"\} (\S+)', text)]
+    assert cums == sorted(cums), cums
+    count = float(re.search(r"repro_lat_s_count (\S+)", text).group(1))
+    assert cums[-1] == count == 5.0
+    # legacy bucket-less stem: +Inf is synthesized equal to the count
+    legacy = prometheus_text({"old_s.count": 7.0, "old_s.p50": 0.5,
+                              "old_s.mean": 0.5})
+    inf = float(re.search(r'repro_old_s_bucket\{le="\+Inf"\} (\S+)',
+                          legacy).group(1))
+    lcount = float(re.search(r"repro_old_s_count (\S+)",
+                             legacy).group(1))
+    assert inf == lcount == 7.0
+
+
 # ----------------------------------------------------------------------
 def test_replica_kill_dumps_flight_events_to_artifact_store(tracer):
     """Killing a worker mid-batch must leave a crash dump in the artifact
